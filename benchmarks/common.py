@@ -1,0 +1,121 @@
+"""Shared benchmark infrastructure.
+
+The paper evaluates WikiText-2 PPL + lm-eval accuracy on public LLMs; this
+container is offline, so every table is reproduced on a small llama-family
+model TRAINED on the synthetic corpus (so quantization deltas move a real
+metric), with:
+
+  PPL   — exp(next-token CE) on held-out synthetic text,
+  ACC   — next-token top-1 accuracy (the measurable analogue of the paper's
+          lm-eval average).
+
+The trained model is cached under results/bench_model so the 6 table/figure
+benchmarks share one training run.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import model as model_lib
+from repro.models.config import reduced
+from repro.checkpoint.ckpt import load_checkpoint, save_checkpoint, latest_step
+from repro.data.loader import batches, calib_sequences
+from repro.quant.calibrate import quantize_model
+from repro.quant.policy import QuantPolicy
+
+ROOT = Path(__file__).resolve().parents[1]
+RESULTS = ROOT / "results"
+BENCH_DIR = RESULTS / "bench_model"
+
+# the benchmark model: llama-family (the paper's Phi-3/Llama setting, scaled)
+BENCH_CFG = reduced(
+    get_config("smollm-135m"),
+    n_layers=4,
+    d_model=128,
+    n_heads=4,
+    n_kv_heads=2,
+    head_dim=32,
+    d_ff=384,
+    vocab_size=512,
+    tie_embeddings=False,
+)
+TRAIN_STEPS = 300
+
+
+def get_bench_model(force: bool = False):
+    """Train (or load cached) the shared benchmark model."""
+    cfg = BENCH_CFG
+    step = latest_step(BENCH_DIR)
+    if step is not None and not force:
+        like = jax.eval_shape(lambda k: model_lib.init_params(cfg, k),
+                              jax.ShapeDtypeStruct((2,), jnp.uint32))
+        params = load_checkpoint(BENCH_DIR / f"step_{step:08d}", like)
+        return cfg, params
+    from repro.train.trainer import train
+
+    state, history, _ = train(cfg, steps=TRAIN_STEPS, global_batch=16,
+                              seq_len=64, lr=3e-3,
+                              log=lambda s: print(f"[bench-train] {s}"))
+    save_checkpoint(BENCH_DIR, TRAIN_STEPS, state.params)
+    return cfg, state.params
+
+
+def eval_batches(cfg, n=4, bsz=8, seq=64, seed=77):
+    it = batches(cfg, bsz, seq, seed=seed)
+    return [b for _, b in (next(it) for _ in range(n))]
+
+
+def ppl_and_acc(cfg, params, evals) -> tuple[float, float]:
+    total_ll, total_acc, total_n = 0.0, 0.0, 0
+    for batch in evals:
+        logits = model_lib.forward(cfg, params, batch)
+        toks = batch["tokens"]
+        lp = jax.nn.log_softmax(logits[:, :-1].astype(jnp.float32), axis=-1)
+        labels = toks[:, 1:]
+        ll = jnp.take_along_axis(lp, labels[..., None], axis=-1)[..., 0]
+        pred = jnp.argmax(lp, axis=-1)
+        total_ll += float(jnp.sum(ll))
+        total_acc += float(jnp.sum(pred == labels))
+        total_n += labels.size
+    return float(np.exp(-total_ll / total_n)), total_acc / total_n
+
+
+def calib_tokens(cfg, n_seq=24, seq=96):
+    return calib_sequences(cfg, n_seq=n_seq, seq_len=seq, seed=123)
+
+
+def make_policy(method: str, rank_frac: float = 0.10, act_group=None,
+                act_bits: int = 4, lrc_iters: int = 1,
+                quant_method: str = "gptq") -> QuantPolicy:
+    """method: quarot | svd | lrc | rtn"""
+    correction = {"quarot": "none", "svd": "svd", "lrc": "lrc", "rtn": "none"}[method]
+    qm = "rtn" if method == "rtn" else quant_method
+    rf = rank_frac if correction != "none" else 0.0
+    return QuantPolicy(
+        bits=4, act_bits=act_bits, act_group=act_group, rank_frac=rf,
+        clip_ratio=0.9, impl="sim", lrc_iters=lrc_iters,
+        quant_method=qm, correction=correction,
+    )
+
+
+def quantize(cfg, params, policy, calib):
+    return quantize_model(cfg, params, calib, policy, rotate=True)
+
+
+def record(table: str, rows, header):
+    RESULTS.mkdir(exist_ok=True)
+    out = RESULTS / f"{table}.json"
+    out.write_text(json.dumps(dict(header=header, rows=rows), indent=2))
+    # CSV to stdout per harness contract
+    print(f"# {table}")
+    print(",".join(header))
+    for r in rows:
+        print(",".join(str(x) for x in r))
+    return out

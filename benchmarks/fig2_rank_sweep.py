@@ -1,0 +1,40 @@
+"""Paper Figure 2 — accuracy vs. rank fraction at W4A4 (with and without
+activation groups).  Claim: 10% already beats QuaRot; ~30% closes the gap."""
+
+from __future__ import annotations
+
+from benchmarks.common import (
+    calib_tokens,
+    eval_batches,
+    get_bench_model,
+    make_policy,
+    ppl_and_acc,
+    quantize,
+    record,
+)
+
+FRACS = [0.0, 0.05, 0.10, 0.20, 0.30, 0.50]
+
+
+def run():
+    cfg, params = get_bench_model()
+    calib = calib_tokens(cfg)
+    evals = eval_batches(cfg)
+    fp_ppl, fp_acc = ppl_and_acc(cfg, params, evals)
+    rows = [["FP16", "-", round(fp_ppl, 4), round(fp_acc, 4)]]
+    curves = {}
+    for group in (None, 64):
+        for frac in FRACS:
+            method = "lrc" if frac > 0 else "quarot"
+            qp = quantize(cfg, params, make_policy(method, rank_frac=frac, act_group=group), calib)
+            ppl, acc = ppl_and_acc(cfg, qp, evals)
+            tag = f"g{group or 0}"
+            rows.append([f"LRC[{tag}]" if frac else f"QuaRot[{tag}]",
+                         frac, round(ppl, 4), round(acc, 4)])
+            curves[(group, frac)] = (ppl, acc)
+    record("fig2_rank_sweep", rows, ["method", "rank_frac", "ppl", "acc"])
+    return fp_acc, curves
+
+
+if __name__ == "__main__":
+    run()

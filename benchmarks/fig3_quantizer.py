@@ -1,0 +1,37 @@
+"""Paper Figure 3 — LRC composed with different weight quantizers (GPTQ vs
+RTN) at W4A4.  Claim: LRC always improves its baseline, and the gain is
+larger for the weaker quantizer (RTN)."""
+
+from __future__ import annotations
+
+from benchmarks.common import (
+    calib_tokens,
+    eval_batches,
+    get_bench_model,
+    make_policy,
+    ppl_and_acc,
+    quantize,
+    record,
+)
+
+
+def run():
+    cfg, params = get_bench_model()
+    calib = calib_tokens(cfg)
+    evals = eval_batches(cfg)
+    fp_ppl, fp_acc = ppl_and_acc(cfg, params, evals)
+    rows = [["FP16", round(fp_ppl, 4), round(fp_acc, 4)]]
+    out = {}
+    for qm in ("gptq", "rtn"):
+        for corr in ("quarot", "lrc"):
+            qp = quantize(cfg, params, make_policy(corr, quant_method=qm), calib)
+            ppl, acc = ppl_and_acc(cfg, qp, evals)
+            name = f"{qm.upper()}{'+LRC' if corr == 'lrc' else ''}"
+            rows.append([name, round(ppl, 4), round(acc, 4)])
+            out[(qm, corr)] = (ppl, acc)
+    record("fig3_quantizer", rows, ["method", "ppl", "acc"])
+    return out
+
+
+if __name__ == "__main__":
+    run()

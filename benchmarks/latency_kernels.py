@@ -1,0 +1,104 @@
+"""Paper Tables 6-8 — layer latency vs. rank (Llama matrix sizes).
+
+The paper timed Cutlass int4 on an A100 and found even 128 ranks cost 23-52%
+extra latency (unfused second pass).  No TPU is attached here, so we report:
+
+  * the ROOFLINE-MODEL v5e latency of the unfused layer (int4 GEMM bytes +
+    a separate LR pass) vs. the FUSED kernel (one activation read, one output
+    write — kernels/w4a4.py), derived from exact byte/FLOP counts;
+  * measured CPU wall-clock of the int8 execution path as a sanity ratio
+    (relative, not absolute).
+
+Derived column = fused/unfused predicted-latency ratio — the win the paper's
+§5 speculates about.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import record
+from repro.launch.roofline import HBM_BW, PEAK_FLOPS
+
+# (d_in, d_out) from the Llama family, as in paper Tables 6-8
+SIZES = [(4096, 11008), (5120, 13824), (8192, 28672)]
+RANKS = [0, 128, 256, 512, 1024]
+# Three serving regimes: decode (M=16, weight-bound), mixed (M=256), and the
+# paper's prefill setting (M=2048+, compute-bound on TPU).  The fusion win
+# lives in the memory-bound regimes; at the paper's M the v5e GEMM is
+# compute-bound and fusion only saves energy/bytes, not latency.
+MS = [16, 256, 2048]
+
+
+def _roofline_time(m, k, n, r, fused: bool):
+    """Bytes + flops → v5e time bound for the W4A4(+LR) layer."""
+    bytes_w = k * n / 2 + 4 * n  # packed int4 + scales
+    bytes_x = m * k * 2  # bf16 activations read
+    bytes_q = m * k  # int8 quantized copy written+read
+    bytes_out = m * n * 4
+    bytes_lr = (k * r + n * r) * 2 + m * r * 4 if r else 0
+    if fused or r == 0:
+        total_bytes = bytes_w + bytes_x + bytes_q + bytes_out + bytes_lr
+    else:
+        # unfused: second pass re-reads x and re-writes the output
+        total_bytes = bytes_w + bytes_x + bytes_q + 2 * bytes_out + bytes_lr + bytes_x
+    flops = 2 * m * k * n + (2 * m * (k + n) * r if r else 0)
+    # int8 MXU runs ~2x bf16 peak on the GEMM portion
+    t_compute = (2 * m * k * n) / (2 * PEAK_FLOPS) + (flops - 2 * m * k * n) / PEAK_FLOPS
+    t_mem = total_bytes / HBM_BW
+    return max(t_compute, t_mem)
+
+
+def run():
+    rows = []
+    rng = np.random.default_rng(0)
+    for m in MS:
+        for k, n in SIZES:
+            # fp16 reference roofline: bf16 weights dominate
+            t_fp16 = max((2 * m * k * n) / PEAK_FLOPS,
+                         (k * n * 2 + m * (k + n) * 2) / HBM_BW)
+            for r in RANKS:
+                t_unfused = _roofline_time(m, k, n, r, fused=False)
+                t_fused = _roofline_time(m, k, n, r, fused=True)
+                rows.append([
+                    f"M{m}_{n}x{k}", r,
+                    round(t_unfused * 1e6, 1), round(t_fused * 1e6, 1),
+                    round(t_fp16 / t_unfused, 2), round(t_fp16 / t_fused, 2),
+                    round(t_fused / t_unfused, 3),
+                ])
+    # CPU wall sanity: relative cost of the int8 path with/without LR (small size)
+    from repro.quant.qlinear import make_qlinear, qlinear_apply
+
+    d_in, d_out, r = 1024, 2048, 128
+    q = jnp.asarray(rng.integers(-8, 8, (d_out, d_in)), jnp.int8)
+    s = jnp.ones((d_out, 1), jnp.float32) * 0.02
+    x = jnp.asarray(rng.standard_normal((256, d_in)), jnp.float32)
+    u = jnp.asarray(rng.standard_normal((d_out, r)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((d_in, r)), jnp.float32)
+
+    def timed(ql):
+        f = jax.jit(lambda x: qlinear_apply(ql, x))
+        f(x).block_until_ready()
+        t0 = time.time()
+        for _ in range(10):
+            f(x).block_until_ready()
+        return (time.time() - t0) / 10 * 1e6
+
+    t0 = timed(make_qlinear(q, s, None, None, impl="int8"))
+    t1 = timed(make_qlinear(q, s, u, v, impl="int8", lr_dtype=jnp.float32))
+    rows.append(["cpu_sim_1024x2048", r, round(t0, 1), round(t1, 1),
+                 "", "", round(t1 / t0, 3)])
+    record(
+        "latency_kernels", rows,
+        ["matrix", "ranks", "us_unfused", "us_fused",
+         "speedup_vs_fp16_unfused", "speedup_vs_fp16_fused", "fused_over_unfused"],
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    run()

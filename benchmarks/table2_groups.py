@@ -1,0 +1,42 @@
+"""Paper Table 2 — W4A4 with activation group-scaling (paper: 128; scaled to
+the bench model's d_ff granularity: 64)."""
+
+from __future__ import annotations
+
+from benchmarks.common import (
+    calib_tokens,
+    eval_batches,
+    get_bench_model,
+    make_policy,
+    ppl_and_acc,
+    quantize,
+    record,
+)
+
+GROUP = 64
+
+
+def run():
+    cfg, params = get_bench_model()
+    calib = calib_tokens(cfg)
+    evals = eval_batches(cfg)
+    rows = []
+    fp_ppl, fp_acc = ppl_and_acc(cfg, params, evals)
+    rows.append(["FP16", round(fp_ppl, 4), round(fp_acc, 4)])
+    out = {"FP16": (fp_ppl, fp_acc)}
+    for name, method, iters in [
+        ("QuaRot", "quarot", 1),
+        ("SVD", "svd", 1),
+        ("LRC (1)", "lrc", 1),
+        ("LRC (5)", "lrc", 5),
+    ]:
+        qp = quantize(cfg, params, make_policy(method, lrc_iters=iters, act_group=GROUP), calib)
+        ppl, acc = ppl_and_acc(cfg, qp, evals)
+        rows.append([name, round(ppl, 4), round(acc, 4)])
+        out[name] = (ppl, acc)
+    record("table2_groups", rows, ["method", "ppl", "acc"])
+    return out
+
+
+if __name__ == "__main__":
+    run()

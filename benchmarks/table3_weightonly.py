@@ -1,0 +1,37 @@
+"""Paper Table 3 — weight-only quantization (Q_a = identity).
+
+Claim: all methods are near-lossless at W4A16 — low-rank correction buys
+nothing when activations stay FP."""
+
+from __future__ import annotations
+
+from benchmarks.common import (
+    calib_tokens,
+    eval_batches,
+    get_bench_model,
+    make_policy,
+    ppl_and_acc,
+    quantize,
+    record,
+)
+
+
+def run():
+    cfg, params = get_bench_model()
+    calib = calib_tokens(cfg)
+    evals = eval_batches(cfg)
+    rows = []
+    fp_ppl, fp_acc = ppl_and_acc(cfg, params, evals)
+    rows.append(["FP16", round(fp_ppl, 4), round(fp_acc, 4)])
+    out = {"FP16": (fp_ppl, fp_acc)}
+    for name, method in [("QuaRot", "quarot"), ("SVD", "svd"), ("LRC", "lrc")]:
+        qp = quantize(cfg, params, make_policy(method, act_bits=16), calib)
+        ppl, acc = ppl_and_acc(cfg, qp, evals)
+        rows.append([name, round(ppl, 4), round(acc, 4)])
+        out[name] = (ppl, acc)
+    record("table3_weightonly", rows, ["method", "ppl", "acc"])
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,42 @@
+"""Fault-tolerance demo: train, kill mid-run, resume from the latest atomic
+checkpoint, and verify the loss trajectory is EXACTLY what an uninterrupted
+run produces ((seed, step)-keyed data + checkpointed optimizer state).
+
+    PYTHONPATH=src python examples/fault_tolerant_training.py
+"""
+
+import tempfile
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.models.config import reduced
+from repro.train.trainer import train
+
+
+def main():
+    cfg = reduced(get_config("smollm-135m"), n_layers=2, vocab_size=256)
+    steps = 30
+
+    with tempfile.TemporaryDirectory() as tmp:
+        print("[a] uninterrupted run ...")
+        _, hist_a, wd = train(cfg, steps=steps, global_batch=8, seq_len=32,
+                              ckpt_dir=f"{tmp}/a", ckpt_every=10,
+                              log=lambda s: None)
+
+        print("[b] run killed at step 15 ...")
+        train(cfg, steps=15, global_batch=8, seq_len=32,
+              ckpt_dir=f"{tmp}/b", ckpt_every=5, log=lambda s: None)
+
+        print("[b] restarted — resumes from step 15 checkpoint ...")
+        _, hist_b, _ = train(cfg, steps=steps, global_batch=8, seq_len=32,
+                             ckpt_dir=f"{tmp}/b", ckpt_every=5,
+                             log=lambda s: None)
+
+    np.testing.assert_allclose(hist_a[-1], hist_b[-1], rtol=1e-4)
+    print(f"final losses identical: {hist_a[-1]:.5f} == {hist_b[-1]:.5f}")
+    print(f"step-time p50 {wd.p50*1e3:.0f} ms; stragglers flagged: {len(wd.flagged)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Quickstart: LRC on a single layer, end to end, in ~a minute on CPU.
+
+Builds calibration statistics for one weight matrix, runs the paper's three
+solvers (QuaRot/GPTQ baseline, SVD correction, LRC) and prints the
+reconstruction losses — the layer-level version of Table 1.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.numerics import ensure_x64
+from repro.core.quantizers import QuantSpec
+from repro.core.stats import accumulate_stats, finalize_stats, init_stats
+from repro.core.lrc import (
+    lrc_solve,
+    quantize_baseline,
+    reconstruction_loss,
+    svd_correction,
+)
+
+ensure_x64()
+
+
+def main():
+    rng = np.random.default_rng(0)
+    d_in, d_out, n_tokens = 96, 80, 8192
+
+    # LLM-like activations: correlated features + a few outlier channels
+    mix = rng.standard_normal((d_in, d_in)) * 0.25 + np.eye(d_in)
+    x = rng.standard_normal((n_tokens, d_in)) @ mix
+    x[:, ::13] *= 6.0  # outlier channels (what QuaRot/LRC fight)
+    w = rng.standard_normal((d_out, d_in)) / np.sqrt(d_in)
+
+    spec_a = QuantSpec(bits=4)  # activation quantizer Q_a (W4A4)
+    spec_w = QuantSpec(bits=4)
+
+    stats = init_stats(d_in)
+    for i in range(0, n_tokens, 2048):  # online accumulation (Alg 1, l.3-5)
+        stats = accumulate_stats(stats, jnp.asarray(x[i : i + 2048]), spec_a)
+    stats = finalize_stats(stats)
+
+    k = max(1, int(0.10 * min(d_in, d_out)))  # paper's 10% rank budget
+
+    _, _, w_quarot = quantize_baseline(w, stats, spec_w, hessian="x")
+    loss_quarot = reconstruction_loss(w, stats, w_hat=w_quarot)
+
+    u_s, v_s = svd_correction(w, w_quarot, k)
+    loss_svd = reconstruction_loss(w, stats, w_hat=w_quarot, u=u_s, v=v_s)
+
+    res = lrc_solve(jnp.asarray(w), stats, spec_w, k=k, iters=1)
+    res5 = lrc_solve(jnp.asarray(w), stats, spec_w, k=k, iters=5)
+
+    signal = reconstruction_loss(w, stats)
+    print(f"signal power            : {signal:10.4f}")
+    print(f"QuaRot (GPTQ, no corr)  : {loss_quarot:10.4f}")
+    print(f"  + SVD rank-{k:<3d}       : {loss_svd:10.4f}")
+    print(f"  + LRC rank-{k:<3d} (T=1) : {res.losses[-1]:10.4f}")
+    print(f"  + LRC rank-{k:<3d} (T=5) : {res5.losses[-1]:10.4f}")
+    print(f"  oracle (perfect Ŵ)    : {res.oracle_loss:10.4f}")
+    gain = 100 * (1 - res.losses[-1] / loss_quarot)
+    print(f"\nLRC removes {gain:.1f}% of the QuaRot reconstruction error "
+          f"with a {k}/{min(d_in, d_out)} rank budget.")
+    assert res.losses[-1] < loss_svd < loss_quarot or res.losses[-1] < loss_quarot
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""repro — production-grade JAX framework implementing
+"Low-Rank Correction for Quantized LLMs" (LRC; Scetbon & Hensman, 2024).
+
+Public surface:
+  repro.core       — LRC algorithm, quantizers, rotations, GPTQ
+  repro.quant      — quantized-layer pytrees and forward paths
+  repro.models     — the 10 assigned architectures
+  repro.kernels    — Pallas TPU kernels (w4a4+lowrank, hadamard, actquant)
+  repro.launch     — mesh / dryrun / train / serve / quantize entry points
+"""
+
+__version__ = "1.0.0"

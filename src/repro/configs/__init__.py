@@ -1,0 +1,35 @@
+"""Assigned-architecture registry: ``get_config(arch_id)``.
+
+Each module defines CONFIG with the exact published hyper-parameters
+([source; verified-tier] in its docstring).
+"""
+
+from __future__ import annotations
+
+import importlib
+
+ARCH_IDS = [
+    "smollm-135m",
+    "phi4-mini-3.8b",
+    "phi3-mini-3.8b",
+    "gemma-7b",
+    "deepseek-v2-236b",
+    "deepseek-v3-671b",
+    "zamba2-7b",
+    "whisper-medium",
+    "mamba2-370m",
+    "paligemma-3b",
+]
+
+_MODULES = {a: a.replace("-", "_").replace(".", "_") for a in ARCH_IDS}
+
+
+def get_config(arch_id: str):
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {ARCH_IDS}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch_id]}")
+    return mod.CONFIG
+
+
+def all_configs():
+    return {a: get_config(a) for a in ARCH_IDS}

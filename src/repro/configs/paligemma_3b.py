@@ -1,0 +1,21 @@
+"""PaliGemma-3B — SigLIP frontend (stubbed patch embeddings) + gemma
+backbone, MQA (kv=1), prefix-LM attention. [arXiv:2407.07726; hf]"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="paligemma-3b",
+    family="vlm",
+    n_layers=18,
+    d_model=2048,
+    n_heads=8,
+    n_kv_heads=1,
+    head_dim=256,
+    d_ff=16384,
+    vocab_size=257216,
+    act="gelu",
+    rope_theta=10000.0,
+    tie_embeddings=True,
+    embed_scale=True,
+    n_prefix_tokens=256,   # 224x224 / 14x14 SigLIP patches
+)

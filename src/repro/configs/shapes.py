@@ -1,0 +1,33 @@
+"""Assigned input-shape sets (seq_len × global_batch) and per-arch
+applicability (DESIGN.md §Arch-applicability)."""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+
+def applicable(arch_cfg, shape_name: str) -> bool:
+    """long_500k needs sub-quadratic attention — SSM/hybrid only."""
+    if shape_name == "long_500k":
+        return arch_cfg.sub_quadratic()
+    return True
+
+
+def cells(arch_cfg):
+    return [s for s in SHAPES if applicable(arch_cfg, s)]

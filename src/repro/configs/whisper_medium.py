@@ -1,0 +1,21 @@
+"""Whisper-medium — enc-dec, conv frontend stubbed (precomputed frame
+embeddings, ×4 downsample). [arXiv:2212.04356; unverified]"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-medium",
+    family="encdec",
+    n_layers=24,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=64,
+    d_ff=4096,
+    vocab_size=51865,
+    act="gelu",
+    rope_theta=0.0,        # whisper: absolute positions, no rope
+    is_encoder_decoder=True,
+    n_encoder_layers=24,
+    encoder_downsample=4,
+)

@@ -1,0 +1,24 @@
+"""Zamba2-7B — Mamba2 stack + shared attention blocks. [arXiv:2411.15242; unverified]"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-7b",
+    family="hybrid",
+    n_layers=81,
+    d_model=3584,
+    n_heads=32,
+    n_kv_heads=32,
+    head_dim=112,          # 3584 / 32
+    d_ff=14336,
+    vocab_size=32000,
+    act="gelu",
+    rope_theta=10000.0,
+    ssm_state=64,
+    ssm_conv=4,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    ssm_groups=2,
+    ssm_chunk=128,
+    hybrid_attn_every=6,
+)

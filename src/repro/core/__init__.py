@@ -1,0 +1,20 @@
+from repro.core.quantizers import (
+    QuantSpec,
+    quantize_weight_rtn,
+    dequantize_weight,
+    fake_quant_act,
+    quantize_act,
+    search_clip_ratio,
+)
+from repro.core.stats import CalibStats, init_stats, accumulate_stats, finalize_stats
+from repro.core.gptq import gptq_quantize
+from repro.core.lrc import (
+    LRCResult,
+    init_lr,
+    update_lr,
+    update_quant,
+    lrc_solve,
+    svd_correction,
+    reconstruction_loss,
+)
+from repro.core.hadamard import hadamard_matrix, fwht, random_orthogonal

@@ -1,0 +1,149 @@
+"""GPTQ layer-wise quantization solver (Frantar et al., 2022).
+
+Used as the subroutine of LRC's Ŵ-update (paper Alg. 2, line 5).  Only needs
+the target weight matrix and the (damped) input second-moment H:
+
+    min_{Ŵ ∈ C(b)}  || (W - Ŵ) X ||²   with  H = X Xᵀ.
+
+Two implementations:
+  * ``gptq_quantize``     — JAX ``lax.scan`` over columns (jit-compiled);
+  * ``gptq_quantize_np``  — float64 numpy reference (blocked, matches the
+                             official algorithm structure), used by tests.
+
+Both follow the Cholesky form: with T the upper-triangular factor of H⁻¹
+(H⁻¹ = Tᵀ T), quantize column i, propagate the scaled residual to columns
+j > i via row T[i, :].
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.numerics import ensure_x64
+from repro.core.quantizers import QuantSpec, weight_scales
+
+
+def _hinv_chol_upper(h: jnp.ndarray, damp: float) -> jnp.ndarray:
+    """Upper-triangular T with H⁻¹ = Tᵀ T (after damping)."""
+    d = h.shape[0]
+    h = h + damp * jnp.mean(jnp.diag(h)) * jnp.eye(d, dtype=h.dtype)
+    l = jnp.linalg.cholesky(h)
+    eye = jnp.eye(d, dtype=h.dtype)
+    linv = jax.scipy.linalg.solve_triangular(l, eye, lower=True)
+    hinv = linv.T @ linv  # H⁻¹ = L⁻ᵀ L⁻¹
+    return jnp.linalg.cholesky(hinv).T
+
+
+@partial(jax.jit, static_argnames=("bits",))
+def _gptq_scan(wt, t_upper, scales, bits: int):
+    """wt: (d_in, d_out) transposed weights; t_upper: (d_in, d_in)."""
+    qmax = 2 ** (bits - 1) - 1
+    qmin = -(2 ** (bits - 1))
+    d_in = wt.shape[0]
+
+    def step(w_carry, i):
+        col = w_carry[i]  # (d_out,) current (residual-corrected) column i
+        q = jnp.clip(jnp.round(col / scales), qmin, qmax)
+        err = (col - q * scales) / t_upper[i, i]
+        trow = t_upper[i]  # zero below/at diagonal handled by mask
+        mask = (jnp.arange(d_in) > i).astype(w_carry.dtype)
+        w_carry = w_carry - (trow * mask)[:, None] * err[None, :]
+        return w_carry, q.astype(jnp.int8)
+
+    _, qcols = jax.lax.scan(step, wt, jnp.arange(d_in))
+    return qcols  # (d_in, d_out)
+
+
+def gptq_quantize(
+    w: jnp.ndarray,
+    hessian: jnp.ndarray,
+    spec: QuantSpec,
+    damp: float = 0.01,
+    act_order: bool = False,
+):
+    """Quantize ``w`` (d_out, d_in) against ``hessian`` (d_in, d_in).
+
+    Returns (q int8, scales f32).  ``act_order``: process columns in order of
+    decreasing hessian diagonal (GPTQ's ``desc_act``).
+    """
+    ensure_x64()
+    w = jnp.asarray(w, jnp.float64)
+    h = jnp.asarray(hessian, jnp.float64)
+    d_in = w.shape[1]
+
+    # Dead inputs: zero hessian diagonal ⇒ column never activates.
+    dead = jnp.diag(h) <= 0.0
+    h = jnp.where(jnp.eye(d_in, dtype=bool) & dead[None, :], 1.0, h)
+    w = jnp.where(dead[None, :], 0.0, w)
+
+    perm = None
+    if act_order:
+        perm = jnp.argsort(-jnp.diag(h))
+        w = w[:, perm]
+        h = h[perm][:, perm]
+
+    scales = weight_scales(w, spec).astype(jnp.float64)[:, 0]  # per-row
+    t_upper = _hinv_chol_upper(h, damp)
+    qcols = _gptq_scan(w.T, t_upper, scales, spec.bits)
+    q = qcols.T  # (d_out, d_in)
+
+    if perm is not None:
+        inv = jnp.argsort(perm)
+        q = q[:, inv]
+    return q, scales[:, None].astype(jnp.float32)
+
+
+def gptq_quantize_np(
+    w: np.ndarray,
+    hessian: np.ndarray,
+    spec: QuantSpec,
+    damp: float = 0.01,
+    block: int = 128,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Blocked float64 numpy reference (official GPTQ structure)."""
+    w = np.array(w, np.float64)
+    h = np.array(hessian, np.float64)
+    d_out, d_in = w.shape
+    qmax = 2 ** (spec.bits - 1) - 1
+    qmin = -(2 ** (spec.bits - 1))
+
+    dead = np.diag(h) <= 0
+    h[dead, dead] = 1.0
+    w[:, dead] = 0.0
+    h = h + damp * np.mean(np.diag(h)) * np.eye(d_in)
+
+    amax = np.abs(w).max(axis=1, keepdims=True)
+    amax[amax <= 0] = 1.0
+    scales = amax / qmax  # (d_out, 1)
+
+    l = np.linalg.cholesky(h)
+    linv = np.linalg.solve(l, np.eye(d_in))
+    hinv = linv.T @ linv
+    t = np.linalg.cholesky(hinv).T  # upper
+
+    q_out = np.zeros_like(w)
+    for b0 in range(0, d_in, block):
+        b1 = min(b0 + block, d_in)
+        wblk = w[:, b0:b1].copy()
+        err = np.zeros_like(wblk)
+        for i in range(b1 - b0):
+            col = wblk[:, i]
+            q = np.clip(np.round(col / scales[:, 0]), qmin, qmax)
+            q_out[:, b0 + i] = q
+            e = (col - q * scales[:, 0]) / t[b0 + i, b0 + i]
+            wblk[:, i:] -= np.outer(e, t[b0 + i, b0 + i : b1])
+            err[:, i] = e
+        w[:, b1:] -= err @ t[b0:b1, b1:]
+    return q_out.astype(np.int8), scales.astype(np.float32)
+
+
+def rtn_weight_quantize(w: jnp.ndarray, hessian, spec: QuantSpec):
+    """Hessian-free round-to-nearest (the paper's Fig. 3 'RTN' ablation)."""
+    from repro.core.quantizers import quantize_weight_rtn
+
+    q, s = quantize_weight_rtn(jnp.asarray(w, jnp.float32), spec)
+    return q, s

@@ -1,0 +1,158 @@
+"""Hadamard / orthogonal rotation utilities (QuaRot-style preprocessing).
+
+LRC stage (1) applies QuaRot (Ashkboos et al., 2024): orthogonal rotations are
+fused into the weights to suppress activation outliers while keeping the model
+output exact.  We support:
+
+  * fast Walsh-Hadamard transform (power-of-two sizes) — `fwht`,
+  * Paley-I Hadamard matrices for sizes p+1 with p prime, p ≡ 3 (mod 4)
+    (gives 12 = 11+1 and 20 = 19+1, covering d = 2^k * {12, 20}),
+  * seeded random orthogonal factors for dims with no Hadamard factorization
+    (QuaRot's random-orthogonal variant; exactness is preserved either way).
+
+A dimension ``d`` is factored as ``d = m * 2^k`` with ``m`` the largest odd
+factor; the rotation is ``R = Q_m ⊗ H_{2^k}`` (normalized), applied fast via
+reshape to (..., m, 2^k): WHT over the last axis then a small dense matmul
+over the m axis.
+"""
+
+from __future__ import annotations
+
+from functools import lru_cache
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _is_pow2(n: int) -> bool:
+    return n > 0 and (n & (n - 1)) == 0
+
+
+def _split_pow2(n: int):
+    """n -> (m, 2^k) with m odd."""
+    k = 0
+    while n % 2 == 0:
+        n //= 2
+        k += 1
+    return n, 1 << k
+
+
+@lru_cache(maxsize=None)
+def _sylvester(n: int) -> np.ndarray:
+    assert _is_pow2(n)
+    h = np.array([[1.0]])
+    while h.shape[0] < n:
+        h = np.block([[h, h], [h, -h]])
+    return h
+
+
+def _legendre(a: int, p: int) -> int:
+    a %= p
+    if a == 0:
+        return 0
+    r = pow(a, (p - 1) // 2, p)
+    return 1 if r == 1 else -1
+
+
+@lru_cache(maxsize=None)
+def _paley1(p: int) -> np.ndarray:
+    """Paley type-I Hadamard matrix of order p+1 (p prime, p ≡ 3 mod 4)."""
+    assert p % 4 == 3
+    q = np.array([[_legendre(i - j, p) for j in range(p)] for i in range(p)], float)
+    s = np.zeros((p + 1, p + 1))
+    s[0, 1:] = 1.0
+    s[1:, 0] = -1.0
+    s[1:, 1:] = q
+    h = s + np.eye(p + 1)
+    return h
+
+
+def _is_prime(n: int) -> bool:
+    if n < 2:
+        return False
+    for f in range(2, int(n**0.5) + 1):
+        if n % f == 0:
+            return False
+    return True
+
+
+def random_orthogonal(n: int, seed: int = 0) -> np.ndarray:
+    """Seeded random orthogonal matrix (QR of a Gaussian), float64."""
+    rng = np.random.default_rng(seed + 7919 * n)
+    q, r = np.linalg.qr(rng.standard_normal((n, n)))
+    # make deterministic sign convention
+    q = q * np.sign(np.diag(r))[None, :]
+    return q
+
+
+@lru_cache(maxsize=None)
+def odd_factor_matrix(m: int, seed: int = 0) -> np.ndarray:
+    """Orthogonal (normalized) m×m factor for the odd part of a dimension:
+    Paley-I Hadamard when m-1 is a prime ≡ 3 (mod 4), else seeded random
+    orthogonal (QuaRot's Q-variant)."""
+    if m == 1:
+        return np.ones((1, 1))
+    if _is_prime(m - 1) and (m - 1) % 4 == 3:
+        return _paley1(m - 1) / np.sqrt(m)
+    return random_orthogonal(m, seed)
+
+
+@lru_cache(maxsize=None)
+def hadamard_matrix(n: int, seed: int = 0) -> np.ndarray:
+    """Orthogonal (normalized) rotation matrix of size n, materialized.
+
+    Uses (Hadamard or random-orthogonal odd factor) ⊗ H_{2^k}.  Only for
+    small/medium n (tests, analysis); the production path is
+    :func:`apply_rotation`, which never materializes the n×n matrix.
+    """
+    assert n <= 8192, "materializing huge rotations is a bug; use apply_rotation"
+    m, p2 = _split_pow2(n)
+    if m == 1:
+        return _sylvester(n) / np.sqrt(n)
+    qm = odd_factor_matrix(m, seed)
+    h2 = _sylvester(p2) / np.sqrt(p2) if p2 > 1 else np.ones((1, 1))
+    return np.kron(qm, h2)
+
+
+def fwht(x: jnp.ndarray, normalize: bool = True) -> jnp.ndarray:
+    """Fast Walsh-Hadamard transform over the last axis (power-of-two dim).
+
+    O(d log d); used as the jnp reference for the Pallas hadamard kernel and
+    as the fast path of :func:`apply_rotation`.
+    """
+    d = x.shape[-1]
+    assert _is_pow2(d), d
+    orig_shape = x.shape
+    h = 1
+    y = x.reshape(-1, d)
+    while h < d:
+        y = y.reshape(-1, d // (2 * h), 2, h)
+        a = y[..., 0, :]
+        b = y[..., 1, :]
+        y = jnp.stack([a + b, a - b], axis=-2)
+        h *= 2
+    y = y.reshape(orig_shape)
+    if normalize:
+        y = y / jnp.sqrt(jnp.asarray(d, dtype=x.dtype))
+    return y
+
+
+def apply_rotation(x: jnp.ndarray, n: int, seed: int = 0) -> jnp.ndarray:
+    """y = x @ R with R = hadamard_matrix(n), applied fast.
+
+    x: (..., n). Equivalent to ``x @ hadamard_matrix(n)`` (columns of R index
+    the output)."""
+    m, p2 = _split_pow2(n)
+    orig_dtype = x.dtype
+    x = x.astype(jnp.float32)
+    if m == 1:
+        y = fwht(x)  # H symmetric => x @ H == fwht(x)
+        return y.astype(orig_dtype)
+    # R = Q_m ⊗ H_{2^k}; index i = a * p2 + b
+    xr = x.reshape(*x.shape[:-1], m, p2)
+    if p2 > 1:
+        xr = fwht(xr)
+    qm = jnp.asarray(odd_factor_matrix(m, seed), jnp.float32)
+    y = jnp.einsum("...ab,ac->...cb", xr, qm)
+    return y.reshape(x.shape).astype(orig_dtype)

@@ -1,0 +1,269 @@
+"""LRC — the paper's core algorithm (Algorithms 1-5).
+
+Solves, per layer,
+
+    min_{Ŵ ∈ C(b), U, V}  || W X − Ŵ Q_a(X) − U Vᵀ X ||²          (eq. 2)
+
+by alternating minimization:
+
+  * Init  (Prop 3.4 / Alg 4):  U ← eig_k(Σ_init),  V ← Wᵀ U, with
+        Σ_init = W Σx Wᵀ − Sᵀ S,   S = L_y⁻¹ Σxyᵀ Wᵀ,  L_y = chol(Σy).
+  * Ŵ-update (Prop 3.1 / Alg 2): quantize the *modified* target
+        W̃ = (W − U Vᵀ) Σxy Σy⁻¹
+    against the hessian of the QUANTIZED activations Σy (GPTQ by default).
+  * (U,V)-update (Prop 3.3 / Alg 3): closed form —
+        Σ = Σ1 + Σ2 − Σ3,
+        Σ1 = W Σx Wᵀ,  Σ2 = Sᵀ S with S = L_x⁻¹ Σxy Ŵᵀ,
+        Σ3 = Ŵ Σxyᵀ Wᵀ + W Σxy Ŵᵀ,
+        U = eig_k(Σ),  V = [Wᵀ − Σx⁻¹ Σxy Ŵᵀ] U.
+
+All matrices live in the paper's convention: W (d_out, d_in); statistics are
+feature-space (d_in, d_in) second moments from `repro.core.stats`.
+Everything runs in float64 (paper §3).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.numerics import ensure_x64
+from repro.core.quantizers import QuantSpec, dequantize_weight
+from repro.core.stats import CalibStats
+from repro.core.gptq import gptq_quantize, rtn_weight_quantize
+
+
+@dataclasses.dataclass
+class LRCResult:
+    """Output of the per-layer LRC solve."""
+
+    qweight: jnp.ndarray  # int8 (d_out, d_in) carrying b-bit integers
+    scales: jnp.ndarray  # f32 per-row scales
+    u: Optional[jnp.ndarray]  # (d_out, k) full precision
+    v: Optional[jnp.ndarray]  # (d_in, k)
+    losses: list  # reconstruction loss after each stage
+    oracle_loss: float  # loss of the unconstrained-W̃ relaxation (Prop 3.4)
+
+
+# ---------------------------------------------------------------------------
+# linear-algebra helpers (f64)
+# ---------------------------------------------------------------------------
+
+
+def _chol(a):
+    return jnp.linalg.cholesky(a)
+
+
+def _tri_solve(l, b, lower=True, trans=False):
+    return jax.scipy.linalg.solve_triangular(l, b, lower=lower, trans=1 if trans else 0)
+
+
+def _chol_solve(l, b):
+    """Solve A z = b given lower Cholesky factor l of A."""
+    return _tri_solve(l, _tri_solve(l, b, lower=True), lower=True, trans=True)
+
+
+def _eig_topk(sigma: jnp.ndarray, k: int) -> jnp.ndarray:
+    """k unit eigenvectors for the k largest eigenvalues (Prop 3.3 note: Σ is
+    symmetric but possibly indefinite; a diagonal shift does not change the
+    eigenvectors, so plain eigh ordering suffices)."""
+    sigma = 0.5 * (sigma + sigma.T)
+    _, vecs = jnp.linalg.eigh(sigma)  # ascending
+    return vecs[:, ::-1][:, :k]
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 4 — Init-LR
+# ---------------------------------------------------------------------------
+
+
+def init_lr(w: jnp.ndarray, stats: CalibStats, k: int):
+    """Returns (U, V) from the relaxed problem (Prop 3.4)."""
+    ensure_x64()
+    w = jnp.asarray(w, jnp.float64)
+    sigma1 = w @ stats.sxx @ w.T
+    ly = _chol(stats.syy)
+    s = _tri_solve(ly, stats.sxy.T @ w.T, lower=True)  # L_y⁻¹ Σxyᵀ Wᵀ
+    sigma_init = sigma1 - s.T @ s
+    u = _eig_topk(sigma_init, k)
+    v = w.T @ u
+    return u, v
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 2 — Update-Quant (Prop 3.1)
+# ---------------------------------------------------------------------------
+
+
+def modified_target(w, u, v, stats: CalibStats):
+    """W̃ = (W − U Vᵀ) Σxy Σy⁻¹ — the unconstrained-optimal weight acting on
+    quantized activations given the current low-rank pair."""
+    w = jnp.asarray(w, jnp.float64)
+    resid = w if u is None else w - u @ v.T
+    ly = _chol(stats.syy)
+    # W̃ᵀ = Σy⁻¹ Σxyᵀ residᵀ
+    wt = _chol_solve(ly, stats.sxy.T @ resid.T)
+    return wt.T
+
+
+def update_quant(
+    w,
+    u,
+    v,
+    stats: CalibStats,
+    spec: QuantSpec,
+    method: str = "gptq",
+):
+    """Returns (qweight int8, scales, Ŵ dequantized f64)."""
+    wt = modified_target(w, u, v, stats)
+    if method == "gptq":
+        q, s = gptq_quantize(wt, stats.syy, spec)
+    elif method == "rtn":
+        q, s = rtn_weight_quantize(wt, None, spec)
+    else:
+        raise ValueError(f"unknown quant method {method!r}")
+    w_hat = dequantize_weight(q, s.astype(jnp.float64), spec)
+    return q, s, w_hat
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 3 — Update-LR (Prop 3.3)
+# ---------------------------------------------------------------------------
+
+
+def update_lr(w, w_hat, stats: CalibStats, k: int):
+    """Closed-form (U, V) given the current quantized Ŵ."""
+    ensure_x64()
+    w = jnp.asarray(w, jnp.float64)
+    w_hat = jnp.asarray(w_hat, jnp.float64)
+    sigma1 = w @ stats.sxx @ w.T
+    sigma3 = w_hat @ stats.sxy.T @ w.T + w @ stats.sxy @ w_hat.T
+    lx = _chol(stats.sxx)
+    s = _tri_solve(lx, stats.sxy @ w_hat.T, lower=True)  # L_x⁻¹ Σxy Ŵᵀ
+    sigma2 = s.T @ s
+    sigma = sigma1 + sigma2 - sigma3
+    u = _eig_topk(sigma, k)
+    # V = [Wᵀ − Σx⁻¹ Σxy Ŵᵀ] U
+    z = _chol_solve(lx, stats.sxy @ w_hat.T)  # Σx⁻¹ Σxy Ŵᵀ
+    v = (w.T - z) @ u
+    return u, v
+
+
+# ---------------------------------------------------------------------------
+# Reconstruction loss (closed form from the statistics)
+# ---------------------------------------------------------------------------
+
+
+def reconstruction_loss(
+    w,
+    stats: CalibStats,
+    w_hat=None,
+    u=None,
+    v=None,
+) -> float:
+    """|| W X − Ŵ Y − U Vᵀ X ||² expanded in the second moments.
+
+    ``w_hat=None`` drops the quantized term; ``u=None`` drops the LR term.
+    Normalized per calibration token (divide by count) for scale stability.
+    """
+    ensure_x64()
+    w = jnp.asarray(w, jnp.float64)
+    total = jnp.trace(w @ stats.sxx @ w.T)
+    if w_hat is not None:
+        w_hat = jnp.asarray(w_hat, jnp.float64)
+        total = total + jnp.trace(w_hat @ stats.syy @ w_hat.T)
+        total = total - 2.0 * jnp.trace(w @ stats.sxy @ w_hat.T)
+    if u is not None:
+        u = jnp.asarray(u, jnp.float64)
+        v = jnp.asarray(v, jnp.float64)
+        total = total + jnp.trace((v.T @ stats.sxx @ v) @ (u.T @ u))
+        total = total - 2.0 * jnp.trace(u.T @ w @ stats.sxx @ v)
+        if w_hat is not None:
+            total = total + 2.0 * jnp.trace(u.T @ w_hat @ stats.sxy.T @ v)
+    return float(total / jnp.maximum(stats.count, 1.0))
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1 — full LRC
+# ---------------------------------------------------------------------------
+
+
+def lrc_solve(
+    w: jnp.ndarray,
+    stats: CalibStats,
+    spec: QuantSpec,
+    k: int,
+    iters: int = 1,
+    quant_method: str = "gptq",
+) -> LRCResult:
+    """Alternating minimization (Algorithm 1).  ``iters`` = T (paper uses 1
+    or 5; gains beyond 1 are modest — reproduced in benchmarks)."""
+    ensure_x64()
+    w = jnp.asarray(w, jnp.float64)
+    losses = []
+
+    u, v = init_lr(w, stats, k)
+
+    # Oracle: unconstrained W̃ with the init (U, V) — Prop 3.4's relaxation,
+    # i.e. the best achievable with a *perfect* weight quantizer.
+    wt0 = modified_target(w, u, v, stats)
+    oracle = reconstruction_loss(w, stats, w_hat=wt0, u=u, v=v)
+
+    q = s = w_hat = None
+    for _ in range(max(1, iters)):
+        q, s, w_hat = update_quant(w, u, v, stats, spec, method=quant_method)
+        losses.append(reconstruction_loss(w, stats, w_hat=w_hat, u=u, v=v))
+        u, v = update_lr(w, w_hat, stats, k)
+        losses.append(reconstruction_loss(w, stats, w_hat=w_hat, u=u, v=v))
+
+    return LRCResult(
+        qweight=q,
+        scales=s,
+        u=u.astype(jnp.float32),
+        v=v.astype(jnp.float32),
+        losses=losses,
+        oracle_loss=oracle,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Baselines
+# ---------------------------------------------------------------------------
+
+
+def quantize_baseline(
+    w,
+    stats: CalibStats,
+    spec: QuantSpec,
+    quant_method: str = "gptq",
+    hessian: str = "x",
+):
+    """QuaRot-style baseline: GPTQ/RTN quantization of W, no low-rank term.
+
+    ``hessian='x'`` matches the QuaRot codebase (hessian from unquantized
+    activations); ``'y'`` uses quantized-activation statistics (LRC's choice
+    when U=V=0)."""
+    ensure_x64()
+    w = jnp.asarray(w, jnp.float64)
+    h = stats.sxx if hessian == "x" else stats.syy
+    if quant_method == "gptq":
+        q, s = gptq_quantize(w, h, spec)
+    else:
+        q, s = rtn_weight_quantize(w, None, spec)
+    w_hat = dequantize_weight(q, s.astype(jnp.float64), spec)
+    return q, s, w_hat
+
+
+def svd_correction(w, w_hat, k: int):
+    """The paper's 'SVD' baseline (LQER-style, Zhang et al. 2024): rank-k SVD
+    of the weight residual W − Ŵ, ignoring activation statistics."""
+    ensure_x64()
+    resid = jnp.asarray(w, jnp.float64) - jnp.asarray(w_hat, jnp.float64)
+    uu, ss, vvt = jnp.linalg.svd(resid, full_matrices=False)
+    root = jnp.sqrt(ss[:k])
+    u = uu[:, :k] * root[None, :]
+    v = vvt[:k, :].T * root[None, :]
+    return u, v

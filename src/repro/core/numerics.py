@@ -1,0 +1,18 @@
+"""Numerical configuration helpers.
+
+The paper (§3, "Application of LRC on LLMs") found that computing the
+calibration Hessians requires 64-bit precision.  JAX disables x64 by default;
+`ensure_x64` flips the flag idempotently.  Model code always uses explicit
+dtypes (bf16 / f32) and is unaffected by the global default.
+"""
+
+import jax
+
+
+def ensure_x64() -> None:
+    if not jax.config.jax_enable_x64:
+        jax.config.update("jax_enable_x64", True)
+
+
+def x64_enabled() -> bool:
+    return bool(jax.config.jax_enable_x64)

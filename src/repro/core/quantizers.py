@@ -1,0 +1,197 @@
+"""Quantization operators Q_b (weights) and Q_a (activations).
+
+Paper §2: activations are quantized on the fly with a scale-then-round scheme,
+rescaling each activation x by ``c * max(abs(x))`` and rounding to the nearest
+integer; ``c`` (the clip ratio) is found by a simple hyper-parameter search.
+Weights use symmetric per-output-channel scales on the int grid.
+
+Conventions (code, tokens-first):
+  activations  x : (..., d_in)          — quantized per-token (last axis) or
+                                          per group of ``group_size`` features.
+  weights      W : (d_out, d_in)        — quantized per-row (output channel).
+  int4 grid: integers in [-(2^{b-1}), 2^{b-1}-1] = [-8, 7] for b=4.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantSpec:
+    """Static description of a quantization scheme."""
+
+    bits: int = 4
+    # Activation clip ratio c (paper §2). 1.0 = plain absmax.
+    clip_ratio: float = 1.0
+    # Optional groupsize along the feature axis (paper Table 2 uses 128 for
+    # activations). None = per-token (acts) / per-channel (weights).
+    group_size: Optional[int] = None
+    # Symmetric grids only (matches QuaRot/LRC setups).
+    symmetric: bool = True
+
+    @property
+    def qmax(self) -> int:
+        return 2 ** (self.bits - 1) - 1
+
+    @property
+    def qmin(self) -> int:
+        return -(2 ** (self.bits - 1))
+
+    @property
+    def storage_dtype(self):
+        # int8 carries any grid up to 8 bits; wider grids (used e.g. as the
+        # ~identity quantizer in ablations) need int32.
+        return jnp.int8 if self.bits <= 8 else jnp.int32
+
+
+def _safe_scale(amax: jnp.ndarray, qmax: int) -> jnp.ndarray:
+    """absmax -> positive scale, guarding all-zero slices."""
+    amax = jnp.where(amax <= 0.0, 1.0, amax)
+    return amax / qmax
+
+
+# ---------------------------------------------------------------------------
+# Weights
+# ---------------------------------------------------------------------------
+
+
+def weight_scales(w: jnp.ndarray, spec: QuantSpec) -> jnp.ndarray:
+    """Per-output-channel (row) scales, shape (d_out, 1); or per-group
+    (d_out, d_in // g) when ``spec.group_size`` is set."""
+    if spec.group_size is None:
+        amax = jnp.max(jnp.abs(w), axis=1, keepdims=True)
+        return _safe_scale(amax, spec.qmax)
+    g = spec.group_size
+    d_out, d_in = w.shape
+    assert d_in % g == 0, (d_in, g)
+    amax = jnp.max(jnp.abs(w.reshape(d_out, d_in // g, g)), axis=-1)
+    return _safe_scale(amax, spec.qmax)
+
+
+def quantize_weight_rtn(
+    w: jnp.ndarray, spec: QuantSpec, scales: Optional[jnp.ndarray] = None
+):
+    """Round-to-nearest weight quantization.
+
+    Returns (q int8 carrying b-bit integers, scales float32).
+    """
+    if scales is None:
+        scales = weight_scales(w, spec)
+    if spec.group_size is None:
+        ws = w / scales
+    else:
+        g = spec.group_size
+        d_out, d_in = w.shape
+        ws = (w.reshape(d_out, d_in // g, g) / scales[..., None]).reshape(d_out, d_in)
+    q = jnp.clip(jnp.round(ws), spec.qmin, spec.qmax).astype(spec.storage_dtype)
+    return q, scales.astype(jnp.float32)
+
+
+def dequantize_weight(q: jnp.ndarray, scales: jnp.ndarray, spec: QuantSpec):
+    if spec.group_size is None:
+        return q.astype(scales.dtype) * scales
+    g = spec.group_size
+    d_out, d_in = q.shape
+    w = q.reshape(d_out, d_in // g, g).astype(scales.dtype) * scales[..., None]
+    return w.reshape(d_out, d_in)
+
+
+def pack_int4(q: jnp.ndarray) -> jnp.ndarray:
+    """Pack int4 values held in int8 (range [-8, 7]) two-per-byte along the
+    LAST axis: out[..., i] holds (q[..., 2i] | q[..., 2i+1] << 4) as uint8."""
+    assert q.shape[-1] % 2 == 0
+    u = (q.astype(jnp.int32) & 0xF).astype(jnp.uint8)
+    lo = u[..., 0::2]
+    hi = u[..., 1::2]
+    return (lo | (hi << 4)).astype(jnp.uint8)
+
+
+def unpack_int4(packed: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of :func:`pack_int4`; returns int8 values in [-8, 7].
+
+    All arithmetic stays in (u)int8 — the sign-extension uses the
+    (u XOR 8) - 8 identity; a jnp.where/subtract formulation was observed to
+    materialize s32 intermediates 8x the packed bytes in the serving HLO."""
+    eight = jnp.uint8(8)
+    lo = ((packed & jnp.uint8(0xF)) ^ eight).astype(jnp.int8) - jnp.int8(8)
+    hi = (((packed >> 4) & jnp.uint8(0xF)) ^ eight).astype(jnp.int8) - jnp.int8(8)
+    out = jnp.stack([lo, hi], axis=-1)
+    return out.reshape(*packed.shape[:-1], packed.shape[-1] * 2)
+
+
+# ---------------------------------------------------------------------------
+# Activations
+# ---------------------------------------------------------------------------
+
+
+def act_scales(x: jnp.ndarray, spec: QuantSpec) -> jnp.ndarray:
+    """Dynamic scales for the on-the-fly quantizer Q_a.
+
+    per-token: (..., 1); per-group: (..., d // g)."""
+    if spec.group_size is None:
+        amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+        return _safe_scale(spec.clip_ratio * amax, spec.qmax)
+    g = spec.group_size
+    d = x.shape[-1]
+    assert d % g == 0, (d, g)
+    amax = jnp.max(jnp.abs(x.reshape(*x.shape[:-1], d // g, g)), axis=-1)
+    return _safe_scale(spec.clip_ratio * amax, spec.qmax)
+
+
+def quantize_act(x: jnp.ndarray, spec: QuantSpec):
+    """Q_a: returns (q int8, scales f32). Values clipped to the int grid."""
+    scales = act_scales(x, spec)
+    if spec.group_size is None:
+        xs = x / scales
+    else:
+        g = spec.group_size
+        d = x.shape[-1]
+        xs = (x.reshape(*x.shape[:-1], d // g, g) / scales[..., None]).reshape(x.shape)
+    q = jnp.clip(jnp.round(xs), spec.qmin, spec.qmax).astype(spec.storage_dtype)
+    return q, scales.astype(jnp.float32)
+
+
+def dequantize_act(q: jnp.ndarray, scales: jnp.ndarray, spec: QuantSpec):
+    if spec.group_size is None:
+        return q.astype(scales.dtype) * scales
+    g = spec.group_size
+    d = q.shape[-1]
+    x = q.reshape(*q.shape[:-1], d // g, g).astype(scales.dtype) * scales[..., None]
+    return x.reshape(q.shape)
+
+
+def fake_quant_act(x: jnp.ndarray, spec: QuantSpec) -> jnp.ndarray:
+    """Quantize-dequantize in the input dtype (simulation path)."""
+    q, s = quantize_act(x.astype(jnp.float32), spec)
+    return dequantize_act(q, s, spec).astype(x.dtype)
+
+
+@partial(jax.jit, static_argnames=("bits", "group_size", "n_grid"))
+def _clip_search(x, bits, group_size, n_grid):
+    def err_for(c):
+        spec = QuantSpec(bits=bits, clip_ratio=c, group_size=group_size)
+        return jnp.sum((fake_quant_act(x, spec) - x) ** 2)
+
+    grid = jnp.linspace(0.70, 1.0, n_grid)
+    errs = jax.vmap(lambda c: err_for(c))(grid)
+    return grid, errs
+
+
+def search_clip_ratio(
+    x: jnp.ndarray,
+    bits: int = 4,
+    group_size: Optional[int] = None,
+    n_grid: int = 16,
+) -> float:
+    """Paper §2: 'We perform a simple hyper-parameter search for c.'
+
+    Grid-search the clip ratio minimizing quantization MSE on a sample batch.
+    """
+    grid, errs = _clip_search(x.astype(jnp.float32), bits, group_size, n_grid)
+    return float(grid[int(jnp.argmin(errs))])

@@ -1,0 +1,61 @@
+"""QuaRot-style rotation fusion (LRC stage 1).
+
+For a pre-norm transformer with RMSNorm, an orthogonal rotation R of the
+residual stream can be fused into the weights with *exact* output
+preservation:
+
+  1. fold the RMSNorm per-channel scale γ into the following linear layers
+     (W ← W · diag(γ)); the norm becomes a pure RMS (γ = 1), which commutes
+     with any orthogonal R because ||Rᵀx|| = ||x||;
+  2. rotate every residual-facing weight:
+        readers (x → Wx):   W ← W R        (embedding-side input)
+        writers (y → res):  W ← Rᵀ W       (output projections)
+        embedding rows:     E ← E R
+        lm head:            W ← W R
+
+The framework-level application to each architecture lives in
+`repro.quant.rotate_model`; this module holds the math and a tiny reference
+MLP used by the exactness tests.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hadamard import hadamard_matrix
+
+
+def residual_rotation(d: int, seed: int = 0) -> jnp.ndarray:
+    """The fused R1 rotation for a residual stream of width d (float32)."""
+    return jnp.asarray(hadamard_matrix(d, seed), jnp.float32)
+
+
+def rotate_in(w: jnp.ndarray, r: jnp.ndarray) -> jnp.ndarray:
+    """Reader weight W (d_out, d_in): x is replaced by Rᵀx ⇒ W ← W R."""
+    return (w.astype(jnp.float32) @ r).astype(w.dtype)
+
+
+def rotate_out(w: jnp.ndarray, r: jnp.ndarray) -> jnp.ndarray:
+    """Writer weight W (d_out, d_in) into the residual ⇒ W ← Rᵀ W."""
+    return (r.T @ w.astype(jnp.float32)).astype(w.dtype)
+
+
+def rotate_embedding(e: jnp.ndarray, r: jnp.ndarray) -> jnp.ndarray:
+    """Embedding table (vocab, d): rows live in the residual stream ⇒ E ← E R."""
+    return (e.astype(jnp.float32) @ r).astype(e.dtype)
+
+
+def fold_rmsnorm_gamma(gamma: jnp.ndarray, readers: list) -> tuple:
+    """Fold γ into every reader weight (W ← W diag(γ)); returns (ones, new
+    readers)."""
+    g = gamma.astype(jnp.float32)
+    new = [(w.astype(jnp.float32) * g[None, :]).astype(w.dtype) for w in readers]
+    return jnp.ones_like(gamma), new
+
+
+def incoherence(w: jnp.ndarray) -> float:
+    """max|W_ij| · sqrt(numel) / ||W||_F — the outlier measure rotations are
+    meant to reduce (QuaRot §3)."""
+    w = np.asarray(w, np.float64)
+    return float(np.abs(w).max() * np.sqrt(w.size) / np.linalg.norm(w))

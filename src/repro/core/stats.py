@@ -1,0 +1,95 @@
+"""Online calibration statistics (Algorithm 1, lines 3-5).
+
+LRC never materializes the full activation matrix X (n ≈ 200k tokens); it
+accumulates the second-moment matrices
+
+    Σx  = Σ_t x_t x_tᵀ        (d_in, d_in)
+    Σy  = Σ_t y_t y_tᵀ        y = Q_a(x)
+    Σxy = Σ_t x_t y_tᵀ
+
+in an online fashion over calibration batches (paper: "we accumulate batches
+of activations X to avoid running out of memory").  Accumulation runs in
+float64 (paper: "computation of these matrices required 64-bit precision").
+
+In a multi-host calibration run the per-shard statistics are summed with
+``jax.lax.psum`` over the data axis — provided by ``accumulate_stats(...,
+axis_name=...)`` for use under shard_map/pjit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.numerics import ensure_x64
+from repro.core.quantizers import QuantSpec, quantize_act, dequantize_act
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class CalibStats:
+    """Pytree of accumulated second moments (float64)."""
+
+    sxx: jnp.ndarray  # (d, d)
+    syy: jnp.ndarray  # (d, d)
+    sxy: jnp.ndarray  # (d, d)
+    count: jnp.ndarray  # () number of tokens seen
+
+    @property
+    def d(self) -> int:
+        return self.sxx.shape[0]
+
+
+def init_stats(d: int) -> CalibStats:
+    ensure_x64()
+    z = jnp.zeros((d, d), jnp.float64)
+    return CalibStats(sxx=z, syy=z, sxy=z, count=jnp.zeros((), jnp.float64))
+
+
+def accumulate_stats(
+    stats: CalibStats,
+    x: jnp.ndarray,
+    spec: QuantSpec,
+    axis_name: Optional[str] = None,
+) -> CalibStats:
+    """Fold a batch of activations x (..., d) into the statistics.
+
+    ``axis_name``: if set, psum the batch contribution across that mesh axis
+    (data-parallel calibration).
+    """
+    x = x.reshape(-1, x.shape[-1]).astype(jnp.float64)
+    q, s = quantize_act(x, spec)
+    y = dequantize_act(q, s, spec).astype(jnp.float64)
+    dxx = x.T @ x
+    dyy = y.T @ y
+    dxy = x.T @ y
+    dn = jnp.asarray(x.shape[0], jnp.float64)
+    if axis_name is not None:
+        dxx = jax.lax.psum(dxx, axis_name)
+        dyy = jax.lax.psum(dyy, axis_name)
+        dxy = jax.lax.psum(dxy, axis_name)
+        dn = jax.lax.psum(dn, axis_name)
+    return CalibStats(
+        sxx=stats.sxx + dxx,
+        syy=stats.syy + dyy,
+        sxy=stats.sxy + dxy,
+        count=stats.count + dn,
+    )
+
+
+def finalize_stats(stats: CalibStats, eps_frac: float = 1e-2) -> CalibStats:
+    """Add the paper's damping:  Σ ← Σ + (eps_frac/d)·Tr(Σ)·I  (§3 Numerical
+    Stability; ε = 1e-2 · Tr(Σ)/d)."""
+    d = stats.d
+    eye = jnp.eye(d, dtype=jnp.float64)
+    ex = eps_frac * jnp.trace(stats.sxx) / d
+    ey = eps_frac * jnp.trace(stats.syy) / d
+    return CalibStats(
+        sxx=stats.sxx + ex * eye,
+        syy=stats.syy + ey * eye,
+        sxy=stats.sxy,
+        count=stats.count,
+    )

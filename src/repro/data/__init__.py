@@ -1,0 +1,2 @@
+from repro.data.tokens import SyntheticCorpus
+from repro.data.loader import batches, calib_sequences

@@ -1,0 +1,45 @@
+"""Batch iterators: training batches keyed by (seed, step) — restart-exact —
+and calibration sequences (the paper's 128 × 2048-token recipe, scaled)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.tokens import SyntheticCorpus
+
+
+CORPUS_SEED = 0  # ONE corpus process; `seed` below selects disjoint
+# sequence streams from it (train/eval/calib must share the transition law)
+
+
+def batches(cfg, global_batch: int, seq_len: int, seed: int = 0, start_step: int = 0):
+    """Infinite iterator of {tokens} batches; step-indexed for exact replay.
+    ``seed`` picks a disjoint sequence stream of the SAME corpus."""
+    corpus = SyntheticCorpus(cfg.vocab_size, seed=CORPUS_SEED)
+    step = start_step
+    stream = seed * 1_000_003
+    while True:
+        toks = corpus.batch(stream + step * global_batch, global_batch, seq_len)
+        batch = {"tokens": jnp.asarray(toks)}
+        if cfg.family == "encdec":
+            rng = np.random.default_rng((seed, step, 1))
+            t_enc = max(4, seq_len // cfg.encoder_downsample)
+            batch["frames"] = jnp.asarray(
+                rng.standard_normal((global_batch, t_enc, cfg.d_model)), jnp.float32
+            )
+        if cfg.family == "vlm":
+            rng = np.random.default_rng((seed, step, 2))
+            batch["patches"] = jnp.asarray(
+                rng.standard_normal((global_batch, cfg.n_prefix_tokens, cfg.d_model)),
+                jnp.float32,
+            )
+        yield step, batch
+        step += 1
+
+
+def calib_sequences(cfg, n_seq: int = 32, seq_len: int = 256, seed: int = 1):
+    """Calibration token matrix (n_seq, seq_len) — paper: 128 random
+    sequences of 2048 tokens (scaled down for CPU benchmarks)."""
+    corpus = SyntheticCorpus(cfg.vocab_size, seed=CORPUS_SEED)
+    return jnp.asarray(corpus.batch(900_000_000 + seed * 1_000_003, n_seq, seq_len))

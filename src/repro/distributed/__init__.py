@@ -1,0 +1,6 @@
+from repro.distributed.sharding import (
+    batch_pspec,
+    cache_pspecs,
+    param_pspecs,
+    to_shardings,
+)

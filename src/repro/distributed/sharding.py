@@ -1,0 +1,206 @@
+"""Logical-axis sharding rules (MaxText-style) → PartitionSpecs.
+
+Mapping philosophy (mesh axes: ["pod"], "data", "model"):
+  * TP  — fused head / FF-hidden / expert / vocab dims → "model";
+  * DP  — batch → ("pod","data") (multi-pod) or "data";
+  * EP  — routed-expert leading dim → "model";
+  * SP  — sequence → "data" when the batch cannot fill the DP axis
+          (long-context decode / small-batch prefill);
+  * stacked-layer leading dims (scan) are never sharded.
+
+Every rule is divisibility-guarded: a dim that does not divide the mesh axis
+size falls back to replication instead of failing to lower — e.g. smollm's 3
+KV heads are replicated while its fused 192-wide kv projection still shards.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# (regex on "/"-joined param path) -> per-dim axis plan, applied to the
+# TRAILING dims (stacked layer dims are auto-prefixed with None).
+# axis entries: "tp" | "dp" | None
+_PARAM_RULES: list[tuple[str, tuple]] = [
+    (r"embed$", ("tp", None)),  # (vocab, d)
+    (r"dec_pos$", (None, None)),
+    (r"lm_head$", (None, "tp")),  # (d, vocab)
+    (r"attn/w[qkv]$", (None, "tp")),
+    (r"attn/wo$", ("tp", None)),
+    (r"xattn/w[qkv]$", (None, "tp")),
+    (r"xattn/wo$", ("tp", None)),
+    # MLA
+    (r"attn/wq_a$", (None, None)),
+    (r"attn/wq_b$", (None, "tp")),
+    (r"attn/wkv_a$", (None, None)),
+    (r"attn/wkv_b$", (None, "tp")),
+    # MLP / shared experts
+    (r"(mlp|shared)/w[gui]$", (None, "tp")),
+    (r"(mlp|shared)/(wd|wo)$", ("tp", None)),
+    # MoE (EP over experts)
+    (r"router$", (None, None)),
+    (r"experts/w[gu]$", ("tp", None, None)),
+    (r"experts/wd$", ("tp", None, None)),
+    # Mamba2
+    (r"in_proj$", (None, "tp")),
+    (r"conv_w$", (None, "tp")),
+    (r"conv_b$", ("tp",)),
+    (r"out_norm$", ("tp",)),
+    (r"out_proj$", ("tp", None)),
+    # MTP projector
+    (r"mtp/proj$", (None, "tp")),
+]
+
+_AXIS_MAP = {
+    "tp": "model",
+    "dp_single": "data",
+    "dp_multi": ("pod", "data"),
+    "sp": "data",
+}
+
+
+def _mesh_axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def _guard(shape, plan, mesh: Mesh):
+    """Drop plan entries whose dim does not divide the mesh axis size."""
+    out = []
+    for dim, axis in zip(shape, plan):
+        if axis is None or dim % _mesh_axis_size(mesh, axis) != 0:
+            out.append(None)
+        else:
+            out.append(axis)
+    return P(*out)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+_STACKED = re.compile(r"(^|/)(layers|moe_layers|dense_layers|enc_layers|dec_layers)(/|$)")
+
+
+def _resolve(axes_plan, mesh: Mesh, dp_axis):
+    resolved = []
+    for a in axes_plan:
+        if a == "tp":
+            resolved.append(_AXIS_MAP["tp"])
+        elif a == "dp":
+            resolved.append(dp_axis)
+        else:
+            resolved.append(a)
+    return tuple(resolved)
+
+
+def param_pspecs(params_tree, mesh: Mesh, multi_pod: bool = False):
+    """PartitionSpec tree matching ``params_tree`` (arrays or
+    ShapeDtypeStructs; QLinear leaves handled field-wise by the registered
+    pytree flattening)."""
+
+    def spec_one(path, leaf):
+        ps = _path_str(path)
+        shape = leaf.shape
+        n_stack = 1 if _STACKED.search(ps) else 0
+        # QLinear fields carry their own suffix in the path (qweight/w_scale/u/v)
+        for pat, plan in _PARAM_RULES:
+            base = pat[:-1] if pat.endswith("$") else pat  # strip inner anchor
+            m = re.search(base + r"(/(qweight|w_scale|u|v))?$", ps)
+            if m:
+                plan = _qlinear_adjust(plan, m.group(2), shape, n_stack)
+                full = (None,) * n_stack + _resolve(plan, mesh, None)
+                full = full[: len(shape)] + (None,) * max(0, len(shape) - len(full))
+                return _guard(shape, full, mesh)
+        return P(*([None] * len(shape)))
+
+    return jax.tree_util.tree_map_with_path(spec_one, params_tree)
+
+
+def _qlinear_adjust(plan, field: Optional[str], shape, n_stack: int):
+    """Map a base weight's (..., in, out) plan onto QLinear fields:
+    qweight (..., in//2, out) keeps the plan; w_scale (..., out) takes the
+    out axis; u (..., out, k) takes the out axis; v (..., in, k) the in axis.
+    Leading (e.g. expert) plan entries are preserved."""
+    if field in (None, "/qweight", "qweight"):
+        return plan
+    if len(plan) < 2:
+        return plan
+    lead = tuple(plan[:-2])
+    a_in, a_out = plan[-2], plan[-1]
+    if field.endswith("w_scale"):
+        return lead + (a_out,)
+    if field.endswith("u"):
+        return lead + (a_out, None)
+    if field.endswith("v"):
+        return lead + (a_in, None)
+    return plan
+
+
+def batch_pspec(mesh: Mesh, multi_pod: bool, global_batch: int, shard_seq: bool = False):
+    """Spec for (B, S[, ...]) batch arrays.  When the batch cannot fill the
+    DP axis (long-context), shard the sequence dim instead (SP)."""
+    dp = _AXIS_MAP["dp_multi"] if multi_pod else _AXIS_MAP["dp_single"]
+    dp_size = 1
+    for a in (dp if isinstance(dp, tuple) else (dp,)):
+        dp_size *= mesh.shape[a]
+    if global_batch % dp_size == 0 and not shard_seq:
+        return P(dp, None)
+    if shard_seq or global_batch % dp_size:
+        return P(None, _AXIS_MAP["sp"])
+    return P(dp, None)
+
+
+def cache_pspecs(cache_tree, mesh: Mesh, multi_pod: bool, global_batch: int):
+    """KV/state caches: batch over DP when divisible; the head/feature dim
+    over "model" when divisible; stacked layer dim unsharded."""
+    dp = _AXIS_MAP["dp_multi"] if multi_pod else _AXIS_MAP["dp_single"]
+
+    def spec_one(path, leaf):
+        shape = leaf.shape
+        if len(shape) == 0:
+            return P()
+        ps = _path_str(path)
+        plan = [None] * len(shape)
+        # layout conventions: (L, B, S, H, hd) | (A, B, S, H, hd) |
+        # (L, B, K-1, conv) | (L, B, H, N, P) | (B, S, D) enc_out
+        if len(shape) >= 2:
+            bdim = 0 if ps.endswith("enc_out") else 1
+            if bdim < len(shape) and shape[bdim] == global_batch:
+                plan[bdim] = dp
+        # shard a trailing "feature-like" dim over model.  Prefer the HEADS
+        # dim (ndim-2) over head_dim (ndim-1) — head_dim-sharded caches force
+        # partial-logit all-reduces in attention (§Perf); never shard the
+        # sequence dim (index 2 of stacked caches).
+        candidates = [d for d in (len(shape) - 2, len(shape) - 1)
+                      if d > 1 and not (d == 2 and len(shape) >= 4)]
+        for d in candidates:
+            if plan[d] is None and shape[d] % mesh.shape["model"] == 0 and shape[d] >= mesh.shape["model"]:
+                plan[d] = "model"
+                break
+        return _guard(shape, tuple(plan), mesh)
+
+    return jax.tree_util.tree_map_with_path(spec_one, cache_tree)
+
+
+def to_shardings(pspec_tree, mesh: Mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        pspec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,20 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+The paper's Limitations section (§5) measures that the *unfused* low-rank
+matmul costs 23-52% extra latency even at rank 128 ("data movement is
+important, and ... a fused kernel could improve latency") and speculates the
+low-rank path "may be computable in parallel with the low-bitwidth
+computation".  `w4a4.py` is exactly that kernel, adapted to the TPU memory
+hierarchy: packed-int4 weights are unpacked in VMEM, the int8×int8→int32 MXU
+GEMM accumulates over K tiles, and the epilogue applies the per-token/
+per-channel rescale AND the (xV)Uᵀ low-rank term while the tile is still in
+VMEM — one HBM pass instead of two.
+
+  w4a4.py     — fused W4A4 matmul + low-rank epilogue (pl.pallas_call)
+  actquant.py — per-token int4/int8 on-the-fly activation quantizer
+  hadamard.py — blocked Walsh-Hadamard transform (QuaRot online rotation)
+  ops.py      — jit'd wrappers (padding, interpret-mode fallback on CPU)
+  ref.py      — pure-jnp oracles for every kernel
+"""
+
+from repro.kernels import ops, ref

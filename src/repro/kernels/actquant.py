@@ -1,0 +1,51 @@
+"""On-the-fly activation quantizer kernel (paper §2: scale-then-round by
+c·max|x|).  One pass over the activations in VMEM produces the int grid
+values and the per-token scales — this is the "fast (simple!) scheme" the
+paper requires for online quantization.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, q_ref, s_ref, *, qmax: int, clip_ratio: float):
+    x = x_ref[...].astype(jnp.float32)
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    amax = jnp.where(amax <= 0.0, 1.0, amax)
+    s = clip_ratio * amax / qmax
+    q = jnp.clip(jnp.round(x / s), -qmax - 1, qmax)
+    q_ref[...] = q.astype(jnp.int8)
+    s_ref[...] = s
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "clip_ratio", "bm", "interpret"))
+def act_quant_kernel(
+    x: jnp.ndarray,  # (M, K)
+    bits: int = 4,
+    clip_ratio: float = 1.0,
+    bm: int = 128,
+    interpret: bool = True,
+):
+    m, k = x.shape
+    assert m % bm == 0, (m, bm)
+    qmax = 2 ** (bits - 1) - 1
+    q, s = pl.pallas_call(
+        functools.partial(_kernel, qmax=qmax, clip_ratio=clip_ratio),
+        grid=(m // bm,),
+        in_specs=[pl.BlockSpec((bm, k), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((bm, k), lambda i: (i, 0)),
+            pl.BlockSpec((bm, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, k), jnp.int8),
+            jax.ShapeDtypeStruct((m, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x)
+    return q, s

@@ -1,0 +1,82 @@
+"""Flash-attention forward kernel (blocked online-softmax, Pallas).
+
+The dry-run shows prefill cells are memory-bound on the materialized
+(B,H,S,S) logits (§Roofline) — e.g. gemma-7b prefill_32k moves TBs of
+attention scores through HBM.  This kernel keeps each (BQ × BKV) score tile
+in VMEM with running (m, l, acc) statistics, so attention bytes drop from
+O(S²) to O(S·D) — the classic flash-attention restructuring, here as the
+TPU-native companion of the W4A4 serving path.
+
+Layout: q (B*H, S, D), k/v (B*H, S, D) — the wrapper folds batch/head dims
+and un-groups GQA.  Causal masking is computed arithmetically per tile (no
+mask tensor in HBM).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, *, scale: float, causal: bool,
+            bq: int, bkv: int, skv: int):
+    qi = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32) * scale  # (BQ, D)
+    d = q.shape[-1]
+    m = jnp.full((bq, 1), NEG_INF, jnp.float32)
+    l = jnp.zeros((bq, 1), jnp.float32)
+    acc = jnp.zeros((bq, v_ref.shape[-1]), jnp.float32)  # (BQ, Dv)
+
+    n_kv = skv // bkv
+
+    def body(j, carry):
+        m, l, acc = carry
+        k = jax.lax.dynamic_slice_in_dim(k_ref[0], j * bkv, bkv, axis=0)
+        v = jax.lax.dynamic_slice_in_dim(v_ref[0], j * bkv, bkv, axis=0)
+        s = q @ k.astype(jnp.float32).T  # (BQ, BKV)
+        if causal:
+            qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+            kpos = j * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+            s = jnp.where(kpos <= qpos, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc * corr + p @ v.astype(jnp.float32)
+        return m_new, l, acc
+
+    m, l, acc = jax.lax.fori_loop(0, n_kv, body, (m, l, acc))
+    o_ref[0] = (acc / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "causal", "bq", "bkv", "interpret"))
+def flash_attention_kernel(
+    q: jnp.ndarray,  # (BH, Sq, D)
+    k: jnp.ndarray,  # (BH, Skv, D)
+    v: jnp.ndarray,  # (BH, Skv, Dv)
+    scale: float,
+    causal: bool = True,
+    bq: int = 128,
+    bkv: int = 128,
+    interpret: bool = True,
+):
+    bh, sq, d = q.shape
+    skv = k.shape[1]
+    assert sq % bq == 0 and skv % bkv == 0, (sq, skv, bq, bkv)
+    return pl.pallas_call(
+        functools.partial(_kernel, scale=scale, causal=causal, bq=bq, bkv=bkv, skv=skv),
+        grid=(bh, sq // bq),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, skv, d), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, skv, v.shape[-1]), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, v.shape[-1]), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, v.shape[-1]), q.dtype),
+        interpret=interpret,
+    )(q, k, v)

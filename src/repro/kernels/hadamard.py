@@ -1,0 +1,45 @@
+"""Blocked Walsh-Hadamard transform kernel (QuaRot online rotation, R3/R4).
+
+Applies the normalized WHT over the last (power-of-two) axis of a row tile
+held in VMEM: log2(D) butterfly sweeps, no HBM round-trips between stages.
+Odd Kronecker factors (d = m·2^k) are applied by the wrapper as a small dense
+matmul (repro.core.hadamard semantics).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, o_ref, *, d: int):
+    y = x_ref[...].astype(jnp.float32)
+    bm = y.shape[0]
+    h = 1
+    while h < d:
+        y = y.reshape(bm, d // (2 * h), 2, h)
+        a = y[:, :, 0, :]
+        b = y[:, :, 1, :]
+        y = jnp.stack([a + b, a - b], axis=2)
+        h *= 2
+    y = y.reshape(bm, d) * (1.0 / (d**0.5))
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "interpret"))
+def fwht_kernel(x: jnp.ndarray, bm: int = 256, interpret: bool = True):
+    """x: (M, D) with D a power of two; returns x @ H_D (normalized)."""
+    m, d = x.shape
+    assert d & (d - 1) == 0, d
+    assert m % bm == 0, (m, bm)
+    return pl.pallas_call(
+        functools.partial(_kernel, d=d),
+        grid=(m // bm,),
+        in_specs=[pl.BlockSpec((bm, d), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bm, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, d), x.dtype),
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,107 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Responsibilities: shape padding to block multiples, interpret-mode selection
+(interpret=True on CPU — validates the kernel bodies; compiled Mosaic on real
+TPU), and the end-to-end fused entry used by ``QLinear(impl="pallas")``.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantizers import QuantSpec
+from repro.kernels.actquant import act_quant_kernel
+from repro.kernels.hadamard import fwht_kernel
+from repro.kernels.w4a4 import w4a4_lowrank_matmul_kernel
+from repro.kernels.flash_attn import flash_attention_kernel
+
+
+def _interpret() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _pad_to(x, mult, axis):
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x, size
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), size
+
+
+def act_quant(x: jnp.ndarray, spec: QuantSpec, bm: int = 128):
+    """Per-token activation quantization. x: (M, K) -> (q int8, s (M,1))."""
+    assert spec.group_size is None, "kernel path: per-token scales only"
+    xp, m = _pad_to(x, bm, 0)
+    q, s = act_quant_kernel(
+        xp, bits=spec.bits, clip_ratio=spec.clip_ratio, bm=bm,
+        interpret=_interpret(),
+    )
+    return q[:m], s[:m]
+
+
+def fwht(x: jnp.ndarray, bm: int = 256):
+    xp, m = _pad_to(x, bm, 0)
+    return fwht_kernel(xp, bm=bm, interpret=_interpret())[:m]
+
+
+def w4a4_lowrank_matmul(
+    x: jnp.ndarray,  # (M, K) float
+    wpacked: jnp.ndarray,  # (K//2, N) uint8
+    w_scale: jnp.ndarray,  # (N,)
+    u,  # (N, R) or None
+    v,  # (K, R) or None
+    act_spec: QuantSpec,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 256,
+):
+    """Full fused path: quantize activations, W4A4 GEMM + LR epilogue."""
+    m0, k = x.shape
+    n = wpacked.shape[1]
+    bm = min(bm, _round_pow2(m0))
+    bn = min(bn, n)
+    bk = min(bk, k)
+    assert k % bk == 0 and n % bn == 0, (k, n, bk, bn)
+
+    xq, sx = act_quant(x, act_spec, bm=bm)
+    xv = None
+    if u is not None:
+        xv = (x.astype(jnp.float32) @ v.astype(jnp.float32)).astype(jnp.float32)
+        xv, _ = _pad_to(xv, bm, 0)
+    xqp, _ = _pad_to(xq, bm, 0)
+    sxp, _ = _pad_to(sx, bm, 0)
+    out = w4a4_lowrank_matmul_kernel(
+        xqp, sxp, wpacked, w_scale.reshape(1, -1),
+        xv, u if u is None else jnp.asarray(u, jnp.float32),
+        bm=bm, bn=bn, bk=bk, interpret=_interpret(),
+    )
+    return out[:m0]
+
+
+def _round_pow2(m: int) -> int:
+    p = 8
+    while p * 2 <= m:
+        p *= 2
+    return p
+
+
+def flash_attention(q, k, v, scale: float, causal: bool = True,
+                    bq: int = 128, bkv: int = 128):
+    """GQA flash attention. q: (B, Sq, H, D); k/v: (B, Skv, KH, D[v]).
+    Folds batch×head, repeats KV heads across their query group."""
+    b, sq, h, d = q.shape
+    kh = k.shape[2]
+    g = h // kh
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, sq, d)
+    kf = jnp.repeat(k.transpose(0, 2, 1, 3), g, axis=1).reshape(b * h, k.shape[1], d)
+    vf = jnp.repeat(v.transpose(0, 2, 1, 3), g, axis=1).reshape(b * h, v.shape[1], v.shape[-1])
+    bq = min(bq, sq)
+    bkv = min(bkv, k.shape[1])
+    out = flash_attention_kernel(qf, kf, vf, scale, causal=causal,
+                                 bq=bq, bkv=bkv, interpret=_interpret())
+    return out.reshape(b, h, sq, -1).transpose(0, 2, 1, 3)

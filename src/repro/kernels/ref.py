@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for every Pallas kernel (bit-faithful semantics)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.quantizers import unpack_int4
+
+
+def w4a4_lowrank_matmul_ref(xq, sx, wpacked, sw, xv=None, u=None):
+    """Same math as kernels.w4a4 — int8 GEMM, rescale, optional LR term."""
+    wq = unpack_int4(wpacked.T).T  # (K, N) int8, even/odd interleave along K
+    acc = jnp.dot(
+        xq.astype(jnp.int32), wq.astype(jnp.int32)
+    )  # exact integer accumulation
+    out = acc.astype(jnp.float32) * sx * sw
+    if xv is not None:
+        out = out + xv.astype(jnp.float32) @ u.astype(jnp.float32).T
+    return out
+
+
+def act_quant_ref(x, bits: int = 4, clip_ratio: float = 1.0):
+    qmax = 2 ** (bits - 1) - 1
+    x = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    amax = jnp.where(amax <= 0.0, 1.0, amax)
+    s = clip_ratio * amax / qmax
+    q = jnp.clip(jnp.round(x / s), -qmax - 1, qmax).astype(jnp.int8)
+    return q, s
+
+
+def fwht_ref(x):
+    from repro.core.hadamard import fwht
+
+    return fwht(x.astype(jnp.float32)).astype(x.dtype)
+
+
+def flash_attention_ref(q, k, v, scale: float, causal: bool = True):
+    """q/k/v: (BH, S, D) — standard softmax attention."""
+    s_ = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    if causal:
+        sq, sk = q.shape[1], k.shape[1]
+        qi = jnp.arange(sq)[:, None]
+        kj = jnp.arange(sk)[None, :]
+        s_ = jnp.where((kj <= qi)[None], s_, -1e30)
+    import jax
+    p_ = jax.nn.softmax(s_, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p_, v.astype(jnp.float32)).astype(q.dtype)

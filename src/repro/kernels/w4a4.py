@@ -1,0 +1,118 @@
+"""Fused W4A4 matmul with low-rank epilogue (the paper's §5 "future work").
+
+Computes   out = (Xq · Wq) · s_x · s_w  +  (X V) Uᵀ
+
+  Xq       (M, K)    int8, per-token-quantized activations (int4 grid)
+  s_x      (M, 1)    f32 per-token scales
+  Wpacked  (K//2, N) uint8 — two int4 weights per byte along K
+  s_w      (1, N)    f32 per-output-channel scales
+  XV       (M, R)    f32 — the small (X V) matmul, precomputed (R ≪ K)
+  U        (N, R)    f32/bf16
+
+Grid (M/BM, N/BN, K/BK); K is the reduction axis, innermost.  The int32
+accumulator lives in a VMEM scratch; at the last K step the epilogue rescales
+and adds the low-rank tile contribution (XV_tile @ U_tileᵀ) before the single
+HBM write of the output tile — the low-rank FLOPs ride the MXU alongside the
+quantized GEMM instead of a second HBM pass.
+
+Weight unpacking happens in VMEM: low nibble = even-K rows, high = odd.
+TPU adaptation notes: v5e has no int4 MXU — int4 is the STORAGE format
+(halving weight HBM traffic, the decode bottleneck); compute runs
+int8×int8→int32 on the MXU, matching Ampere's int4-storage/int8-compute
+reality the paper measured with Cutlass.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _unpack_block(wp):
+    """(BK//2, BN) uint8 -> (BK, BN) int8 in [-8, 7]; even rows = low nibble."""
+    lo = (wp & 0xF).astype(jnp.int8)
+    hi = ((wp >> 4) & 0xF).astype(jnp.int8)
+    lo = jnp.where(lo >= 8, lo - 16, lo)
+    hi = jnp.where(hi >= 8, hi - 16, hi)
+    # packed rows interleave (2i, 2i+1) -> stack on a new axis then fold
+    bk2, bn = wp.shape
+    w = jnp.stack([lo, hi], axis=1)  # (BK//2, 2, BN)
+    return w.reshape(bk2 * 2, bn)
+
+
+def _kernel(xq_ref, sx_ref, wp_ref, sw_ref, xv_ref, u_ref, out_ref, acc_ref, *,
+            n_k: int, with_lr: bool):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    w_blk = _unpack_block(wp_ref[...])  # (BK, BN) int8
+    acc_ref[...] += jax.lax.dot_general(
+        xq_ref[...], w_blk, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+    @pl.when(k == n_k - 1)
+    def _epilogue():
+        out = acc_ref[...].astype(jnp.float32) * sx_ref[...] * sw_ref[...]
+        if with_lr:
+            lr = jax.lax.dot_general(
+                xv_ref[...].astype(jnp.float32),
+                u_ref[...].astype(jnp.float32),
+                (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+            out = out + lr
+        out_ref[...] = out
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bm", "bn", "bk", "interpret"),
+)
+def w4a4_lowrank_matmul_kernel(
+    xq: jnp.ndarray,  # (M, K) int8
+    sx: jnp.ndarray,  # (M, 1) f32
+    wpacked: jnp.ndarray,  # (K//2, N) uint8
+    sw: jnp.ndarray,  # (1, N) f32
+    xv,  # (M, R) f32 or None
+    u,  # (N, R) or None
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 256,
+    interpret: bool = True,
+):
+    m, k = xq.shape
+    n = wpacked.shape[1]
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
+    n_k = k // bk
+    with_lr = xv is not None
+    if not with_lr:  # placeholder operands keep the pallas signature static
+        xv = jnp.zeros((m, 8), jnp.float32)
+        u = jnp.zeros((n, 8), jnp.float32)
+    r = xv.shape[1]
+
+    grid = (m // bm, n // bn, n_k)
+    out = pl.pallas_call(
+        functools.partial(_kernel, n_k=n_k, with_lr=with_lr),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),  # xq
+            pl.BlockSpec((bm, 1), lambda i, j, kk: (i, 0)),  # sx
+            pl.BlockSpec((bk // 2, bn), lambda i, j, kk: (kk, j)),  # wpacked
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),  # sw
+            pl.BlockSpec((bm, r), lambda i, j, kk: (i, 0)),  # xv
+            pl.BlockSpec((bn, r), lambda i, j, kk: (j, 0)),  # u
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(xq, sx, wpacked, sw, xv, u)
+    return out

@@ -1,0 +1,27 @@
+"""Production mesh definition.
+
+Single pod: (data=16, model=16) = 256 chips (TPU v5e pod slice).
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips across 2 pods — the
+"pod" axis carries pure data parallelism (gradient all-reduce crosses the
+inter-pod DCN/ICI boundary once per step).
+
+A FUNCTION, not a module constant: importing this module never touches jax
+device state (the dry-run must set XLA_FLAGS before first jax init).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh for unit tests on forced host devices."""
+    return jax.make_mesh(shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))

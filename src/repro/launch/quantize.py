@@ -1,0 +1,65 @@
+"""LRC calibration launcher: quantize a model checkpoint W4A4 + low-rank.
+
+    PYTHONPATH=src python -m repro.launch.quantize --arch smollm-135m \
+        [--rank-frac 0.10] [--iters 1] [--method gptq] [--resume-dir tmp/]
+"""
+
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--rank-frac", type=float, default=0.10)
+    ap.add_argument("--iters", type=int, default=1)
+    ap.add_argument("--method", default="gptq", choices=["gptq", "rtn"])
+    ap.add_argument("--correction", default="lrc", choices=["lrc", "svd", "none"])
+    ap.add_argument("--act-group", type=int, default=0)
+    ap.add_argument("--ckpt", default=None, help="model checkpoint to load")
+    ap.add_argument("--out", default="results/quantized")
+    ap.add_argument("--resume-dir", default=None,
+                    help="per-layer calibration resume directory")
+    ap.add_argument("--calib-seqs", type=int, default=24)
+    ap.add_argument("--calib-len", type=int, default=96)
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.models import model as model_lib
+    from repro.models.config import reduced as reduce_cfg
+    from repro.checkpoint.ckpt import load_checkpoint, save_checkpoint
+    from repro.data.loader import calib_sequences
+    from repro.quant.calibrate import quantize_model
+    from repro.quant.policy import QuantPolicy
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduce_cfg(cfg)
+    if args.ckpt:
+        like = jax.eval_shape(lambda k: model_lib.init_params(cfg, k),
+                              jax.ShapeDtypeStruct((2,), jnp.uint32))
+        params = load_checkpoint(args.ckpt, like)
+    else:
+        params = model_lib.init_params(cfg, jax.random.PRNGKey(0))
+
+    calib = calib_sequences(cfg, n_seq=args.calib_seqs, seq_len=args.calib_len)
+    policy = QuantPolicy(
+        bits=4, act_bits=4, rank_frac=args.rank_frac,
+        act_group=args.act_group or None, impl="sim",
+        lrc_iters=args.iters, quant_method=args.method,
+        correction=args.correction,
+    )
+
+    def progress(done, total):
+        print(f"  layer {done + 1 if isinstance(done, int) else done}/{total}", flush=True)
+
+    qparams = quantize_model(cfg, params, calib, policy,
+                             resume_dir=args.resume_dir, progress=progress)
+    path = save_checkpoint(args.out, 0, qparams)
+    print(f"quantized params saved to {path}")
+
+
+if __name__ == "__main__":
+    main()

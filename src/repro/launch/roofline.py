@@ -1,0 +1,189 @@
+"""Roofline-term derivation from the compiled dry-run artifact.
+
+    compute term    = HLO_FLOPs / (chips × peak_FLOP/s)
+    memory term     = HLO_bytes / (chips × HBM_bw)
+    collective term = collective_bytes / (chips × link_bw)
+
+`cost_analysis()` on the SPMD-partitioned module reports PER-DEVICE flops and
+bytes (verified experimentally), so the per-chip division is already done;
+collective bytes are summed over the per-device HLO's collective operands.
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s
+LINK_BW = 50e9  # bytes/s/link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+    "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+    "s4": 0.5, "u4": 0.5,
+    "pred": 1, "c64": 8, "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+# an HLO instruction definition: "%name = <shape> opcode(operands...)"
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^)]*\))|(?:[\w\[\],{}:#\s*]+?))\s+([\w\-]+)\("
+)
+
+
+def _shape_bytes(type_str: str) -> float:
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum operand bytes of every collective op in the (per-device) HLO."""
+    result_bytes: Dict[str, float] = {}
+    lines = hlo_text.splitlines()
+    for ln in lines:
+        m = _INSTR_RE.match(ln)
+        if m:
+            result_bytes[m.group(1)] = _shape_bytes(m.group(2))
+    totals = {k: 0.0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for ln in lines:
+        m = _INSTR_RE.match(ln)
+        if not m:
+            continue
+        op = m.group(3)
+        kind = None
+        for c in _COLLECTIVES:
+            if op == c or op.startswith(c + "-"):  # e.g. all-reduce-start
+                kind = c
+                break
+        if kind is None:
+            continue
+        counts[kind] += 1
+        # operand list: between the op's '(' and its matching ')'
+        body = ln[m.end():]
+        depth = 1
+        args = ""
+        for ch in body:
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            args += ch
+        got = 0.0
+        for tok in re.findall(r"%?([\w.\-]+)", args):
+            if tok in result_bytes:
+                got += result_bytes[tok]
+        if got == 0.0:
+            got = _shape_bytes(m.group(2))  # fall back to result size
+        totals[kind] += got
+    totals["_counts"] = counts  # type: ignore
+    return totals
+
+
+def extract_costs(compiled) -> dict:
+    """Per-device flops / bytes / collective-bytes of one compiled artifact.
+    NOTE: scanned (while-loop) bodies are counted ONCE by XLA — callers must
+    use UNROLLED variants (cfg.unroll) and extrapolate for scanned models."""
+    cost = compiled.cost_analysis()
+    coll = collective_bytes(compiled.as_text())
+    return dict(
+        flops=float(cost.get("flops", 0.0)),
+        bytes=float(cost.get("bytes accessed", 0.0)),
+        coll={k: v for k, v in coll.items() if not k.startswith("_")},
+        coll_counts=dict(coll.get("_counts", {})),
+    )
+
+
+def combine_costs(a: dict, b: dict, fa: float, fb: float) -> dict:
+    """fa·a + fb·b, fieldwise."""
+    out = dict(
+        flops=fa * a["flops"] + fb * b["flops"],
+        bytes=fa * a["bytes"] + fb * b["bytes"],
+        coll={k: fa * a["coll"].get(k, 0.0) + fb * b["coll"].get(k, 0.0)
+              for k in set(a["coll"]) | set(b["coll"])},
+        coll_counts={k: fa * a["coll_counts"].get(k, 0) + fb * b["coll_counts"].get(k, 0)
+                     for k in set(a["coll_counts"]) | set(b["coll_counts"])},
+    )
+    return out
+
+
+def memory_info(compiled) -> dict:
+    mem = compiled.memory_analysis()
+    info = {}
+    if mem is not None:
+        for f in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes"):
+            info[f] = int(getattr(mem, f, 0))
+    return info
+
+
+def roofline_from_costs(costs: dict, model_flops_total: float, n_chips: int,
+                        mem_info: dict | None = None) -> dict:
+    flops_dev = costs["flops"]
+    bytes_dev = costs["bytes"]
+    coll_dev = sum(costs["coll"].values())
+    compute_t = flops_dev / PEAK_FLOPS
+    memory_t = bytes_dev / HBM_BW
+    coll_t = coll_dev / LINK_BW
+    terms = dict(compute=compute_t, memory=memory_t, collective=coll_t)
+    bottleneck = max(terms, key=terms.get)
+    hlo_total = flops_dev * n_chips
+    return dict(
+        flops_per_device=flops_dev,
+        bytes_per_device=bytes_dev,
+        collective_bytes_per_device=coll_dev,
+        collective_breakdown=costs["coll"],
+        collective_counts=costs["coll_counts"],
+        compute_term_s=compute_t,
+        memory_term_s=memory_t,
+        collective_term_s=coll_t,
+        bottleneck=bottleneck,
+        step_time_bound_s=max(terms.values()),
+        model_flops_total=model_flops_total,
+        hlo_flops_total=hlo_total,
+        useful_flops_ratio=(model_flops_total / hlo_total) if hlo_total else 0.0,
+        roofline_fraction=(
+            (model_flops_total / n_chips / PEAK_FLOPS) / max(terms.values())
+            if max(terms.values()) > 0
+            else 0.0
+        ),
+        memory=mem_info or {},
+    )
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS = 6·N·D (train) / 2·N·D (inference); N = active matmul
+    params (embedding lookup excluded), D = tokens processed."""
+    n_eff = cfg.n_active_params() - cfg.vocab_size * cfg.d_model
+    if shape.kind == "train":
+        d = shape.global_batch * shape.seq_len
+        return 6.0 * n_eff * d
+    if shape.kind == "prefill":
+        d = shape.global_batch * shape.seq_len
+        return 2.0 * n_eff * d
+    # decode: one token per sequence
+    return 2.0 * n_eff * shape.global_batch

@@ -1,0 +1,63 @@
+"""Serving launcher: batched requests through a (quantized) model.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m \
+        [--quantize] [--requests 8] [--new-tokens 16]
+"""
+
+import argparse
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--quantize", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-seq", type=int, default=128)
+    args = ap.parse_args()
+
+    import jax
+    import numpy as np
+    from repro.configs import get_config
+    from repro.models import model as model_lib
+    from repro.models.config import reduced as reduce_cfg
+    from repro.serve.engine import Request, ServeEngine
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduce_cfg(cfg)
+    params = model_lib.init_params(cfg, jax.random.PRNGKey(0))
+
+    if args.quantize:
+        from repro.data.loader import calib_sequences
+        from repro.quant.calibrate import quantize_model
+        from repro.quant.policy import QuantPolicy
+
+        calib = calib_sequences(cfg, n_seq=16, seq_len=64)
+        params = quantize_model(
+            cfg, params, calib,
+            QuantPolicy(rank_frac=0.10, impl="sim", clip_ratio=0.9),
+        )
+        print("serving the W4A4+LRC quantized model")
+
+    eng = ServeEngine(cfg, params, batch_slots=args.slots, max_seq=args.max_seq)
+    rng = np.random.default_rng(0)
+    for i in range(args.requests):
+        eng.submit(Request(
+            rid=i,
+            prompt=rng.integers(0, cfg.vocab_size, 12).astype(np.int32),
+            max_new_tokens=args.new_tokens,
+        ))
+    t0 = time.time()
+    done = eng.run()
+    dt = time.time() - t0
+    total = sum(len(r.out_tokens) for r in done.values())
+    print(f"{len(done)} requests, {total} tokens, {dt:.2f}s "
+          f"-> {total / dt:.1f} tok/s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,161 @@
+"""Dry-run cell construction: for an (arch × shape × mesh) cell, build the
+step function, ShapeDtypeStruct inputs and input shardings.
+
+Train cells lower the full ``train_step`` (loss→grads→AdamW, remat=full,
+EP dispatch for MoE).  Prefill/decode cells lower the QUANTIZED serve path —
+packed-int4 weights + f32 scales + bf16 U/V low-rank correction — i.e. the
+paper's W4A4+LRC deployment artifact, not the fp model.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.configs.shapes import SHAPES, applicable
+from repro.distributed.sharding import (
+    batch_pspec,
+    cache_pspecs,
+    param_pspecs,
+    to_shardings,
+)
+from repro.models import model as model_lib
+from repro.quant.policy import QuantPolicy
+from repro.quant.shell import quantize_shell
+from repro.train.steps import TrainState, init_train_state, make_train_step
+from repro.train.optimizer import AdamWState
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _batch_specs(cfg, shape, kind: str):
+    """ShapeDtypeStructs for the input batch of a given shape/kind."""
+    b, s = shape.global_batch, shape.seq_len
+    if kind == "decode":
+        batch = {"tokens": _sds((b, 1), jnp.int32)}
+        return batch
+    batch = {"tokens": _sds((b, s), jnp.int32)}
+    if cfg.family == "encdec":
+        t_enc = max(8, s // cfg.encoder_downsample)
+        batch["frames"] = _sds((b, t_enc, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "vlm":
+        batch["patches"] = _sds((b, cfg.n_prefix_tokens, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+def _prep_cfg(cfg, kind: str):
+    upd = {}
+    if cfg.family == "moe":
+        upd["moe_impl"] = "ep"
+        # §Perf exp-3: weight-absorbed MLA wins in the decode regime only
+        # (prefill pays wider latent scores); ship absorb-on-decode.
+        if kind == "decode":
+            upd["mla_absorb"] = True
+    if kind == "train":
+        upd["remat"] = "full"
+    upd["dtype"] = "bfloat16"
+    return dataclasses.replace(cfg, **upd) if upd else cfg
+
+
+def build_cell(arch: str, shape_name: str, mesh, multi_pod: bool,
+               policy: QuantPolicy | None = None, cfg_override=None):
+    """Returns dict(fn, args tuple of SDS trees, in_shardings tuple).
+    ``cfg_override``: a depth-shrunk/unrolled variant for cost extrapolation."""
+    base_cfg = cfg_override if cfg_override is not None else get_config(arch)
+    shape = SHAPES[shape_name]
+    if not applicable(base_cfg, shape_name):
+        raise ValueError(f"{arch} × {shape_name} is skipped (full attention at 500k)")
+    kind = shape.kind
+    cfg = _prep_cfg(base_cfg, kind)
+    policy = policy or QuantPolicy(impl="int8", act_group=None, rank_frac=0.10)
+    b, s = shape.global_batch, shape.seq_len
+
+    if kind == "train":
+        state_shapes = jax.eval_shape(
+            lambda k: init_train_state(cfg, k), _sds((2,), jnp.uint32)
+        )
+        batch = _batch_specs(cfg, shape, kind)
+        step = make_train_step(cfg, microbatches=1)
+        pspecs = param_pspecs(state_shapes.params, mesh, multi_pod)
+        state_specs = TrainState(
+            params=pspecs,
+            opt=AdamWState(step=P(), mu=pspecs, nu=pspecs),
+        )
+        bspec = batch_pspec(mesh, multi_pod, b)
+        batch_specs = {k: _pad_spec(bspec, v) for k, v in batch.items()}
+        return dict(
+            fn=step,
+            args=(state_shapes, batch),
+            in_shardings=(
+                to_shardings(state_specs, mesh),
+                to_shardings(batch_specs, mesh),
+            ),
+            cfg=cfg,
+            kind=kind,
+        )
+
+    # ---- serve cells: quantized params ----
+    qparams_shapes = jax.eval_shape(
+        lambda k: quantize_shell(model_lib.init_params(cfg, k, max_seq=s), policy),
+        _sds((2,), jnp.uint32),
+    )
+    enc_len = max(8, s // cfg.encoder_downsample) if cfg.family == "encdec" else 0
+    cache_len = s + (cfg.n_prefix_tokens if cfg.family == "vlm" else 0)
+    cache_shapes = jax.eval_shape(
+        partial(model_lib.init_cache, cfg, b, cache_len, jnp.bfloat16, enc_len=enc_len)
+    )
+    ppspecs = param_pspecs(qparams_shapes, mesh, multi_pod)
+    cspecs = cache_pspecs(cache_shapes, mesh, multi_pod, b)
+    shard_seq = (kind == "prefill" and b == 1)
+
+    if kind == "prefill":
+        batch = _batch_specs(cfg, shape, kind)
+        bspec = batch_pspec(mesh, multi_pod, b, shard_seq=shard_seq)
+        batch_specs = {k: _pad_spec(bspec, v) for k, v in batch.items()}
+
+        def fn(params, batch, cache):
+            return model_lib.prefill(cfg, params, batch, cache)
+
+        return dict(
+            fn=fn,
+            args=(qparams_shapes, batch, cache_shapes),
+            in_shardings=(
+                to_shardings(ppspecs, mesh),
+                to_shardings(batch_specs, mesh),
+                to_shardings(cspecs, mesh),
+            ),
+            cfg=cfg,
+            kind=kind,
+        )
+
+    # decode
+    tokens = _sds((b, 1), jnp.int32)
+
+    def fn(params, tokens, cache):
+        return model_lib.decode_step(cfg, params, tokens, cache)
+
+    return dict(
+        fn=fn,
+        args=(qparams_shapes, tokens, cache_shapes),
+        in_shardings=(
+            to_shardings(ppspecs, mesh),
+            None,  # tiny token ids: let GSPMD place them
+            to_shardings(cspecs, mesh),
+        ),
+        cfg=cfg,
+        kind=kind,
+    )
+
+
+def _pad_spec(bspec: P, sds):
+    """Extend a (B, S) spec with None for trailing dims (frames/patches)."""
+    nd = len(sds.shape)
+    entries = list(bspec) + [None] * (nd - len(bspec))
+    return P(*entries[:nd])

@@ -1,0 +1,83 @@
+"""Aggregate results/dryrun/*.json into the EXPERIMENTS.md tables.
+
+    PYTHONPATH=src python -m repro.launch.summarize [--dir results/dryrun]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+
+def fmt_s(x):
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def fmt_b(x):
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if x < 1024:
+            return f"{x:.1f}{unit}"
+        x /= 1024
+    return f"{x:.1f}PB"
+
+
+def load(dir_path: Path):
+    recs = []
+    for p in sorted(dir_path.glob("*.json")):
+        recs.append(json.loads(p.read_text()))
+    return recs
+
+
+def table(recs, mesh_filter: str):
+    rows = []
+    for r in recs:
+        if r.get("status") != "ok" or r.get("mesh") != mesh_filter:
+            continue
+        mem = r.get("memory", {})
+        hbm = (mem.get("argument_size_in_bytes", 0) + mem.get("temp_size_in_bytes", 0)
+               + mem.get("output_size_in_bytes", 0))
+        rows.append(dict(
+            arch=r["arch"], shape=r["shape"], kind=r["kind"],
+            compute=r["compute_term_s"], memory=r["memory_term_s"],
+            coll=r["collective_term_s"], bottleneck=r["bottleneck"],
+            bound=r["step_time_bound_s"], useful=r["useful_flops_ratio"],
+            frac=r["roofline_fraction"], hbm=hbm,
+        ))
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--markdown", action="store_true", default=True)
+    args = ap.parse_args()
+    recs = load(Path(args.dir))
+    for mesh in ("16x16", "2x16x16"):
+        rows = table(recs, mesh)
+        if not rows:
+            continue
+        print(f"\n### Mesh {mesh} ({'256' if mesh == '16x16' else '512'} chips)\n")
+        print("| arch | shape | compute | memory | collective | bottleneck | "
+              "step bound | useful | roofline | HBM/dev |")
+        print("|---|---|---|---|---|---|---|---|---|---|")
+        for r in rows:
+            print(
+                f"| {r['arch']} | {r['shape']} | {fmt_s(r['compute'])} | "
+                f"{fmt_s(r['memory'])} | {fmt_s(r['coll'])} | **{r['bottleneck']}** | "
+                f"{fmt_s(r['bound'])} | {r['useful']:.3f} | {r['frac']:.4f} | "
+                f"{fmt_b(r['hbm'])} |"
+            )
+    fails = [r for r in recs if r.get("status") != "ok"]
+    if fails:
+        print("\nFAILURES:")
+        for r in fails:
+            print(f"  {r['arch']} x {r['shape']}: {r.get('error', '?')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,193 @@
+"""Shared transformer building blocks (pure functions, bf16-friendly).
+
+Every matmul goes through :func:`repro.quant.qlinear.apply_linear`, which
+dispatches on the weight leaf type: a plain array runs a dense matmul; a
+``QLinear`` pytree runs the paper's W4A4 + low-rank-correction path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.qlinear import apply_linear
+
+
+def rms_norm(x: jnp.ndarray, gamma: jnp.ndarray, eps: float) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * gamma.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x: jnp.ndarray, gamma: jnp.ndarray, beta: jnp.ndarray, eps: float) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * gamma.astype(jnp.float32) + beta.astype(jnp.float32)).astype(dt)
+
+
+def sinusoidal_positions(length: int, dim: int) -> jnp.ndarray:
+    """Whisper-style sinusoidal embeddings (length, dim)."""
+    half = dim // 2
+    freqs = jnp.exp(-jnp.log(10000.0) * jnp.arange(half) / (half - 1))
+    ang = jnp.arange(length)[:, None] * freqs[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotary embedding. x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions[..., :, None].astype(jnp.float32) * freqs[None, :]
+    cos = jnp.cos(ang)[..., :, None, :]  # (..., seq, 1, half)
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+FREE = "free"  # unconstrained marker for shard_hint
+
+
+def shard_hint(x: jnp.ndarray, axes: tuple) -> jnp.ndarray:
+    """Soft sharding constraint (no-op without a mesh).
+
+    §Perf finding: without this, GSPMD shards attention's HEAD_DIM (e.g.
+    96→6 per device) instead of the head axis, computing partial logits on
+    every device and ALL-REDUCING the full (B,H,S,S) tensor — 256 GiB per
+    layer for phi-3 prefill_32k.  Constraining q/k/v to head-sharded layout
+    removes that collective entirely and shards the logits 16-way.
+
+    ``axes`` entries: mesh-axis name (shard, with divisibility guard →
+    FREE), None (force replicated), or FREE (leave to GSPMD).
+    """
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or not mesh.axis_names:
+        return x
+    P = jax.sharding.PartitionSpec
+    spec = []
+    for dim, a in zip(x.shape, axes):
+        if a is None:
+            spec.append(None)  # explicit replication
+        elif a != FREE and a in mesh.shape and dim % mesh.shape[a] == 0:
+            spec.append(a)
+        else:
+            spec.append(P.UNCONSTRAINED)
+    if all(s is P.UNCONSTRAINED for s in spec):
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def attn_qkv_hints(q, k, v):
+    """Sharding scheme for attention inputs (B, S, H|K, D):
+
+      * heads divide the model axis → head-sharded (classic TP attention);
+      * otherwise, for prefill, shard the QUERY-SEQUENCE over the model axis
+        and replicate the (small) K/V — context-parallel attention: logits
+        stay seq-sharded, no partial-contraction all-reduce (the smollm-class
+        fix, §Perf);
+      * decode (q_len == 1) is left to GSPMD (logits are tiny).
+    """
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or not mesh.axis_names or "model" not in mesh.shape:
+        return q, k, v
+    tp = mesh.shape["model"]
+    if q.shape[2] % tp == 0 and k.shape[2] % tp == 0:
+        hint = (FREE, FREE, "model", FREE)
+        return shard_hint(q, hint), shard_hint(k, hint), shard_hint(v, hint)
+    if q.shape[1] > 1 and q.shape[1] % tp == 0:
+        q = shard_hint(q, (FREE, "model", None, None))
+        k = shard_hint(k, (FREE, FREE, None, None))
+        v = shard_hint(v, (FREE, FREE, None, None))
+    return q, k, v
+
+
+def cache_update(cache_arr, update, offset, axis: int = 1):
+    """dynamic_update_slice along ``axis`` at ``offset`` with dtype-consistent
+    indices (x64 mode in the calibration process must not leak int64)."""
+    zero = jnp.zeros((), offset.dtype) if hasattr(offset, "dtype") else 0
+    idx = [zero] * cache_arr.ndim
+    idx[axis] = offset
+    return jax.lax.dynamic_update_slice(cache_arr, update.astype(cache_arr.dtype), tuple(idx))
+
+
+def causal_mask(q_len: int, kv_len: int, q_offset) -> jnp.ndarray:
+    """(q_len, kv_len) boolean mask; query i attends kv j iff j <= i+offset."""
+    qi = jnp.arange(q_len)[:, None] + q_offset
+    kj = jnp.arange(kv_len)[None, :]
+    return kj <= qi
+
+
+def prefix_lm_mask(q_len: int, kv_len: int, prefix_len: int, q_offset) -> jnp.ndarray:
+    """PaliGemma-style: bidirectional over the prefix, causal after."""
+    m = causal_mask(q_len, kv_len, q_offset)
+    kj = jnp.arange(kv_len)[None, :]
+    return m | (kj < prefix_len)
+
+
+def attention(
+    q: jnp.ndarray,  # (B, Sq, H, Dq)
+    k: jnp.ndarray,  # (B, Skv, K, Dq)
+    v: jnp.ndarray,  # (B, Skv, K, Dv)
+    mask,  # (Sq, Skv) bool or None
+    scale: float,
+) -> jnp.ndarray:
+    """GQA attention: H query heads grouped over K kv heads. Returns
+    (B, Sq, H, Dv).  Softmax in f32."""
+    b, sq, h, dq = q.shape
+    kheads = k.shape[2]
+    g = h // kheads
+    q = q.reshape(b, sq, kheads, g, dq)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", q, k).astype(jnp.float32) * scale
+    if mask is not None:
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+    return out.reshape(b, sq, h, v.shape[-1])
+
+
+def mlp_block(p: dict, x: jnp.ndarray, act: str) -> jnp.ndarray:
+    """Gated MLP: SwiGLU (silu) or GeGLU (gelu)."""
+    g = apply_linear(p["wg"], x)
+    u = apply_linear(p["wu"], x)
+    if act == "silu":
+        h = jax.nn.silu(g) * u
+    else:
+        h = jax.nn.gelu(g, approximate=True) * u
+    return apply_linear(p["wd"], h)
+
+
+def gqa_attention_block(
+    p: dict,
+    x: jnp.ndarray,  # (B, S, D)
+    positions: jnp.ndarray,  # (B, S)
+    cfg,
+    mask,
+    cache=None,  # optional dict(k=(B,Smax,K,hd), v=..., offset scalar)
+):
+    """Returns (out (B,S,D), new_cache)."""
+    b, s, _ = x.shape
+    h, kh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = apply_linear(p["wq"], x).reshape(b, s, h, hd)
+    k = apply_linear(p["wk"], x).reshape(b, s, kh, hd)
+    v = apply_linear(p["wv"], x).reshape(b, s, kh, hd)
+    q, k, v = attn_qkv_hints(q, k, v)  # heads- or seq-sharded (§Perf)
+    if cfg.rope_theta > 0:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    new_cache = None
+    if cache is not None:
+        off = cache["offset"]
+        kc = cache_update(cache["k"], k, off)
+        vc = cache_update(cache["v"], v, off)
+        new_cache = dict(k=kc, v=vc, offset=off + s)
+        k, v = kc.astype(x.dtype), vc.astype(x.dtype)
+    out = attention(q, k, v, mask, scale=1.0 / (hd**0.5))
+    out = apply_linear(p["wo"], out.reshape(b, s, h * hd))
+    return out, new_cache

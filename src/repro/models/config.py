@@ -1,0 +1,168 @@
+"""Unified architecture configuration for the 10 assigned model families."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+
+    act: str = "silu"  # silu (SwiGLU) | gelu (GeGLU)
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    logit_softcap: float = 0.0
+    embed_scale: bool = False  # gemma multiplies embeddings by sqrt(d)
+
+    # --- attention variant ---
+    attn_kind: str = "gqa"  # gqa | mla | none
+    # MLA (deepseek)
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    qk_rope_dim: int = 0
+    qk_nope_dim: int = 0
+    v_head_dim: int = 0
+
+    # --- MoE ---
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    moe_top_k: int = 0
+    d_expert: int = 0
+    n_dense_layers: int = 0  # leading dense FFN layers (deepseek)
+    d_ff_dense: int = 0  # FFN width of those leading dense layers
+    router_fn: str = "softmax"  # softmax (v2) | sigmoid (v3)
+    capacity_factor: float = 1.25
+    moe_impl: str = "dense"  # dense (all-experts) | ep (expert-parallel shard_map)
+
+    # --- SSM (mamba2) ---
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_groups: int = 1
+    ssm_chunk: int = 128
+
+    # --- hybrid (zamba2) ---
+    hybrid_attn_every: int = 0  # apply the shared attention block every N layers
+
+    # --- encoder-decoder (whisper) ---
+    is_encoder_decoder: bool = False
+    n_encoder_layers: int = 0
+    encoder_downsample: int = 1  # conv-stub frames = seq_len // this
+
+    # --- VLM (paligemma) ---
+    n_prefix_tokens: int = 0  # precomputed patch embeddings (stub frontend)
+
+    # --- MTP (deepseek v3) ---
+    mtp_depth: int = 0
+
+    # --- serving optimizations (§Perf hillclimb knobs) ---
+    mla_absorb: bool = False  # weight-absorbed MLA attention (deepseek serve)
+
+    # numerics
+    dtype: str = "bfloat16"
+    # activation checkpointing for the training path: none | full | dots
+    remat: str = "none"
+    # unroll layer scans (dry-run cost extrapolation only)
+    unroll: bool = False
+
+    # ---- derived ----
+    @property
+    def q_dim(self) -> int:
+        if self.attn_kind == "mla":
+            return self.n_heads * (self.qk_nope_dim + self.qk_rope_dim)
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    @property
+    def o_in_dim(self) -> int:
+        if self.attn_kind == "mla":
+            return self.n_heads * self.v_head_dim
+        return self.n_heads * self.head_dim
+
+    @property
+    def d_inner(self) -> int:  # mamba2
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_nheads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    @property
+    def conv_dim(self) -> int:
+        return self.d_inner + 2 * self.ssm_groups * self.ssm_state
+
+    def n_params(self) -> int:
+        """Total parameter count (embedding included)."""
+        from repro.models.params import count_params_config
+
+        return count_params_config(self)
+
+    def n_active_params(self) -> int:
+        """Active-per-token parameters (MoE: only routed top-k + shared)."""
+        from repro.models.params import count_params_config
+
+        return count_params_config(self, active_only=True)
+
+    def sub_quadratic(self) -> bool:
+        return self.family in ("ssm", "hybrid")
+
+    def has_decode(self) -> bool:
+        return True  # all assigned archs have an autoregressive decoder
+
+
+def reduced(cfg: ModelConfig, **overrides) -> ModelConfig:
+    """A tiny same-family config for CPU smoke tests."""
+    if cfg.n_kv_heads == 0:
+        kv_small = 0
+    elif cfg.n_kv_heads == 1:
+        kv_small = 1  # keep MQA character
+    elif cfg.n_kv_heads == cfg.n_heads:
+        kv_small = 4  # MHA
+    else:
+        kv_small = 2  # GQA
+    small = dict(
+        n_layers=min(cfg.n_layers, 2 if cfg.family != "hybrid" else 4),
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=kv_small,
+        head_dim=16,
+        d_ff=128,
+        vocab_size=256,
+        dtype="float32",  # tight numerics for CPU smoke tests
+    )
+    if cfg.attn_kind == "mla":
+        small.update(
+            q_lora_rank=32, kv_lora_rank=16, qk_rope_dim=8, qk_nope_dim=8,
+            v_head_dim=16,
+        )
+    if cfg.n_experts:
+        small.update(n_experts=8, moe_top_k=2, d_expert=32,
+                     n_shared_experts=min(cfg.n_shared_experts, 1),
+                     n_dense_layers=min(cfg.n_dense_layers, 1), d_ff_dense=128)
+    if cfg.ssm_state:
+        small.update(ssm_state=16, ssm_head_dim=16, ssm_chunk=16)
+    if cfg.hybrid_attn_every:
+        small.update(hybrid_attn_every=2)
+    if cfg.is_encoder_decoder:
+        small.update(n_encoder_layers=2)
+    if cfg.n_prefix_tokens:
+        small.update(n_prefix_tokens=8)
+    if cfg.mtp_depth:
+        small.update(mtp_depth=1)
+    small.update(overrides)
+    return dataclasses.replace(cfg, **small)

@@ -1,0 +1,191 @@
+"""DeepSeek-V2/V3 decoder: MLA attention + (shared + routed top-k) MoE FFN.
+
+Layer stack = ``n_dense_layers`` leading dense-FFN layers (scanned) followed
+by MoE layers (scanned).  Optional MTP (multi-token-prediction, V3): one
+extra transformer block predicting token t+2, used as an auxiliary training
+loss — see ``mtp_loss``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import causal_mask, mlp_block, rms_norm
+from repro.models.remat import maybe_remat, scan_layers
+from repro.models.mla import init_mla_params, mla_attention_block
+from repro.models.moe import init_moe_params, moe_block
+from repro.models.transformer import _init_linear, embed_tokens, unembed
+
+
+def _init_block(cfg, key, dtype, moe: bool):
+    k1, k2 = jax.random.split(key)
+    p = {
+        "attn_norm": jnp.ones((cfg.d_model,), dtype),
+        "attn": init_mla_params(cfg, k1, dtype),
+        "mlp_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+    if moe:
+        p["moe"] = init_moe_params(cfg, k2, dtype)
+    else:
+        ks = jax.random.split(k2, 3)
+        ff = cfg.d_ff_dense or cfg.d_ff
+        p["mlp"] = {
+            "wg": _init_linear(ks[0], cfg.d_model, ff, dtype),
+            "wu": _init_linear(ks[1], cfg.d_model, ff, dtype),
+            "wd": _init_linear(ks[2], ff, cfg.d_model, dtype),
+        }
+    return p
+
+
+def init_params(cfg, key, max_seq: int = 0):
+    dtype = jnp.dtype(cfg.dtype)
+    k_embed, k_dense, k_moe, k_head, k_mtp = jax.random.split(key, 5)
+    nd = cfg.n_dense_layers
+    nm = cfg.n_layers - nd
+    params = {
+        "embed": (jax.random.normal(k_embed, (cfg.vocab_size, cfg.d_model)) * 0.02).astype(dtype),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+        "lm_head": _init_linear(k_head, cfg.d_model, cfg.vocab_size, dtype),
+    }
+    if nd > 0:
+        keys = jax.random.split(k_dense, nd)
+        params["dense_layers"] = jax.vmap(
+            lambda k: _init_block(cfg, k, jnp.float32, moe=False)
+        )(keys)
+        params["dense_layers"] = jax.tree.map(lambda a: a.astype(dtype), params["dense_layers"])
+    keys = jax.random.split(k_moe, nm)
+    params["moe_layers"] = jax.tree.map(
+        lambda a: a.astype(dtype),
+        jax.vmap(lambda k: _init_block(cfg, k, jnp.float32, moe=True))(keys),
+    )
+    if cfg.mtp_depth > 0:
+        params["mtp"] = {
+            "proj": _init_linear(k_mtp, 2 * cfg.d_model, cfg.d_model, dtype),
+            "block": _init_block(cfg, k_mtp, dtype, moe=False),
+            "norm": jnp.ones((cfg.d_model,), dtype),
+        }
+    return params
+
+
+def _block_forward(cfg, lp, x, positions, mask, cache, moe: bool, moe_impl: str):
+    h = rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+    a, new_cache = mla_attention_block(cfg, lp["attn"], h, positions, mask, cache)
+    x = x + a
+    h = rms_norm(x, lp["mlp_norm"], cfg.norm_eps)
+    if moe:
+        x = x + moe_block(cfg, lp["moe"], h, impl=moe_impl)
+    else:
+        x = x + mlp_block(lp["mlp"], h, cfg.act)
+    return x, new_cache
+
+
+def _run_stack(cfg, layers, x, positions, mask, cache, moe: bool, moe_impl: str):
+    if cache is None:
+
+        def body(xc, lp):
+            y, _ = _block_forward(cfg, lp, xc, positions, mask, None, moe, moe_impl)
+            return y, None
+
+        x, _ = scan_layers(cfg, maybe_remat(cfg, body), x, layers)
+        return x, None
+
+    offset = cache["offset"]
+
+    def body(xc, xs):
+        lp, ck, cr = xs
+        y, nc = _block_forward(
+            cfg, lp, xc, positions, mask,
+            dict(c_kv=ck, k_rope=cr, offset=offset), moe, moe_impl,
+        )
+        return y, (nc["c_kv"], nc["k_rope"])
+
+    x, (nk, nr) = scan_layers(cfg, body, x, (layers, cache["c_kv"], cache["k_rope"]))
+    return x, dict(c_kv=nk, k_rope=nr, offset=offset + positions.shape[-1])
+
+
+def _backbone(cfg, params, x, positions, mask, caches, moe_impl):
+    dense_cache = None if caches is None else caches.get("dense")
+    moe_cache = None if caches is None else caches["moe"]
+    new_caches = {}
+    if "dense_layers" in params:
+        x, nc = _run_stack(cfg, params["dense_layers"], x, positions, mask, dense_cache, False, moe_impl)
+        new_caches["dense"] = nc
+    x, nc = _run_stack(cfg, params["moe_layers"], x, positions, mask, moe_cache, True, moe_impl)
+    new_caches["moe"] = nc
+    return x, (new_caches if caches is not None else None)
+
+
+def forward(cfg, params, tokens, moe_impl: str = None, return_hidden: bool = False):
+    moe_impl = moe_impl or cfg.moe_impl
+    x = embed_tokens(cfg, params, tokens)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    mask = causal_mask(s, s, 0)
+    x, _ = _backbone(cfg, params, x, positions, mask, None, moe_impl)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(cfg, params, x)
+    if return_hidden:
+        return logits, x
+    return logits
+
+
+def mtp_logits(cfg, params, tokens, hidden):
+    """V3 MTP head: h'_t = block(proj([norm(h_t); emb(tok_{t+1})])) predicts
+    token t+2.  hidden: final-norm'd backbone states (B, S, D)."""
+    from repro.quant.qlinear import apply_linear
+
+    emb_next = embed_tokens(cfg, params, tokens[:, 1:])  # (B, S-1, D)
+    h = hidden[:, :-1]
+    z = jnp.concatenate([rms_norm(h, params["mtp"]["norm"], cfg.norm_eps), emb_next], axis=-1)
+    z = apply_linear(params["mtp"]["proj"], z)
+    b, s, _ = z.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    mask = causal_mask(s, s, 0)
+    z, _ = _block_forward(cfg, params["mtp"]["block"], z, positions, mask, None, False, "dense")
+    return unembed(cfg, params, z)  # (B, S-1, V) — predicts tokens[:, 2:]
+
+
+def init_cache(cfg, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    def stack(n):
+        return dict(
+            c_kv=jnp.zeros((n, batch, max_seq, cfg.kv_lora_rank), dtype),
+            k_rope=jnp.zeros((n, batch, max_seq, cfg.qk_rope_dim), dtype),
+            offset=jnp.zeros((), jnp.int32),
+        )
+
+    caches = {"moe": stack(cfg.n_layers - cfg.n_dense_layers)}
+    if cfg.n_dense_layers > 0:
+        caches["dense"] = stack(cfg.n_dense_layers)
+    return caches
+
+
+def _sync_offsets(caches, off):
+    for c in caches.values():
+        c["offset"] = off
+    return caches
+
+
+def prefill(cfg, params, tokens, caches, moe_impl: str = None):
+    moe_impl = moe_impl or cfg.moe_impl
+    x = embed_tokens(cfg, params, tokens)
+    b, s, _ = x.shape
+    kv_len = caches["moe"]["c_kv"].shape[2]
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    mask = causal_mask(s, kv_len, 0)
+    x, caches = _backbone(cfg, params, x, positions, mask, caches, moe_impl)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return unembed(cfg, params, x[:, -1:]), caches
+
+
+def decode_step(cfg, params, tokens, caches, moe_impl: str = None):
+    moe_impl = moe_impl or cfg.moe_impl
+    x = embed_tokens(cfg, params, tokens)
+    b = x.shape[0]
+    offset = caches["moe"]["offset"]
+    positions = jnp.broadcast_to(offset, (b, 1))
+    kv_len = caches["moe"]["c_kv"].shape[2]
+    mask = (jnp.arange(kv_len) <= offset)[None, :]
+    x, caches = _backbone(cfg, params, x, positions, mask, caches, moe_impl)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return unembed(cfg, params, x), caches

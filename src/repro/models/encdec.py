@@ -1,0 +1,223 @@
+"""Whisper-style encoder-decoder backbone.
+
+Per the assignment, the conv audio frontend is a STUB: ``input_specs`` feeds
+precomputed frame embeddings (B, T_enc, D) with T_enc = seq_len //
+``encoder_downsample``.  LayerNorm (γ, β), non-gated GELU MLP, sinusoidal
+encoder positions, learned decoder positions, cross-attention with a
+once-per-request cached encoder K/V.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (
+    attention,
+    attn_qkv_hints,
+    cache_update,
+    causal_mask,
+    layer_norm,
+    sinusoidal_positions,
+)
+from repro.models.transformer import _init_linear
+from repro.models.remat import maybe_remat, scan_layers
+from repro.quant.qlinear import apply_linear
+
+MAX_DEC_POS = 4096  # learned decoder position table size (smoke/serve scale)
+
+
+def _ln(d, dtype):
+    return dict(g=jnp.ones((d,), dtype), b=jnp.zeros((d,), dtype))
+
+
+def _attn_params(cfg, key, dtype):
+    ks = jax.random.split(key, 4)
+    h, hd = cfg.n_heads, cfg.head_dim
+    return {
+        "wq": _init_linear(ks[0], cfg.d_model, h * hd, dtype),
+        "wk": _init_linear(ks[1], cfg.d_model, h * hd, dtype),
+        "wv": _init_linear(ks[2], cfg.d_model, h * hd, dtype),
+        "wo": _init_linear(ks[3], h * hd, cfg.d_model, dtype),
+    }
+
+
+def _mlp_params(cfg, key, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "wi": _init_linear(k1, cfg.d_model, cfg.d_ff, dtype),
+        "wo": _init_linear(k2, cfg.d_ff, cfg.d_model, dtype),
+    }
+
+
+def _enc_layer(cfg, key, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "attn_norm": _ln(cfg.d_model, dtype),
+        "attn": _attn_params(cfg, k1, dtype),
+        "mlp_norm": _ln(cfg.d_model, dtype),
+        "mlp": _mlp_params(cfg, k2, dtype),
+    }
+
+
+def _dec_layer(cfg, key, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "attn_norm": _ln(cfg.d_model, dtype),
+        "attn": _attn_params(cfg, k1, dtype),
+        "xattn_norm": _ln(cfg.d_model, dtype),
+        "xattn": _attn_params(cfg, k2, dtype),
+        "mlp_norm": _ln(cfg.d_model, dtype),
+        "mlp": _mlp_params(cfg, k3, dtype),
+    }
+
+
+def init_params(cfg, key, max_seq: int = 0):
+    dtype = jnp.dtype(cfg.dtype)
+    n_pos = max(MAX_DEC_POS, max_seq)
+    k_emb, k_pos, k_enc, k_dec, k_head = jax.random.split(key, 5)
+    enc_keys = jax.random.split(k_enc, cfg.n_encoder_layers)
+    dec_keys = jax.random.split(k_dec, cfg.n_layers)
+    return {
+        "embed": (jax.random.normal(k_emb, (cfg.vocab_size, cfg.d_model)) * 0.02).astype(dtype),
+        "dec_pos": (jax.random.normal(k_pos, (n_pos, cfg.d_model)) * 0.01).astype(dtype),
+        "enc_layers": jax.tree.map(
+            lambda a: a.astype(dtype),
+            jax.vmap(lambda k: _enc_layer(cfg, k, jnp.float32))(enc_keys),
+        ),
+        "dec_layers": jax.tree.map(
+            lambda a: a.astype(dtype),
+            jax.vmap(lambda k: _dec_layer(cfg, k, jnp.float32))(dec_keys),
+        ),
+        "enc_norm": _ln(cfg.d_model, dtype),
+        "dec_norm": _ln(cfg.d_model, dtype),
+        "lm_head": _init_linear(k_head, cfg.d_model, cfg.vocab_size, dtype),
+    }
+
+
+def _mha(cfg, p, xq, xkv, mask, cache=None):
+    """Full multi-head attention (whisper has H == KV heads)."""
+    b, sq, _ = xq.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    q = apply_linear(p["wq"], xq).reshape(b, sq, h, hd)
+    k = apply_linear(p["wk"], xkv).reshape(b, xkv.shape[1], h, hd)
+    v = apply_linear(p["wv"], xkv).reshape(b, xkv.shape[1], h, hd)
+    q, k, v = attn_qkv_hints(q, k, v)
+    new_cache = None
+    if cache is not None:
+        off = cache["offset"]
+        kc = cache_update(cache["k"], k, off)
+        vc = cache_update(cache["v"], v, off)
+        new_cache = dict(k=kc, v=vc, offset=off + sq)
+        k, v = kc.astype(xq.dtype), vc.astype(xq.dtype)
+    out = attention(q, k, v, mask, 1.0 / (hd**0.5))
+    return apply_linear(p["wo"], out.reshape(b, sq, h * hd)), new_cache
+
+
+def _gelu_mlp(p, x):
+    return apply_linear(p["wo"], jax.nn.gelu(apply_linear(p["wi"], x), approximate=True))
+
+
+def encode(cfg, params, frames):
+    """frames: (B, T_enc, D) precomputed embeddings (conv-stub output)."""
+    b, t, d = frames.shape
+    x = frames + sinusoidal_positions(t, d).astype(frames.dtype)[None]
+    eps = cfg.norm_eps
+
+    def body(xc, lp):
+        h = layer_norm(xc, lp["attn_norm"]["g"], lp["attn_norm"]["b"], eps)
+        a, _ = _mha(cfg, lp["attn"], h, h, None)
+        xc = xc + a
+        h = layer_norm(xc, lp["mlp_norm"]["g"], lp["mlp_norm"]["b"], eps)
+        xc = xc + _gelu_mlp(lp["mlp"], h)
+        return xc, None
+
+    x, _ = scan_layers(cfg, maybe_remat(cfg, body), x, params["enc_layers"])
+    return layer_norm(x, params["enc_norm"]["g"], params["enc_norm"]["b"], eps)
+
+
+def _decoder(cfg, params, x, enc_out, mask, cache=None, pos_offset=0):
+    """cache: dict(k,v stacked (L,...), offset) for self-attn; cross-attn
+    recomputes K/V from enc_out (cached upstream as enc_out itself)."""
+    eps = cfg.norm_eps
+
+    def layer(xc, lp, ck=None, cv=None, offset=None):
+        c = None if ck is None else dict(k=ck, v=cv, offset=offset)
+        h = layer_norm(xc, lp["attn_norm"]["g"], lp["attn_norm"]["b"], eps)
+        a, nc = _mha(cfg, lp["attn"], h, h, mask, c)
+        xc = xc + a
+        h = layer_norm(xc, lp["xattn_norm"]["g"], lp["xattn_norm"]["b"], eps)
+        a, _ = _mha(cfg, lp["xattn"], h, enc_out, None)
+        xc = xc + a
+        h = layer_norm(xc, lp["mlp_norm"]["g"], lp["mlp_norm"]["b"], eps)
+        xc = xc + _gelu_mlp(lp["mlp"], h)
+        return xc, nc
+
+    if cache is None:
+
+        def body(xc, lp):
+            y, _ = layer(xc, lp)
+            return y, None
+
+        x, _ = scan_layers(cfg, maybe_remat(cfg, body), x, params["dec_layers"])
+        return x, None
+
+    offset = cache["offset"]
+
+    def body(xc, xs):
+        lp, ck, cv = xs
+        y, nc = layer(xc, lp, ck, cv, offset)
+        return y, (nc["k"], nc["v"])
+
+    x, (nk, nv) = scan_layers(cfg, body, x, (params["dec_layers"], cache["k"], cache["v"]))
+    return x, dict(k=nk, v=nv, offset=offset + x.shape[1])
+
+
+def forward(cfg, params, tokens, frames):
+    """Training forward: encoder on frames, teacher-forced decoder on tokens."""
+    enc_out = encode(cfg, params, frames)
+    b, s = tokens.shape
+    x = params["embed"][tokens] + params["dec_pos"][:s][None].astype(params["embed"].dtype)
+    mask = causal_mask(s, s, 0)
+    x, _ = _decoder(cfg, params, x, enc_out, mask)
+    x = layer_norm(x, params["dec_norm"]["g"], params["dec_norm"]["b"], cfg.norm_eps)
+    return (x @ params["lm_head"].astype(x.dtype)).astype(jnp.float32)
+
+
+def init_cache(cfg, batch: int, max_seq: int, dtype=jnp.bfloat16, enc_len: int = 0):
+    h, hd = cfg.n_heads, cfg.head_dim
+    return dict(
+        self=dict(
+            k=jnp.zeros((cfg.n_layers, batch, max_seq, h, hd), dtype),
+            v=jnp.zeros((cfg.n_layers, batch, max_seq, h, hd), dtype),
+            offset=jnp.zeros((), jnp.int32),
+        ),
+        enc_out=jnp.zeros((batch, enc_len, cfg.d_model), dtype),
+    )
+
+
+def prefill(cfg, params, tokens, cache, frames):
+    enc_out = encode(cfg, params, frames)
+    cache = dict(cache, enc_out=enc_out.astype(cache["enc_out"].dtype))
+    b, s = tokens.shape
+    x = params["embed"][tokens] + params["dec_pos"][:s][None].astype(params["embed"].dtype)
+    kv_len = cache["self"]["k"].shape[2]
+    mask = causal_mask(s, kv_len, 0)
+    x, sc = _decoder(cfg, params, x, enc_out, mask, cache["self"])
+    cache = dict(cache, self=sc)
+    x = layer_norm(x, params["dec_norm"]["g"], params["dec_norm"]["b"], cfg.norm_eps)
+    return (x[:, -1:] @ params["lm_head"].astype(x.dtype)).astype(jnp.float32), cache
+
+
+def decode_step(cfg, params, tokens, cache):
+    b = tokens.shape[0]
+    offset = cache["self"]["offset"]
+    pos_emb = jnp.take(params["dec_pos"], jnp.minimum(offset, params["dec_pos"].shape[0] - 1), axis=0)
+    x = params["embed"][tokens] + pos_emb[None, None].astype(params["embed"].dtype)[:, 0]
+    kv_len = cache["self"]["k"].shape[2]
+    mask = (jnp.arange(kv_len) <= offset)[None, :]
+    enc_out = cache["enc_out"].astype(x.dtype)
+    x, sc = _decoder(cfg, params, x, enc_out, mask, cache["self"])
+    cache = dict(cache, self=sc)
+    x = layer_norm(x, params["dec_norm"]["g"], params["dec_norm"]["b"], cfg.norm_eps)
+    return (x @ params["lm_head"].astype(x.dtype)).astype(jnp.float32), cache

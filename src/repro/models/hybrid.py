@@ -1,0 +1,190 @@
+"""Zamba2-style hybrid: a stack of Mamba2 blocks with a SHARED full-attention
+transformer block applied every ``hybrid_attn_every`` layers.
+
+The shared block has a single weight copy (closure-captured, not stacked);
+each of its applications keeps its own KV-cache slot.  Inside the layer scan
+a ``lax.cond`` gates the shared block — XLA lowers this to a real runtime
+conditional, so attention cost is only paid on the layers that use it.
+
+Simplifications vs. the released Zamba2 (noted in DESIGN.md): one shared
+block instead of two alternating; the shared block reads the residual stream
+directly (no concat-with-embedding projection, no per-invocation LoRA).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import causal_mask, gqa_attention_block, mlp_block, rms_norm
+from repro.models.mamba2 import init_mamba_cache, init_mamba_params, mamba_block
+from repro.models.remat import maybe_remat, scan_layers
+from repro.models.transformer import _init_linear, embed_tokens, unembed
+
+
+def n_attn_apps(cfg) -> int:
+    return cfg.n_layers // cfg.hybrid_attn_every
+
+
+def init_params(cfg, key, max_seq: int = 0):
+    dtype = jnp.dtype(cfg.dtype)
+    k_embed, k_layers, k_shared, k_head = jax.random.split(key, 4)
+    keys = jax.random.split(k_layers, cfg.n_layers)
+    layers = jax.vmap(lambda k: init_mamba_params(cfg, k, jnp.float32))(keys)
+    layers = jax.tree.map(lambda a: a.astype(dtype) if a.dtype == jnp.float32 and a.ndim > 1 else a, layers)
+    ks = jax.random.split(k_shared, 8)
+    h, kh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    shared = {
+        "attn_norm": jnp.ones((cfg.d_model,), dtype),
+        "attn": {
+            "wq": _init_linear(ks[0], cfg.d_model, h * hd, dtype),
+            "wk": _init_linear(ks[1], cfg.d_model, kh * hd, dtype),
+            "wv": _init_linear(ks[2], cfg.d_model, kh * hd, dtype),
+            "wo": _init_linear(ks[3], h * hd, cfg.d_model, dtype),
+        },
+        "mlp_norm": jnp.ones((cfg.d_model,), dtype),
+        "mlp": {
+            "wg": _init_linear(ks[4], cfg.d_model, cfg.d_ff, dtype),
+            "wu": _init_linear(ks[5], cfg.d_model, cfg.d_ff, dtype),
+            "wd": _init_linear(ks[6], cfg.d_ff, cfg.d_model, dtype),
+        },
+    }
+    return {
+        "embed": (jax.random.normal(k_embed, (cfg.vocab_size, cfg.d_model)) * 0.02).astype(dtype),
+        "layers": layers,
+        "shared": shared,
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+        "lm_head": _init_linear(k_head, cfg.d_model, cfg.vocab_size, dtype),
+    }
+
+
+def _shared_block(cfg, sp, x, positions, mask, attn_cache):
+    h = rms_norm(x, sp["attn_norm"], cfg.norm_eps)
+    a, new_cache = gqa_attention_block(sp["attn"], h, positions, cfg, mask, attn_cache)
+    x = x + a
+    h = rms_norm(x, sp["mlp_norm"], cfg.norm_eps)
+    x = x + mlp_block(sp["mlp"], h, cfg.act)
+    return x, new_cache
+
+
+def _run(cfg, params, x, positions, mask, caches):
+    """caches: None (training) or dict(mamba={conv (L,...), ssm (L,...)},
+    attn={k (A,...), v (A,...), offset})."""
+    every = cfg.hybrid_attn_every
+    shared = params["shared"]
+    use_cache = caches is not None
+    seq = positions.shape[-1]
+
+    if use_cache:
+        attn_k, attn_v = caches["attn"]["k"], caches["attn"]["v"]
+        offset = caches["attn"]["offset"]
+    else:
+        # training still needs the shared attention to run — no kv cache
+        attn_k = attn_v = None
+        offset = 0
+
+    def body(carry, xs):
+        if use_cache:
+            x, ak, av = carry
+            lp, (conv_c, ssm_c), i = xs
+            mcache = dict(conv=conv_c, ssm=ssm_c)
+        else:
+            x = carry
+            lp, i = xs
+            mcache = None
+
+        out, new_mcache = mamba_block(cfg, lp, x, mcache)
+        x = x + out
+
+        app_idx = i // every
+        is_attn = (i % every) == (every - 1)
+
+        if use_cache:
+
+            def with_attn(op):
+                x, ak, av = op
+                c = dict(
+                    k=jax.lax.dynamic_index_in_dim(ak, app_idx, 0, keepdims=False),
+                    v=jax.lax.dynamic_index_in_dim(av, app_idx, 0, keepdims=False),
+                    offset=offset,
+                )
+                y, nc = _shared_block(cfg, shared, x, positions, mask, c)
+                ak = jax.lax.dynamic_update_index_in_dim(ak, nc["k"], app_idx, 0)
+                av = jax.lax.dynamic_update_index_in_dim(av, nc["v"], app_idx, 0)
+                return y, ak, av
+
+            x, ak, av = jax.lax.cond(is_attn, with_attn, lambda op: op, (x, ak, av))
+            return (x, ak, av), (new_mcache["conv"], new_mcache["ssm"])
+
+        x = jax.lax.cond(
+            is_attn,
+            lambda z: _shared_block(cfg, shared, z, positions, mask, None)[0],
+            lambda z: z,
+            x,
+        )
+        return x, None
+
+    idx = jnp.arange(cfg.n_layers)
+    if use_cache:
+        (x, ak, av), (nconv, nssm) = scan_layers(
+            cfg,
+            body,
+            (x, attn_k, attn_v),
+            (params["layers"], (caches["mamba"]["conv"], caches["mamba"]["ssm"]), idx),
+        )
+        new_caches = dict(
+            mamba=dict(conv=nconv, ssm=nssm),
+            attn=dict(k=ak, v=av, offset=offset + seq),
+        )
+        return x, new_caches
+    x, _ = scan_layers(cfg, maybe_remat(cfg, body), x, (params["layers"], idx))
+    return x, None
+
+
+def init_cache(cfg, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    apps = n_attn_apps(cfg)
+    mc = init_mamba_cache(cfg, batch, dtype)
+    return dict(
+        mamba=dict(
+            conv=jnp.zeros((cfg.n_layers,) + mc["conv"].shape, dtype),
+            ssm=jnp.zeros((cfg.n_layers,) + mc["ssm"].shape, jnp.float32),
+        ),
+        attn=dict(
+            k=jnp.zeros((apps, batch, max_seq, cfg.n_kv_heads, cfg.head_dim), dtype),
+            v=jnp.zeros((apps, batch, max_seq, cfg.n_kv_heads, cfg.head_dim), dtype),
+            offset=jnp.zeros((), jnp.int32),
+        ),
+    )
+
+
+def forward(cfg, params, tokens):
+    x = embed_tokens(cfg, params, tokens)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    mask = causal_mask(s, s, 0)
+    x, _ = _run(cfg, params, x, positions, mask, None)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return unembed(cfg, params, x)
+
+
+def prefill(cfg, params, tokens, caches):
+    x = embed_tokens(cfg, params, tokens)
+    b, s, _ = x.shape
+    kv_len = caches["attn"]["k"].shape[2]
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    mask = causal_mask(s, kv_len, 0)
+    x, caches = _run(cfg, params, x, positions, mask, caches)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return unembed(cfg, params, x[:, -1:]), caches
+
+
+def decode_step(cfg, params, tokens, caches):
+    x = embed_tokens(cfg, params, tokens)
+    b = x.shape[0]
+    offset = caches["attn"]["offset"]
+    positions = jnp.broadcast_to(offset, (b, 1))
+    kv_len = caches["attn"]["k"].shape[2]
+    mask = (jnp.arange(kv_len) <= offset)[None, :]
+    x, caches = _run(cfg, params, x, positions, mask, caches)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return unembed(cfg, params, x), caches

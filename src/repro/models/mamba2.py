@@ -1,0 +1,262 @@
+"""Mamba-2 block — SSD (state-space duality) with chunked scan.
+
+Recurrence per head (state N, head dim P):
+    s_t = exp(dt_t·A) · s_{t-1} + dt_t · B_t ⊗ x_t          (N, P)
+    y_t = C_t · s_t + D · x_t
+
+Chunked algorithm (Dao & Gu 2024): the sequence is split into chunks of Q
+steps; within a chunk the contribution is an attention-like quadratic form,
+across chunks a short sequential scan carries the (N, P) states.  This keeps
+the work O(L·Q·(N+P)) instead of O(L²) — the reason mamba2/zamba2 are the
+`long_500k`-eligible architectures.
+
+`ssd_naive` is the step-by-step oracle used in tests.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import rms_norm
+from repro.quant.qlinear import apply_linear
+
+
+# ---------------------------------------------------------------------------
+# parameter init
+# ---------------------------------------------------------------------------
+
+
+def init_mamba_params(cfg, key, dtype):
+    ks = jax.random.split(key, 5)
+    d = cfg.d_model
+    di = cfg.d_inner
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    h = cfg.ssm_nheads
+    proj_out = 2 * di + 2 * g * n + h  # [z, x, B, C, dt]
+
+    def lin(k, dim_in, dim_out):
+        return (jax.random.normal(k, (dim_in, dim_out), jnp.float32) * dim_in**-0.5).astype(dtype)
+
+    return {
+        "norm": jnp.ones((d,), dtype),
+        "in_proj": lin(ks[0], d, proj_out),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, cfg.conv_dim)) * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((cfg.conv_dim,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "out_norm": jnp.ones((di,), dtype),
+        "out_proj": lin(ks[2], di, d),
+    }
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+
+
+def ssd_chunked(x, dt, a, b_mat, c_mat, chunk: int, init_state=None):
+    """x: (B,L,H,P); dt: (B,L,H); a: (H,) negative; b_mat/c_mat: (B,L,H,N)
+    (already broadcast over heads).  Returns (y (B,L,H,P), final_state
+    (B,H,N,P))."""
+    bsz, l, h, p = x.shape
+    n = b_mat.shape[-1]
+    assert l % chunk == 0, (l, chunk)
+    nc = l // chunk
+
+    f32 = jnp.float32
+    xr = x.reshape(bsz, nc, chunk, h, p)
+    dtr = dt.reshape(bsz, nc, chunk, h).astype(f32)
+    br = b_mat.reshape(bsz, nc, chunk, h, n)
+    cr = c_mat.reshape(bsz, nc, chunk, h, n)
+
+    la = dtr * a[None, None, None, :]  # log-decay per step (≤ 0)
+    a_cs = jnp.cumsum(la, axis=2)  # inclusive cumsum within chunk
+    a_sum = a_cs[:, :, -1, :]  # (B,nc,H)
+
+    # ---- intra-chunk (quadratic) term
+    # att(t,s) = C_t·B_s · exp(a_cs[t] - a_cs[s]) · dt_s   for s <= t
+    scores = jnp.einsum("bcqhn,bcshn->bchqs", cr.astype(f32), br.astype(f32))
+    diff = a_cs[:, :, :, None, :] - a_cs[:, :, None, :, :]  # (B,nc,t,s,H)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    decay_ts = jnp.where(
+        tri[None, None, :, :, None], jnp.exp(jnp.clip(diff, -60.0, 0.0)), 0.0
+    )
+    att = (
+        scores
+        * decay_ts.transpose(0, 1, 4, 2, 3)  # (B,nc,H,t,s)
+        * dtr.transpose(0, 1, 3, 2)[:, :, :, None, :]  # dt_s
+    )
+    y_intra = jnp.einsum("bchqs,bcshp->bcqhp", att, xr.astype(f32))
+
+    # ---- chunk-local final states
+    w = jnp.exp(jnp.clip(a_sum[:, :, None, :] - a_cs, -60.0, 0.0)) * dtr  # (B,nc,q,H)
+    s_local = jnp.einsum("bcqhn,bcqh,bcqhp->bchnp", br.astype(f32), w, xr.astype(f32))
+
+    # ---- inter-chunk recurrence (sequential scan over nc)
+    if init_state is None:
+        init_state = jnp.zeros((bsz, h, n, p), f32)
+
+    def step(s_prev, inp):
+        a_sum_c, s_local_c = inp  # (B,H), (B,H,N,P)
+        s_new = jnp.exp(jnp.clip(a_sum_c, -60.0, 0.0))[..., None, None] * s_prev + s_local_c
+        return s_new, s_prev
+
+    # scan over chunk axis: move nc to front
+    final_state, s_prevs = jax.lax.scan(
+        step,
+        init_state.astype(f32),
+        (a_sum.transpose(1, 0, 2), s_local.transpose(1, 0, 2, 3, 4)),
+    )
+    s_prevs = s_prevs.transpose(1, 0, 2, 3, 4)  # (B,nc,H,N,P) state at chunk start
+
+    y_inter = jnp.einsum(
+        "bcqhn,bcqh,bchnp->bcqhp",
+        cr.astype(f32),
+        jnp.exp(jnp.clip(a_cs, -60.0, 0.0)),
+        s_prevs,
+    )
+    y = (y_intra + y_inter).reshape(bsz, l, h, p)
+    return y.astype(x.dtype), final_state
+
+
+def ssd_naive(x, dt, a, b_mat, c_mat, init_state=None):
+    """Sequential oracle (tests)."""
+    bsz, l, h, p = x.shape
+    n = b_mat.shape[-1]
+    f32 = jnp.float32
+    s = jnp.zeros((bsz, h, n, p), f32) if init_state is None else init_state.astype(f32)
+
+    def step(s, t_in):
+        xt, dtt, bt, ct = t_in
+        decay = jnp.exp(dtt.astype(f32) * a)[..., None, None]  # (B,H,1,1)
+        upd = dtt.astype(f32)[..., None, None] * bt.astype(f32)[..., None] * xt.astype(f32)[..., None, :]
+        s = decay * s + upd
+        y = jnp.einsum("bhn,bhnp->bhp", ct.astype(f32), s)
+        return s, y
+
+    xs = (
+        x.transpose(1, 0, 2, 3),
+        dt.transpose(1, 0, 2),
+        b_mat.transpose(1, 0, 2, 3),
+        c_mat.transpose(1, 0, 2, 3),
+    )
+    s, ys = jax.lax.scan(step, s, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), s
+
+
+# ---------------------------------------------------------------------------
+# causal depthwise conv
+# ---------------------------------------------------------------------------
+
+
+def conv1d_causal(x, w, b):
+    """x: (B, L, C); w: (K, C) depthwise; left-padded causal conv."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        xp.astype(jnp.float32),
+        w.astype(jnp.float32)[:, None, :],  # (K, 1, C) HIO for depthwise
+        window_strides=(1,),
+        padding="VALID",
+        dimension_numbers=("NHC", "HIO", "NHC"),
+        feature_group_count=w.shape[1],
+    )
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# full block
+# ---------------------------------------------------------------------------
+
+
+def _split_proj(cfg, zxbcdt):
+    di, g, n, h = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_nheads
+    z = zxbcdt[..., :di]
+    xs = zxbcdt[..., di : 2 * di]
+    b_mat = zxbcdt[..., 2 * di : 2 * di + g * n]
+    c_mat = zxbcdt[..., 2 * di + g * n : 2 * di + 2 * g * n]
+    dt = zxbcdt[..., 2 * di + 2 * g * n :]
+    return z, xs, b_mat, c_mat, dt
+
+
+def _heads(cfg, xs, b_mat, c_mat):
+    bsz, l = xs.shape[:2]
+    h, p = cfg.ssm_nheads, cfg.ssm_head_dim
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    xh = xs.reshape(bsz, l, h, p)
+    rep = h // g
+    bh = jnp.repeat(b_mat.reshape(bsz, l, g, n), rep, axis=2)
+    ch = jnp.repeat(c_mat.reshape(bsz, l, g, n), rep, axis=2)
+    return xh, bh, ch
+
+
+def mamba_block(cfg, p, x, cache=None):
+    """x: (B, L, D) -> (out, new_cache).
+
+    cache = dict(conv (B, K-1, conv_dim), ssm (B, H, N, P)) for decode; the
+    prefill path fills it from the full sequence."""
+    in_dtype = x.dtype
+    x = rms_norm(x, p["norm"], cfg.norm_eps)  # pre-norm (residual added by caller)
+    y, new_cache = mamba_core(cfg, p, x, cache)
+    out = apply_linear(p["out_proj"], y)
+    return out.astype(in_dtype), new_cache
+
+
+def mamba_core(cfg, p, x, cache=None):
+    """Everything between the pre-norm and out_proj: returns the gated,
+    normed SSD output y (B, L, d_inner) — the input of out_proj (captured by
+    the LRC calibration walker)."""
+    bsz, l, _ = x.shape
+    di = cfg.d_inner
+    zxbcdt = apply_linear(p["in_proj"], x)
+    z, xs, b_mat, c_mat, dt = _split_proj(cfg, zxbcdt)
+
+    xbc_raw = jnp.concatenate([xs, b_mat, c_mat], axis=-1)
+    new_cache = None
+    if cache is None:
+        xbc = conv1d_causal(xbc_raw, p["conv_w"], p["conv_b"])
+    else:
+        k = cfg.ssm_conv
+        hist = jnp.concatenate([cache["conv"].astype(xbc_raw.dtype), xbc_raw], axis=1)
+        xbc = conv1d_causal(hist, p["conv_w"], p["conv_b"])[:, k - 1 :]
+        new_cache = dict(conv=hist[:, -(k - 1) :].astype(cache["conv"].dtype))
+    xbc = jax.nn.silu(xbc)
+    xs2 = xbc[..., :di]
+    b2 = xbc[..., di : di + cfg.ssm_groups * cfg.ssm_state]
+    c2 = xbc[..., di + cfg.ssm_groups * cfg.ssm_state :]
+
+    xh, bh, ch = _heads(cfg, xs2, b2, c2)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+
+    init_state = None if cache is None else cache["ssm"]
+    if l == 1 and cache is not None:
+        # single-step decode: direct recurrence
+        y, s = ssd_naive(xh, dt, a, bh, ch, init_state)
+    else:
+        chunk = min(cfg.ssm_chunk, l)
+        while l % chunk:  # ragged lengths (tests) fall back to a divisor
+            chunk -= 1
+        y, s = ssd_chunked(xh, dt, a, bh, ch, chunk, init_state)
+    if new_cache is not None:
+        new_cache["ssm"] = s
+    elif cache is not None:
+        new_cache = dict(ssm=s)
+
+    y = y + cfg_d_skip(p, xh)
+    y = y.reshape(bsz, l, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype), p["out_norm"], cfg.norm_eps)
+    return y, new_cache
+
+
+def cfg_d_skip(p, xh):
+    return p["d_skip"][None, None, :, None].astype(jnp.float32) * xh.astype(jnp.float32)
+
+
+def init_mamba_cache(cfg, batch: int, dtype=jnp.bfloat16):
+    return dict(
+        conv=jnp.zeros((batch, cfg.ssm_conv - 1, cfg.conv_dim), dtype),
+        ssm=jnp.zeros((batch, cfg.ssm_nheads, cfg.ssm_state, cfg.ssm_head_dim), jnp.float32),
+    )

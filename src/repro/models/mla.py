@@ -1,0 +1,161 @@
+"""Multi-head Latent Attention (DeepSeek-V2/V3).
+
+KV states are compressed into a small latent c_kv (kv_lora_rank) plus a
+single shared rope-carrying key head; only (c_kv, k_rope) is cached —
+the memory win that makes 128-head models servable.  Decode recomputes
+per-head K/V from the cached latent ("naive" expansion; the absorbed-matmul
+variant is a §Perf hillclimb item).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import FREE, attention, cache_update, rms_norm, rope, shard_hint
+from repro.quant.qlinear import apply_linear
+
+
+def init_mla_params(cfg, key, dtype):
+    ks = jax.random.split(key, 6)
+    d = cfg.d_model
+    h = cfg.n_heads
+    qk = cfg.qk_nope_dim + cfg.qk_rope_dim
+
+    def lin(k, di, do):
+        return (jax.random.normal(k, (di, do), jnp.float32) * di**-0.5).astype(dtype)
+
+    p = {
+        "wkv_a": lin(ks[0], d, cfg.kv_lora_rank + cfg.qk_rope_dim),
+        "kv_norm": jnp.ones((cfg.kv_lora_rank,), dtype),
+        "wkv_b": lin(ks[1], cfg.kv_lora_rank, h * (cfg.qk_nope_dim + cfg.v_head_dim)),
+        "wo": lin(ks[2], h * cfg.v_head_dim, d),
+    }
+    if cfg.q_lora_rank > 0:
+        p["wq_a"] = lin(ks[3], d, cfg.q_lora_rank)
+        p["q_norm"] = jnp.ones((cfg.q_lora_rank,), dtype)
+        p["wq_b"] = lin(ks[4], cfg.q_lora_rank, h * qk)
+    else:
+        p["wq"] = lin(ks[5], d, h * qk)
+    return p
+
+
+def _queries(cfg, p, x):
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    if "wq_a" in p:
+        cq = rms_norm(apply_linear(p["wq_a"], x), p["q_norm"], cfg.norm_eps)
+        q = apply_linear(p["wq_b"], cq)
+    else:
+        q = apply_linear(p["wq"], x)
+    q = shard_hint(
+        q.reshape(b, s, h, cfg.qk_nope_dim + cfg.qk_rope_dim),
+        (FREE, FREE, "model", FREE),
+    )
+    return q[..., : cfg.qk_nope_dim], q[..., cfg.qk_nope_dim :]
+
+
+def _latent(cfg, p, x, positions):
+    """Returns (c_kv normed (B,S,R), k_rope roped (B,S,rope))."""
+    kv = apply_linear(p["wkv_a"], x)
+    c_kv = rms_norm(kv[..., : cfg.kv_lora_rank], p["kv_norm"], cfg.norm_eps)
+    k_rope = kv[..., cfg.kv_lora_rank :]
+    k_rope = rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0, :]
+    return c_kv, k_rope
+
+
+def _expand_kv(cfg, p, c_kv):
+    """latent (B,S,R) -> k_nope (B,S,H,nope), v (B,S,H,v)."""
+    b, s, _ = c_kv.shape
+    h = cfg.n_heads
+    kvb = shard_hint(
+        apply_linear(p["wkv_b"], c_kv).reshape(
+            b, s, h, cfg.qk_nope_dim + cfg.v_head_dim
+        ),
+        (FREE, FREE, "model", FREE),
+    )
+    return kvb[..., : cfg.qk_nope_dim], kvb[..., cfg.qk_nope_dim :]
+
+
+def _effective_weight(w) -> jnp.ndarray:
+    """Dense (d_in, d_out) view of a weight leaf, including a QLinear's
+    dequantized matrix + low-rank correction (used by the absorbed path,
+    where wkv_b is consumed INSIDE the attention math)."""
+    from repro.quant.qlinear import QLinear, _unpack_w
+
+    if isinstance(w, QLinear):
+        mat = _unpack_w(w).astype(jnp.float32) * w.w_scale[None, :]
+        if w.u is not None:
+            mat = mat + w.v.astype(jnp.float32) @ w.u.astype(jnp.float32).T
+        return mat
+    return w
+
+
+def mla_attention_absorbed(cfg, p, q_nope, q_rope, c_kv, k_rope, mask):
+    """Weight-absorbed MLA attention (DeepSeek's serving trick, §Perf):
+
+    scores_h(t) = (W_k,hᵀ q_nope,h)·c_t + q_rope,h·k_rope,t
+    out_h       = W_v,h · (probs_h · C)
+
+    The per-head K/V are NEVER materialized over the sequence — attention
+    runs directly against the (R + rope)-dim latent cache.  Cuts the
+    O(S·H·(nope+v)) expansion (the dominant bytes of the naive path at 32k)
+    to O(S·(R+rope)).
+    """
+    b, s, h, _ = q_nope.shape
+    r = cfg.kv_lora_rank
+    wkv = _effective_weight(p["wkv_b"]).astype(jnp.float32)
+    wkv = wkv.reshape(r, h, cfg.qk_nope_dim + cfg.v_head_dim)
+    w_k = wkv[..., : cfg.qk_nope_dim]  # (R, H, nope)
+    w_v = wkv[..., cfg.qk_nope_dim :]  # (R, H, v)
+
+    q_abs = shard_hint(
+        jnp.einsum("bshn,rhn->bshr", q_nope.astype(jnp.float32), w_k),
+        (FREE, FREE, "model", FREE),
+    )
+    scores = jnp.einsum("bshr,btr->bhst", q_abs, c_kv.astype(jnp.float32))
+    scores = scores + jnp.einsum(
+        "bshp,btp->bhst", q_rope.astype(jnp.float32), k_rope.astype(jnp.float32)
+    )
+    scale = 1.0 / ((cfg.qk_nope_dim + cfg.qk_rope_dim) ** 0.5)
+    scores = scores * scale
+    if mask is not None:
+        scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhst,btr->bshr", probs, c_kv.astype(jnp.float32))
+    out = jnp.einsum("bshr,rhv->bshv", ctx, w_v)
+    return out.astype(q_nope.dtype)
+
+
+def mla_attention_block(cfg, p, x, positions, mask, cache=None):
+    """Returns (out (B,S,D), new_cache).  cache = dict(c_kv (B,Smax,R),
+    k_rope (B,Smax,rope), offset)."""
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    q_nope, q_rope = _queries(cfg, p, x)
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+    c_kv, k_rope = _latent(cfg, p, x, positions)
+
+    new_cache = None
+    if cache is not None:
+        off = cache["offset"]
+        ckv_c = cache_update(cache["c_kv"], c_kv, off)
+        krope_c = cache_update(cache["k_rope"], k_rope, off)
+        new_cache = dict(c_kv=ckv_c, k_rope=krope_c, offset=off + s)
+        c_kv, k_rope = ckv_c.astype(x.dtype), krope_c.astype(x.dtype)
+
+    if getattr(cfg, "mla_absorb", False):
+        out = mla_attention_absorbed(cfg, p, q_nope, q_rope, c_kv, k_rope, mask)
+    else:
+        k_nope, v = _expand_kv(cfg, p, c_kv)
+        skv = k_nope.shape[1]
+        k = jnp.concatenate(
+            [k_nope,
+             jnp.broadcast_to(k_rope[:, :, None, :], (b, skv, h, cfg.qk_rope_dim))],
+            axis=-1,
+        )
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        scale = 1.0 / ((cfg.qk_nope_dim + cfg.qk_rope_dim) ** 0.5)
+        out = attention(q, k, v, mask, scale)
+    out = apply_linear(p["wo"], out.reshape(b, s, h * cfg.v_head_dim))
+    return out, new_cache

@@ -1,0 +1,199 @@
+"""Model facade: family dispatch for init / forward / prefill / decode / loss.
+
+All functions are pure; ``cfg`` is static (hashable dataclass), params/caches
+are pytrees.  This is the single surface used by the trainer, the serving
+engine, the LRC calibration walker and the dry-run.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import deepseek, encdec, hybrid, transformer
+from repro.models.mamba2 import init_mamba_cache, mamba_block
+from repro.models.common import causal_mask, rms_norm
+from repro.models.remat import maybe_remat, scan_layers
+from repro.models.transformer import embed_tokens, unembed
+
+
+# ---------------------------------------------------------------------------
+# pure-SSM (mamba2) decoder-only model
+# ---------------------------------------------------------------------------
+
+
+def _ssm_init_params(cfg, key, max_seq=0):
+    from repro.models.mamba2 import init_mamba_params
+    from repro.models.transformer import _init_linear
+
+    dtype = jnp.dtype(cfg.dtype)
+    k_embed, k_layers, k_head = jax.random.split(key, 3)
+    keys = jax.random.split(k_layers, cfg.n_layers)
+    layers = jax.vmap(lambda k: init_mamba_params(cfg, k, jnp.float32))(keys)
+    layers = jax.tree.map(
+        lambda a: a.astype(jnp.dtype(cfg.dtype)) if a.ndim > 1 else a, layers
+    )
+    return {
+        "embed": (jax.random.normal(k_embed, (cfg.vocab_size, cfg.d_model)) * 0.02).astype(dtype),
+        "layers": layers,
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+        "lm_head": _init_linear(k_head, cfg.d_model, cfg.vocab_size, dtype),
+    }
+
+
+def _ssm_run(cfg, params, x, caches):
+    if caches is None:
+
+        def body(xc, lp):
+            out, _ = mamba_block(cfg, lp, xc, None)
+            return xc + out, None
+
+        x, _ = scan_layers(cfg, maybe_remat(cfg, body), x, params["layers"])
+        return x, None
+
+    def body(xc, xs):
+        lp, conv_c, ssm_c = xs
+        out, nc = mamba_block(cfg, lp, xc, dict(conv=conv_c, ssm=ssm_c))
+        return xc + out, (nc["conv"], nc["ssm"])
+
+    x, (nconv, nssm) = scan_layers(
+        cfg, body, x, (params["layers"], caches["conv"], caches["ssm"])
+    )
+    return x, dict(conv=nconv, ssm=nssm)
+
+
+def _ssm_forward(cfg, params, tokens):
+    x = embed_tokens(cfg, params, tokens)
+    x, _ = _ssm_run(cfg, params, x, None)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return unembed(cfg, params, x)
+
+
+def _ssm_init_cache(cfg, batch, max_seq, dtype=jnp.bfloat16):
+    mc = init_mamba_cache(cfg, batch, dtype)
+    return dict(
+        conv=jnp.zeros((cfg.n_layers,) + mc["conv"].shape, dtype),
+        ssm=jnp.zeros((cfg.n_layers,) + mc["ssm"].shape, jnp.float32),
+    )
+
+
+def _ssm_step(cfg, params, tokens, caches):
+    x = embed_tokens(cfg, params, tokens)
+    x, caches = _ssm_run(cfg, params, x, caches)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return unembed(cfg, params, x), caches
+
+
+# ---------------------------------------------------------------------------
+# dispatch tables
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg, key, max_seq: int = 0):
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        return transformer.init_params(cfg, key, max_seq)
+    if fam == "moe":
+        return deepseek.init_params(cfg, key, max_seq)
+    if fam == "ssm":
+        return _ssm_init_params(cfg, key, max_seq)
+    if fam == "hybrid":
+        return hybrid.init_params(cfg, key, max_seq)
+    if fam == "encdec":
+        return encdec.init_params(cfg, key, max_seq)
+    raise ValueError(fam)
+
+
+def forward(cfg, params, batch):
+    """batch: dict(tokens (B,S) [, frames (B,T,D) | patches (B,P,D)])."""
+    fam = cfg.family
+    tokens = batch["tokens"]
+    if fam == "dense":
+        return transformer.forward(cfg, params, tokens)
+    if fam == "vlm":
+        return transformer.forward(cfg, params, tokens, embeds=batch["patches"])
+    if fam == "moe":
+        return deepseek.forward(cfg, params, tokens, moe_impl=batch.get("moe_impl", "dense"))
+    if fam == "ssm":
+        return _ssm_forward(cfg, params, tokens)
+    if fam == "hybrid":
+        return hybrid.forward(cfg, params, tokens)
+    if fam == "encdec":
+        return encdec.forward(cfg, params, tokens, batch["frames"])
+    raise ValueError(fam)
+
+
+def _ce(logits, labels):
+    lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(lp, labels[..., None], axis=-1)[..., 0]
+    return -jnp.mean(ll)
+
+
+def loss_fn(cfg, params, batch):
+    """Next-token CE over the token stream (frontend prefixes excluded).
+    Adds the MTP auxiliary loss for configs with mtp_depth > 0."""
+    tokens = batch["tokens"]
+    hidden = None
+    if cfg.family == "moe" and cfg.mtp_depth > 0 and "mtp" in params:
+        logits, hidden = deepseek.forward(
+            cfg, params, tokens, moe_impl=batch.get("moe_impl", "dense"),
+            return_hidden=True,
+        )
+    else:
+        logits = forward(cfg, params, batch)
+    if cfg.family == "vlm":
+        logits = logits[:, -tokens.shape[1] :, :]  # token tail after patches
+    loss = _ce(logits[:, :-1], tokens[:, 1:])
+    if hidden is not None:
+        mtp = deepseek.mtp_logits(cfg, params, tokens, hidden)
+        loss = loss + 0.3 * _ce(mtp[:, :-1], tokens[:, 2:])  # t -> t+2 targets
+    return loss
+
+
+def init_cache(cfg, batch: int, max_seq: int, dtype=jnp.bfloat16, enc_len: int = 0):
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        return transformer.init_cache(cfg, batch, max_seq, dtype)
+    if fam == "moe":
+        return deepseek.init_cache(cfg, batch, max_seq, dtype)
+    if fam == "ssm":
+        return _ssm_init_cache(cfg, batch, max_seq, dtype)
+    if fam == "hybrid":
+        return hybrid.init_cache(cfg, batch, max_seq, dtype)
+    if fam == "encdec":
+        return encdec.init_cache(cfg, batch, max_seq, dtype, enc_len=enc_len)
+    raise ValueError(fam)
+
+
+def prefill(cfg, params, batch, cache):
+    fam = cfg.family
+    tokens = batch["tokens"]
+    if fam == "dense":
+        return transformer.prefill(cfg, params, tokens, cache)
+    if fam == "vlm":
+        return transformer.prefill(cfg, params, tokens, cache, embeds=batch["patches"])
+    if fam == "moe":
+        return deepseek.prefill(cfg, params, tokens, cache, moe_impl=batch.get("moe_impl", "dense"))
+    if fam == "ssm":
+        logits, cache = _ssm_step(cfg, params, tokens, cache)
+        return logits[:, -1:], cache
+    if fam == "hybrid":
+        return hybrid.prefill(cfg, params, tokens, cache)
+    if fam == "encdec":
+        return encdec.prefill(cfg, params, tokens, cache, batch["frames"])
+    raise ValueError(fam)
+
+
+def decode_step(cfg, params, tokens, cache, moe_impl: str = "dense"):
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        return transformer.decode_step(cfg, params, tokens, cache)
+    if fam == "moe":
+        return deepseek.decode_step(cfg, params, tokens, cache, moe_impl=moe_impl)
+    if fam == "ssm":
+        return _ssm_step(cfg, params, tokens, cache)
+    if fam == "hybrid":
+        return hybrid.decode_step(cfg, params, tokens, cache)
+    if fam == "encdec":
+        return encdec.decode_step(cfg, params, tokens, cache)
+    raise ValueError(fam)

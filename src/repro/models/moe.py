@@ -1,0 +1,106 @@
+"""Mixture-of-Experts FFN (DeepSeek-V2/V3 style: shared + routed top-k).
+
+Two dispatch implementations:
+  * ``dense``  — every expert computes every token, combined with the routing
+                 weight matrix.  Simple and exact; used for CPU smoke tests
+                 and small expert counts.
+  * ``ep``     — expert-parallel: capacity-based sort dispatch with
+                 ``lax.all_to_all`` under shard_map (repro.distributed.ep).
+                 Flops-honest at scale; used by the 512-device dry-run.
+
+The routed experts use the config's ``d_expert`` width; shared experts run as
+one fused dense MLP of width ``n_shared * d_expert``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import mlp_block
+from repro.quant.qlinear import apply_linear
+
+
+def init_moe_params(cfg, key, dtype):
+    ks = jax.random.split(key, 7)
+    d, e, fe = cfg.d_model, cfg.n_experts, cfg.d_expert
+
+    def lin(k, shape, scale):
+        return (jax.random.normal(k, shape, jnp.float32) * scale).astype(dtype)
+
+    p = {
+        "router": lin(ks[0], (d, e), d**-0.5),
+        "experts": {
+            "wg": lin(ks[1], (e, d, fe), d**-0.5),
+            "wu": lin(ks[2], (e, d, fe), d**-0.5),
+            "wd": lin(ks[3], (e, fe, d), fe**-0.5),
+        },
+    }
+    if cfg.n_shared_experts > 0:
+        fs = cfg.n_shared_experts * fe
+        p["shared"] = {
+            "wg": lin(ks[4], (d, fs), d**-0.5),
+            "wu": lin(ks[5], (d, fs), d**-0.5),
+            "wd": lin(ks[6], (fs, d), fs**-0.5),
+        }
+    return p
+
+
+def router_weights(cfg, p, x):
+    """x: (..., D) -> (weights (..., E) with exactly top_k nonzeros, idx)."""
+    logits = (x @ p["router"].astype(x.dtype)).astype(jnp.float32)
+    if cfg.router_fn == "sigmoid":  # deepseek-v3
+        scores = jax.nn.sigmoid(logits)
+    else:
+        scores = jax.nn.softmax(logits, axis=-1)
+    top_vals, top_idx = jax.lax.top_k(scores, cfg.moe_top_k)
+    top_vals = top_vals / jnp.sum(top_vals, axis=-1, keepdims=True)  # renorm
+    weights = jnp.zeros_like(scores)
+    weights = jnp.put_along_axis(weights, top_idx, top_vals, axis=-1, inplace=False)
+    return weights, top_idx
+
+
+def _expert_matmul(w, x):
+    """x: (T, D) against stacked expert weights (E, D, F) -> (T, E, F).
+    Supports QLinear experts (leading expert dim vmapped)."""
+    from repro.quant.qlinear import QLinear, qlinear_apply
+
+    if isinstance(w, QLinear):
+        out = jax.vmap(lambda we: qlinear_apply(we, x))(w)  # (E, T, F)
+        return out.transpose(1, 0, 2)
+    return jnp.einsum("td,edf->tef", x, w.astype(x.dtype))
+
+
+def _experts_dense(cfg, p, x, weights):
+    """All-experts combine. x: (T, D); weights: (T, E)."""
+    we = p["experts"]
+    g = _expert_matmul(we["wg"], x)
+    u = _expert_matmul(we["wu"], x)
+    h = jax.nn.silu(g) * u
+    wd = we["wd"]
+    from repro.quant.qlinear import QLinear, qlinear_apply
+
+    if isinstance(wd, QLinear):
+        y = jax.vmap(qlinear_apply)(wd, h.transpose(1, 0, 2)).transpose(1, 0, 2)
+    else:
+        y = jnp.einsum("tef,efd->ted", h, wd.astype(x.dtype))
+    return jnp.einsum("ted,te->td", y, weights.astype(x.dtype))
+
+
+def moe_block(cfg, p, x, impl: str = "dense", ep_axis: str | None = None):
+    """x: (B, S, D) -> (B, S, D)."""
+    b, s, d = x.shape
+    xt = x.reshape(-1, d)
+    weights, top_idx = router_weights(cfg, p, xt)
+    if impl == "dense":
+        routed = _experts_dense(cfg, p, xt, weights)
+    elif impl == "ep":
+        from repro.distributed.ep import experts_ep
+
+        routed = experts_ep(cfg, p, xt, weights, top_idx, axis=ep_axis)
+    else:
+        raise ValueError(impl)
+    out = routed
+    if "shared" in p:
+        out = out + mlp_block(p["shared"], xt, cfg.act)
+    return out.reshape(b, s, d)

@@ -1,0 +1,34 @@
+"""Parameter-count utilities (used for MODEL_FLOPS = 6·N·D in the roofline)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_size(tree) -> int:
+    return int(sum(np.prod(l.shape) for l in jax.tree.leaves(tree)))
+
+
+def count_params_config(cfg, active_only: bool = False) -> int:
+    """Count params from shape-only init (no allocation)."""
+    from repro.models import model as model_lib
+
+    shapes = jax.eval_shape(
+        lambda key: model_lib.init_params(cfg, key), jax.ShapeDtypeStruct((2,), jnp.uint32)
+    )
+    total = tree_size(shapes)
+    if active_only and cfg.n_experts:
+        # subtract the inactive routed experts
+        def expert_size(tree):
+            n = 0
+            for path, leaf in jax.tree_util.tree_leaves_with_path(tree):
+                keys = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+                if "experts" in keys:
+                    n += int(np.prod(leaf.shape))
+            return n
+
+        routed = expert_size(shapes)
+        total -= routed * (cfg.n_experts - cfg.moe_top_k) // cfg.n_experts
+    return total

@@ -1,0 +1,44 @@
+"""Per-layer activation-checkpoint policies and the layer-scan dispatcher."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def scan_layers(cfg, body, carry, xs):
+    """``lax.scan`` over stacked layer params — or an unrolled python loop
+    when cfg.unroll is set.
+
+    Unrolling exists for the dry-run's cost extrapolation: XLA's
+    ``cost_analysis`` counts a while-loop body ONCE (trip count is not
+    multiplied in), so scanned-layer FLOPs/bytes/collectives are undercounted
+    by ~L×.  The dry-run lowers 2 small UNROLLED variants (k1, k2 layers) and
+    extrapolates linearly — exact for homogeneous stacks.
+    """
+    if not getattr(cfg, "unroll", False):
+        return jax.lax.scan(body, carry, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    ys_list = []
+    for i in range(n):
+        xi = jax.tree.map(lambda a: a[i], xs)
+        carry, y = body(carry, xi)
+        ys_list.append(y)
+    if ys_list and ys_list[0] is None:
+        return carry, None
+    ys = jax.tree.map(lambda *zs: jnp.stack(zs), *ys_list)
+    return carry, ys
+
+
+def maybe_remat(cfg, body):
+    """Wrap a scan body ``(carry, xs) -> (carry, ys)`` per cfg.remat."""
+    if cfg.remat == "none":
+        return body
+    if cfg.remat == "full":
+        return jax.checkpoint(body)
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            body,
+            policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+        )
+    raise ValueError(cfg.remat)

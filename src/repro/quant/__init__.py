@@ -1,0 +1,1 @@
+from repro.quant.qlinear import QLinear, apply_linear, make_qlinear

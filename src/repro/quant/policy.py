@@ -1,0 +1,65 @@
+"""Which weights get W4A4 + LRC treatment, and at what rank.
+
+Follows the paper's setup: every transformer linear (attention + MLP +
+expert + MLA projections + mamba in/out projections) is quantized; the
+embedding table, lm head, positional tables, router, norms, convs and SSM
+scan parameters stay in full precision (QuaRot keeps the same split).
+
+``rank_frac`` — the paper's headline knob: low-rank size as a fraction of
+min(d_in, d_out) (10% ⇒ >50% gap recovery; 30% ⇒ lossless; Fig. 2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+
+_QUANT_PATTERNS = [
+    r"(attn|xattn)/w[qkvo]$",
+    r"attn/w(q|kv)_[ab]$",
+    r"(mlp|shared)/w[guid]$",
+    r"(mlp|shared)/wo$",
+    r"experts/w[gud]$",
+    r"in_proj$",
+    r"out_proj$",
+    r"mtp/proj$",
+]
+_QUANT_RE = re.compile("|".join(f"(?:{p})" for p in _QUANT_PATTERNS))
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantPolicy:
+    bits: int = 4
+    act_bits: int = 4
+    act_group: Optional[int] = None  # paper Table 2: 128
+    rank_frac: float = 0.10  # 0.0 disables the low-rank correction
+    clip_ratio: float = 0.9
+    impl: str = "int8"
+    lrc_iters: int = 1
+    quant_method: str = "gptq"  # gptq | rtn
+    correction: str = "lrc"  # lrc | svd | none
+    kv_cache_bits: Optional[int] = None  # optional int8 KV-cache quant
+
+    def should_quantize(self, path_str: str, shape) -> bool:
+        if len(shape) < 2:
+            return False
+        return bool(_QUANT_RE.search(path_str))
+
+    def rank(self, d_in: int, d_out: int) -> int:
+        if self.rank_frac <= 0:
+            return 0
+        return max(1, int(round(self.rank_frac * min(d_in, d_out))))
+
+
+def path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)

@@ -1,0 +1,165 @@
+"""Quantized linear layer — the paper's computational scheme (Figure 1):
+
+      y = Ŵ · Q_a(x)  +  U Vᵀ x
+
+with Ŵ int4 (packed two-per-byte), Q_a the on-the-fly activation quantizer,
+and U, Vᵀ the full-precision low-rank correction acting on the UNQUANTIZED x.
+
+Three execution paths (static ``impl`` field):
+  sim    — fake-quant float math; reference semantics for CPU tests/benches.
+  int8   — integer GEMM (int8×int8→int32) with per-token rescale; the
+           TPU-native lowering used by the dry-run (MXU int8 path).
+  pallas — fused Pallas kernel (kernels/w4a4.py): LR epilogue rides along
+           with the quantized GEMM (the paper's "future work" fusion).
+
+Weight layout in models is (d_in, d_out) with ``y = x @ w``; the LRC solver's
+(d_out, d_in) result is transposed at pack time.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantizers import (
+    QuantSpec,
+    pack_int4,
+    unpack_int4,
+    quantize_act,
+    fake_quant_act,
+)
+
+
+def _static(**kw):
+    return dataclasses.field(metadata=dict(static=True), **kw)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class QLinear:
+    """Pytree holding one quantized weight matrix + its LRC correction."""
+
+    qweight: jnp.ndarray  # uint8 (d_in//2, d_out) — int4 packed along d_in
+    w_scale: jnp.ndarray  # f32 (d_out,) per-output-channel
+    u: Optional[jnp.ndarray]  # bf16 (d_out, k) or None
+    v: Optional[jnp.ndarray]  # bf16 (d_in, k) or None
+
+    bits: int = _static(default=4)
+    act_bits: int = _static(default=4)
+    act_group: Optional[int] = _static(default=None)
+    clip_ratio: float = _static(default=1.0)
+    impl: str = _static(default="int8")  # sim | int8 | pallas
+
+    @property
+    def d_in(self) -> int:
+        return self.qweight.shape[0] * 2
+
+    @property
+    def d_out(self) -> int:
+        return self.qweight.shape[1]
+
+    @property
+    def act_spec(self) -> QuantSpec:
+        return QuantSpec(
+            bits=self.act_bits, clip_ratio=self.clip_ratio, group_size=self.act_group
+        )
+
+
+def make_qlinear(
+    q_out_in: jnp.ndarray,  # int8 (d_out, d_in) from the LRC/GPTQ solver
+    scales: jnp.ndarray,  # (d_out, 1)
+    u: Optional[jnp.ndarray] = None,
+    v: Optional[jnp.ndarray] = None,
+    *,
+    act_bits: int = 4,
+    act_group: Optional[int] = None,
+    clip_ratio: float = 1.0,
+    impl: str = "sim",
+    lr_dtype=jnp.bfloat16,
+) -> QLinear:
+    q_in_out = jnp.asarray(q_out_in, jnp.int8).T  # (d_in, d_out)
+    packed = pack_int4(q_in_out.T).T  # pack along d_in
+    return QLinear(
+        qweight=packed,
+        w_scale=jnp.asarray(scales, jnp.float32).reshape(-1),
+        u=None if u is None else jnp.asarray(u, lr_dtype),
+        v=None if v is None else jnp.asarray(v, lr_dtype),
+        act_bits=act_bits,
+        act_group=act_group,
+        clip_ratio=clip_ratio,
+        impl=impl,
+    )
+
+
+def _unpack_w(q: QLinear) -> jnp.ndarray:
+    """packed (d_in//2, d_out) -> int8 (d_in, d_out)."""
+    return unpack_int4(q.qweight.T).T
+
+
+def _lowrank(q: QLinear, x: jnp.ndarray) -> jnp.ndarray:
+    """(x V) Uᵀ on the unquantized activations, in the LR dtype."""
+    xv = x.astype(q.v.dtype) @ q.v  # (..., k)
+    return xv @ q.u.T.astype(q.v.dtype)  # (..., d_out)
+
+
+def _apply_sim(q: QLinear, x: jnp.ndarray) -> jnp.ndarray:
+    w = _unpack_w(q).astype(jnp.float32) * q.w_scale[None, :]
+    xq = fake_quant_act(x, q.act_spec).astype(jnp.float32)
+    y = xq @ w
+    if q.u is not None:
+        y = y + _lowrank(q, x).astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def _apply_int8(q: QLinear, x: jnp.ndarray) -> jnp.ndarray:
+    """Integer GEMM path. Per-token scales; optional per-group-128 scales."""
+    wq = _unpack_w(q)  # int8 (d_in, d_out)
+    xq, sx = quantize_act(x, q.act_spec)  # int8, f32
+    dims = (((x.ndim - 1,), (0,)), ((), ()))
+    if q.act_group is None:
+        acc = jax.lax.dot_general(xq, wq, dims, preferred_element_type=jnp.int32)
+        y = acc.astype(jnp.float32) * sx * q.w_scale
+    else:
+        g = q.act_group
+        d_in, d_out = wq.shape
+        ng = d_in // g
+        xg = xq.reshape(*x.shape[:-1], ng, g)
+        wg = wq.reshape(ng, g, d_out)
+        accg = jnp.einsum(
+            "...nk,nkd->...nd", xg, wg, preferred_element_type=jnp.int32
+        )
+        y = jnp.sum(accg.astype(jnp.float32) * sx[..., None], axis=-2) * q.w_scale
+    if q.u is not None:
+        y = y + _lowrank(q, x).astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def _apply_pallas(q: QLinear, x: jnp.ndarray) -> jnp.ndarray:
+    from repro.kernels import ops
+
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    y = ops.w4a4_lowrank_matmul(
+        x2, q.qweight, q.w_scale, q.u, q.v, act_spec=q.act_spec
+    )
+    return y.reshape(*lead, q.d_out).astype(x.dtype)
+
+
+def qlinear_apply(q: QLinear, x: jnp.ndarray) -> jnp.ndarray:
+    if q.impl == "sim":
+        return _apply_sim(q, x)
+    if q.impl == "int8":
+        return _apply_int8(q, x)
+    if q.impl == "pallas":
+        return _apply_pallas(q, x)
+    raise ValueError(f"unknown impl {q.impl!r}")
+
+
+def apply_linear(w, x: jnp.ndarray) -> jnp.ndarray:
+    """Dispatch: plain array → dense matmul; QLinear → W4A4+LRC path."""
+    if isinstance(w, QLinear):
+        return qlinear_apply(w, x)
+    return x @ w.astype(x.dtype)

@@ -1,0 +1,107 @@
+"""QuaRot-style rotation fusion on model parameters (LRC stage 1).
+
+Residual-stream rotation R (Hadamard-structured, orthogonal):
+  * RMSNorm γ's are folded into their reader weights (norm becomes pure RMS,
+    which commutes with any orthogonal R);
+  * readers  (x @ W, x in the stream):  W ← Rᵀ W
+  * writers  (y writes to the stream):  W ← W R
+  * embedding rows:                     E ← E R
+  * lm head: γ_final folded then W ← Rᵀ W; tied embeddings are UNTIED first
+    (γ cannot be folded into a shared table) — `unembed` prefers the
+    materialized head.
+
+Exactness: model(x) is bit-identical up to float error (tested).  Supported
+families: dense / vlm (full residual rotation) and ssm (in/out projections).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.hadamard import hadamard_matrix
+
+
+def _fold_gamma(w, gamma):
+    return (gamma.astype(jnp.float32)[:, None] * w.astype(jnp.float32)).astype(w.dtype)
+
+
+def _read(w, r):  # W ← Rᵀ W  (stacked (L, d, o) or (d, o))
+    w32 = w.astype(jnp.float32)
+    return jnp.einsum("ij,...jo->...io", r.T, w32).astype(w.dtype)
+
+
+def _write(w, r):  # W ← W R
+    w32 = w.astype(jnp.float32)
+    return jnp.einsum("...di,ij->...dj", w32, r).astype(w.dtype)
+
+
+def rotate_dense(cfg, params, seed: int = 0):
+    """Rotate a dense/vlm transformer's params. Returns new params."""
+    d = cfg.d_model
+    r = jnp.asarray(hadamard_matrix(d, seed), jnp.float32)
+    p = dict(params)
+    layers = dict(p["layers"])
+    attn = dict(layers["attn"])
+    mlp = dict(layers["mlp"])
+
+    gamma_a = layers["attn_norm"]  # (L, d)
+    gamma_m = layers["mlp_norm"]
+
+    def fold_stacked(w, gamma):
+        w32 = w.astype(jnp.float32)
+        return (gamma.astype(jnp.float32)[:, :, None] * w32).astype(w.dtype)
+
+    for k in ("wq", "wk", "wv"):
+        attn[k] = _read(fold_stacked(attn[k], gamma_a), r)
+    attn["wo"] = _write(attn["wo"], r)
+    for k in ("wg", "wu"):
+        mlp[k] = _read(fold_stacked(mlp[k], gamma_m), r)
+    mlp["wd"] = _write(mlp["wd"], r)
+    layers["attn"] = attn
+    layers["mlp"] = mlp
+    layers["attn_norm"] = jnp.ones_like(gamma_a)
+    layers["mlp_norm"] = jnp.ones_like(gamma_m)
+    p["layers"] = layers
+
+    # untie + fold final norm into the head, then rotate
+    head = p["lm_head"] if "lm_head" in p else p["embed"].T
+    head = _fold_gamma(head, p["final_norm"])
+    p["lm_head"] = _read(head, r)
+    p["final_norm"] = jnp.ones_like(p["final_norm"])
+    p["embed"] = _write(p["embed"], r)
+    return p
+
+
+def rotate_ssm(cfg, params, seed: int = 0):
+    """Mamba2 stack: rotate the residual stream around in_proj/out_proj.
+    (The SSM internals see unrotated activations — LRC targets the two
+    projections, DESIGN.md §Arch-applicability.)"""
+    d = cfg.d_model
+    r = jnp.asarray(hadamard_matrix(d, seed), jnp.float32)
+    p = dict(params)
+    layers = dict(p["layers"])
+    gamma = layers["norm"]  # (L, d) pre-norm, folded into in_proj
+    w32 = layers["in_proj"].astype(jnp.float32)
+    layers["in_proj"] = _read(
+        (gamma.astype(jnp.float32)[:, :, None] * w32).astype(layers["in_proj"].dtype), r
+    )
+    layers["norm"] = jnp.ones_like(gamma)
+    layers["out_proj"] = _write(layers["out_proj"], r)
+    p["layers"] = layers
+    head = p["lm_head"] if "lm_head" in p else p["embed"].T
+    head = _fold_gamma(head, p["final_norm"])
+    p["lm_head"] = _read(head, r)
+    p["final_norm"] = jnp.ones_like(p["final_norm"])
+    p["embed"] = _write(p["embed"], r)
+    return p
+
+
+def rotate_model(cfg, params, seed: int = 0):
+    if cfg.family in ("dense", "vlm"):
+        return rotate_dense(cfg, params, seed)
+    if cfg.family == "ssm":
+        return rotate_ssm(cfg, params, seed)
+    # moe / hybrid / encdec: rotation fusion is family-specific work beyond
+    # the benchmark surface; LRC itself applies regardless (stats absorb the
+    # basis).  Returned unchanged.
+    return params

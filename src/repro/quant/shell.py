@@ -1,0 +1,53 @@
+"""Structure-only quantization: map a params tree to its quantized layout
+(QLinear leaves) without running any calibration.
+
+Used by the dry-run (under ``jax.eval_shape`` → no allocation) so the
+512-device serve_step lowers with the REAL W4A4+LRC memory layout: packed
+int4 weights, f32 scales, bf16 U/V.  The calibrating quantizer
+(repro.quant.calibrate) produces the same structure with solved values.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.policy import QuantPolicy, path_str
+from repro.quant.qlinear import QLinear
+
+
+def quantize_shell(params, policy: QuantPolicy):
+    """Replace policy-selected weight leaves with zero-value QLinear pytrees
+    of the right shapes/dtypes (leading stack/expert dims preserved)."""
+
+    def convert(path, leaf):
+        ps = path_str(path)
+        if not policy.should_quantize(ps, leaf.shape):
+            return leaf
+        *lead, d_in, d_out = leaf.shape
+        lead = tuple(lead)
+        k = policy.rank(d_in, d_out)
+        return QLinear(
+            qweight=jnp.zeros(lead + (d_in // 2, d_out), jnp.uint8),
+            w_scale=jnp.zeros(lead + (d_out,), jnp.float32),
+            u=jnp.zeros(lead + (d_out, k), jnp.bfloat16) if k else None,
+            v=jnp.zeros(lead + (d_in, k), jnp.bfloat16) if k else None,
+            bits=policy.bits,
+            act_bits=policy.act_bits,
+            act_group=policy.act_group,
+            clip_ratio=policy.clip_ratio,
+            impl=policy.impl,
+        )
+
+    return jax.tree_util.tree_map_with_path(convert, params)
+
+
+def quantized_param_shapes(cfg, policy: QuantPolicy):
+    """ShapeDtypeStruct tree of the quantized model (no allocation)."""
+    from repro.models import model as model_lib
+
+    def build(key):
+        params = model_lib.init_params(cfg, key)
+        return quantize_shell(params, policy)
+
+    return jax.eval_shape(build, jax.ShapeDtypeStruct((2,), jnp.uint32))

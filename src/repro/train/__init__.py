@@ -1,0 +1,2 @@
+from repro.train.optimizer import AdamWState, adamw_init, adamw_update, cosine_lr
+from repro.train.steps import make_train_step, TrainState

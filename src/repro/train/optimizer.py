@@ -1,0 +1,81 @@
+"""AdamW + cosine schedule (pure pytree implementation — no external deps).
+
+``state_dtype`` controls the moment dtype: float32 (default) or bfloat16
+("bf16 optimizer state" mode for the giant MoE configs — halves optimizer
+memory, the distributed-memory trick recorded in DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class AdamWState:
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+def adamw_init(params, state_dtype=jnp.float32) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, state_dtype)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree.map(zeros, params),
+        nu=jax.tree.map(zeros, params),
+    )
+
+
+def cosine_lr(step, base_lr: float, warmup: int, total: int, min_frac: float = 0.1):
+    step = step.astype(jnp.float32)
+    warm = base_lr * step / jnp.maximum(1.0, warmup)
+    prog = jnp.clip((step - warmup) / jnp.maximum(1.0, total - warmup), 0.0, 1.0)
+    cos = base_lr * (min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(step < warmup, warm, cos)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in jax.tree.leaves(tree))
+    )
+
+
+def adamw_update(
+    params,
+    grads,
+    state: AdamWState,
+    lr,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    clip_norm: float = 1.0,
+):
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-12))
+    step = state.step + 1
+    b1c = 1 - b1 ** step.astype(jnp.float32)
+    b2c = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32, v32 = m.astype(jnp.float32), v.astype(jnp.float32)
+        m32 = b1 * m32 + (1 - b1) * g
+        v32 = b2 * v32 + (1 - b2) * g * g
+        u = (m32 / b1c) / (jnp.sqrt(v32 / b2c) + eps)
+        # decoupled weight decay on matrices only
+        if p.ndim >= 2:
+            u = u + weight_decay * p.astype(jnp.float32)
+        newp = (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+        return newp, m32.astype(m.dtype), v32.astype(v.dtype)
+
+    out = jax.tree.map(upd, params, grads, state.mu, state.nu)
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_nu = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, AdamWState(step=step, mu=new_mu, nu=new_nu), gnorm

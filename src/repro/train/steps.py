@@ -1,0 +1,70 @@
+"""Train step factory: loss → grads → AdamW, with optional microbatch
+gradient accumulation (scan) and remat (cfg.remat).
+
+The returned step is pure: ``(state, batch) -> (state, metrics)`` and is the
+function lowered by the dry-run for the ``train_4k`` cells.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as model_lib
+from repro.train.optimizer import AdamWState, adamw_init, adamw_update, cosine_lr
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: AdamWState
+
+
+def init_train_state(cfg, key, state_dtype=jnp.float32) -> TrainState:
+    params = model_lib.init_params(cfg, key)
+    return TrainState(params=params, opt=adamw_init(params, state_dtype))
+
+
+def make_train_step(
+    cfg,
+    base_lr: float = 3e-4,
+    warmup: int = 100,
+    total_steps: int = 10_000,
+    microbatches: int = 1,
+    remat: str = "full",
+):
+    cfg = dataclasses.replace(cfg, remat=remat)
+
+    def loss_for(params, batch):
+        return model_lib.loss_fn(cfg, params, batch)
+
+    def train_step(state: TrainState, batch):
+        if microbatches > 1:
+            # split the leading batch dim and accumulate grads with a scan
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+
+            mb = jax.tree.map(split, batch)
+
+            def acc(carry, mbatch):
+                loss, grads = jax.value_and_grad(loss_for)(state.params, mbatch)
+                return (
+                    carry[0] + loss / microbatches,
+                    jax.tree.map(lambda a, g: a + g / microbatches, carry[1], grads),
+                ), None
+
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            (loss, grads), _ = jax.lax.scan(acc, (jnp.zeros(()), zero), mb)
+        else:
+            loss, grads = jax.value_and_grad(loss_for)(state.params, batch)
+        lr = cosine_lr(state.opt.step, base_lr, warmup, total_steps)
+        params, opt, gnorm = adamw_update(state.params, grads, state.opt, lr)
+        metrics = dict(loss=loss, grad_norm=gnorm, lr=lr)
+        return TrainState(params=params, opt=opt), metrics
+
+    return train_step

@@ -1,0 +1,87 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.quantizers import (
+    QuantSpec,
+    act_scales,
+    dequantize_act,
+    dequantize_weight,
+    fake_quant_act,
+    pack_int4,
+    quantize_act,
+    quantize_weight_rtn,
+    search_clip_ratio,
+    unpack_int4,
+)
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+def test_weight_rtn_roundtrip_error_bound(rng, bits):
+    w = jnp.asarray(rng.standard_normal((16, 32)), jnp.float32)
+    spec = QuantSpec(bits=bits)
+    q, s = quantize_weight_rtn(w, spec)
+    wq = dequantize_weight(q, s, spec)
+    # RTN error is at most half a step per element
+    assert jnp.max(jnp.abs(w - wq)) <= 0.5 * jnp.max(s) + 1e-6
+    assert q.dtype == jnp.int8
+    assert int(q.max()) <= spec.qmax and int(q.min()) >= spec.qmin
+
+
+def test_weight_rtn_grouped(rng):
+    w = jnp.asarray(rng.standard_normal((8, 64)), jnp.float32)
+    spec = QuantSpec(bits=4, group_size=16)
+    q, s = quantize_weight_rtn(w, spec)
+    assert s.shape == (8, 4)
+    wq = dequantize_weight(q, s, spec)
+    assert jnp.max(jnp.abs(w - wq)) <= 0.5 * jnp.max(s) + 1e-6
+
+
+def test_act_quant_per_token(rng):
+    x = jnp.asarray(rng.standard_normal((5, 7, 32)), jnp.float32)
+    spec = QuantSpec(bits=4)
+    q, s = quantize_act(x, spec)
+    assert q.shape == x.shape and s.shape == (5, 7, 1)
+    xq = dequantize_act(q, s, spec)
+    assert jnp.max(jnp.abs(x - xq)) <= 0.5 * jnp.max(s) + 1e-6
+
+
+def test_act_quant_grouped_matches_per_token_when_group_is_full_dim(rng):
+    x = jnp.asarray(rng.standard_normal((9, 32)), jnp.float32)
+    a = fake_quant_act(x, QuantSpec(bits=4))
+    b = fake_quant_act(x, QuantSpec(bits=4, group_size=32))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=0, atol=0)
+
+
+def test_act_grouped_improves_outlier_error(rng):
+    # one huge outlier per token ruins per-token scales; groups isolate it
+    x = rng.standard_normal((64, 256)).astype(np.float32)
+    x[:, 0] *= 50.0
+    x = jnp.asarray(x)
+    e_tok = float(jnp.sum((fake_quant_act(x, QuantSpec(bits=4)) - x) ** 2))
+    e_grp = float(jnp.sum((fake_quant_act(x, QuantSpec(bits=4, group_size=64)) - x) ** 2))
+    assert e_grp < 0.5 * e_tok
+
+
+def test_clip_search_beats_default_on_heavy_tails(rng):
+    x = jnp.asarray(rng.standard_t(df=2, size=(128, 64)), jnp.float32)
+    c = search_clip_ratio(x, bits=4)
+    assert 0.70 <= c <= 1.0
+    e_c = float(jnp.sum((fake_quant_act(x, QuantSpec(bits=4, clip_ratio=c)) - x) ** 2))
+    e_1 = float(jnp.sum((fake_quant_act(x, QuantSpec(bits=4, clip_ratio=1.0)) - x) ** 2))
+    assert e_c <= e_1 + 1e-6
+
+
+def test_pack_unpack_int4_roundtrip(rng):
+    q = jnp.asarray(rng.integers(-8, 8, size=(6, 64)), jnp.int8)
+    packed = pack_int4(q)
+    assert packed.shape == (6, 32) and packed.dtype == jnp.uint8
+    np.testing.assert_array_equal(np.asarray(unpack_int4(packed)), np.asarray(q))
+
+
+def test_zero_input_safe():
+    x = jnp.zeros((4, 16), jnp.float32)
+    q, s = quantize_act(x, QuantSpec(bits=4))
+    assert not np.any(np.isnan(np.asarray(s)))
+    np.testing.assert_array_equal(np.asarray(q), 0)

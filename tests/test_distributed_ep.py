@@ -1,0 +1,57 @@
+"""EP (expert-parallel shard_map) vs dense-dispatch equivalence on a forced
+8-device host mesh.  Runs in a subprocess so the 1-device tests elsewhere
+keep their platform config."""
+
+import os
+import subprocess
+import sys
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P, NamedSharding
+
+from repro.configs import get_config
+from repro.models.config import reduced
+from repro.models import moe as moe_lib
+import dataclasses
+
+cfg = reduced(get_config("deepseek-v2-236b"), n_experts=8, moe_top_k=2,
+              capacity_factor=8.0)  # high capacity => no drops => exact match
+key = jax.random.PRNGKey(0)
+p = moe_lib.init_moe_params(cfg, key, jnp.float32)
+rng = np.random.default_rng(0)
+x = jnp.asarray(rng.standard_normal((2, 16, cfg.d_model)), jnp.float32)
+
+mesh = jax.make_mesh((2, 4), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+with jax.set_mesh(mesh):
+    dense = jax.jit(lambda p, x: moe_lib.moe_block(cfg, p, x, impl="dense"))(p, x)
+    ep = jax.jit(lambda p, x: moe_lib.moe_block(cfg, p, x, impl="ep"))(p, x)
+err = float(jnp.abs(dense - ep).max())
+rel = err / float(jnp.abs(dense).max())
+print("ERR", rel)
+assert rel < 2e-5, rel
+
+# with a tight capacity factor, EP drops tokens but stays finite
+cfg2 = dataclasses.replace(cfg, capacity_factor=0.5)
+with jax.set_mesh(mesh):
+    ep2 = jax.jit(lambda p, x: moe_lib.moe_block(cfg2, p, x, impl="ep"))(p, x)
+assert bool(jnp.all(jnp.isfinite(ep2)))
+print("OK")
+"""
+
+
+def test_ep_matches_dense():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+    env.pop("JAX_PLATFORMS", None)
+    env["JAX_PLATFORMS"] = "cpu"
+    out = subprocess.run(
+        [sys.executable, "-c", SCRIPT], env=env, capture_output=True, text=True,
+        timeout=600,
+    )
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "OK" in out.stdout
