@@ -22,7 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import record
-from repro.launch.roofline import HBM_BW, PEAK_FLOPS
+from repro.launch.roofline import HBM_BW, PEAK_FLOPS, prologue_activation_bytes
 
 # (d_in, d_out) from the Llama family, as in paper Tables 6-8
 SIZES = [(4096, 11008), (5120, 13824), (8192, 28672)]
@@ -64,11 +64,20 @@ def run():
             for r in RANKS:
                 t_unfused = _roofline_time(m, k, n, r, fused=False)
                 t_fused = _roofline_time(m, k, n, r, fused=True)
+                # activation-prologue HBM traffic (rotate→quantize→project,
+                # online-rotated serving path): three passes vs. the fused
+                # kernels/prologue.py single pass
+                act_unfused = prologue_activation_bytes(m, k, r, rotate=True,
+                                                        fused=False)
+                act_fused = prologue_activation_bytes(m, k, r, rotate=True,
+                                                      fused=True)
                 rows.append([
                     f"M{m}_{n}x{k}", r,
                     round(t_unfused * 1e6, 1), round(t_fused * 1e6, 1),
                     round(t_fp16 / t_unfused, 2), round(t_fp16 / t_fused, 2),
                     round(t_fused / t_unfused, 3),
+                    round(act_unfused / 1024, 1), round(act_fused / 1024, 1),
+                    round(act_unfused / act_fused, 2),
                 ])
     # CPU wall sanity: relative cost of the int8 path with/without LR (small size)
     from repro.quant.qlinear import make_qlinear, qlinear_apply
@@ -91,11 +100,13 @@ def run():
     t0 = timed(make_qlinear(q, s, None, None, impl="int8"))
     t1 = timed(make_qlinear(q, s, u, v, impl="int8", lr_dtype=jnp.float32))
     rows.append(["cpu_sim_1024x2048", r, round(t0, 1), round(t1, 1),
-                 "", "", round(t1 / t0, 3)])
+                 "", "", round(t1 / t0, 3), "", "", ""])
     record(
         "latency_kernels", rows,
         ["matrix", "ranks", "us_unfused", "us_fused",
-         "speedup_vs_fp16_unfused", "speedup_vs_fp16_fused", "fused_over_unfused"],
+         "speedup_vs_fp16_unfused", "speedup_vs_fp16_fused", "fused_over_unfused",
+         "act_prologue_kb_unfused", "act_prologue_kb_fused",
+         "act_prologue_byte_ratio"],
     )
     return rows
 

@@ -1,0 +1,79 @@
+"""Version-compat wrappers for the jax mesh API.
+
+The codebase targets the current mesh interface (``jax.sharding.
+get_abstract_mesh`` / ``jax.set_mesh`` / ``AxisType``); the hermetic
+container ships jax 0.4.37, which predates all three.  These helpers pick
+the modern spelling when present and fall back to the 0.4-era equivalents,
+so the models/serve/launch layers stay version-agnostic.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def get_abstract_mesh():
+    """Current surrounding mesh, or None when tracing without one.
+
+    Modern jax returns an AbstractMesh (empty ⇒ no axis_names); 0.4.x tracks
+    the physical mesh on the thread-local pjit environment instead.
+    """
+    get = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get is not None:
+        return get()
+    from jax._src.mesh import thread_resources  # jax<0.5
+
+    m = thread_resources.env.physical_mesh
+    return None if m.empty else m
+
+
+def make_mesh(shape, axes):
+    """jax.make_mesh with Auto axis types when the API supports them."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
+def set_mesh(mesh):
+    """Context manager activating ``mesh`` (jax.set_mesh, or the Mesh object
+    itself on 0.4.x where Mesh is its own context manager)."""
+    setter = getattr(jax, "set_mesh", None)
+    if setter is not None:
+        return setter(mesh)
+    return mesh
+
+
+def abstract_mesh(shape, axes):
+    """jax.sharding.AbstractMesh across the 0.4 → current constructor change
+    ((name, size) pairs vs. separate sizes/names + axis_types)."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.sharding.AbstractMesh(
+            tuple(shape), tuple(axes), axis_types=(axis_type.Auto,) * len(axes)
+        )
+    return jax.sharding.AbstractMesh(tuple(zip(axes, shape)))
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None, axis_names=None):
+    """jax.shard_map (current) / jax.experimental.shard_map (0.4.x).
+
+    ``check_vma`` maps onto 0.4's ``check_rep``.  ``axis_names`` (partial
+    manual axes) has no 0.4 equivalent — there shard_map is manual over every
+    mesh axis, which is semantically equivalent for bodies whose specs leave
+    the extra axes replicated."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        kw = {}
+        if check_vma is not None:
+            kw["check_vma"] = check_vma
+        if axis_names is not None:
+            kw["axis_names"] = axis_names
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as sm  # jax<0.5
+
+    kw = {}
+    if check_vma is not None:
+        kw["check_rep"] = check_vma
+    return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)

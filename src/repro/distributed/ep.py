@@ -26,6 +26,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core.jaxcompat import get_abstract_mesh, shard_map
+
 
 def _capacity(n_tokens: int, top_k: int, n_experts: int, factor: float) -> int:
     c = int(n_tokens * top_k * factor / max(1, n_experts))
@@ -55,7 +57,7 @@ def experts_ep(cfg, p, x, weights, top_idx, axis: str = "model"):
     weights; top_idx: (T, K).  Expert weights p["experts"] sharded over
     ``axis`` on their leading dim.  Returns (T, D)."""
     axis = axis or "model"
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = get_abstract_mesh()
     tp = mesh.shape[axis]
     e_total = cfg.n_experts
     e_local = e_total // tp
@@ -98,7 +100,7 @@ def experts_ep(cfg, p, x, weights, top_idx, axis: str = "model"):
         P(),
         jax.tree.map(lambda _: _expert_spec(axis), p["experts"]),
     )
-    fn = jax.shard_map(
+    fn = shard_map(
         local_fn,
         mesh=mesh,
         in_specs=in_specs,

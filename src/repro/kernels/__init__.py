@@ -4,16 +4,30 @@ The paper's Limitations section (§5) measures that the *unfused* low-rank
 matmul costs 23-52% extra latency even at rank 128 ("data movement is
 important, and ... a fused kernel could improve latency") and speculates the
 low-rank path "may be computable in parallel with the low-bitwidth
-computation".  `w4a4.py` is exactly that kernel, adapted to the TPU memory
-hierarchy: packed-int4 weights are unpacked in VMEM, the int8×int8→int32 MXU
-GEMM accumulates over K tiles, and the epilogue applies the per-token/
-per-channel rescale AND the (xV)Uᵀ low-rank term while the tile is still in
-VMEM — one HBM pass instead of two.
+computation".  The serving hot path is now TWO fused kernels end to end
+(`ops.w4a4_lrc_forward`):
 
+  1. prologue.py — fused activation prologue: ONE grid pass over row tiles
+     of x held in VMEM applies the blocked Walsh-Hadamard rotation, the
+     per-token amax/scale + int4-grid quantization, and the (x·V) low-rank
+     projection, emitting xq/sx/xv from a single HBM read of the activations
+     (the unfused chain made three passes plus a rotated-x round-trip);
+  2. w4a4.py — fused W4A4 GEMM + low-rank epilogue: packed-int4 weights are
+     unpacked in VMEM, the int8×int8→int32 MXU GEMM accumulates over K tiles,
+     and the epilogue applies the per-token/per-channel rescale AND the
+     (xV)Uᵀ term while the output tile is still in VMEM.
+
+Block sizes come from a small autotune table keyed on the (M, K, N, R)
+serving regime — decode / mixed / prefill (`ops.select_blocks`); all GEMM
+operands are zero-padded to block multiples so odd MLP widths take the
+pallas path; grids carry Mosaic ``dimension_semantics`` annotations
+(parallel M/N, sequential-innermost K).
+
+  prologue.py — fused rotate → quantize → low-rank-project prologue
   w4a4.py     — fused W4A4 matmul + low-rank epilogue (pl.pallas_call)
-  actquant.py — per-token int4/int8 on-the-fly activation quantizer
-  hadamard.py — blocked Walsh-Hadamard transform (QuaRot online rotation)
-  ops.py      — jit'd wrappers (padding, interpret-mode fallback on CPU)
+  actquant.py — standalone per-token int4/int8 activation quantizer
+  hadamard.py — standalone blocked Walsh-Hadamard transform (QuaRot R3/R4)
+  ops.py      — jit'd wrappers (padding, block table, interpret fallback)
   ref.py      — pure-jnp oracles for every kernel
 """
 

@@ -11,15 +11,15 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.rowops import scale_round_quantize
 
 
 def _kernel(x_ref, q_ref, s_ref, *, qmax: int, clip_ratio: float):
     x = x_ref[...].astype(jnp.float32)
-    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
-    amax = jnp.where(amax <= 0.0, 1.0, amax)
-    s = clip_ratio * amax / qmax
-    q = jnp.clip(jnp.round(x / s), -qmax - 1, qmax)
-    q_ref[...] = q.astype(jnp.int8)
+    q, s = scale_round_quantize(x, qmax, clip_ratio)
+    q_ref[...] = q
     s_ref[...] = s
 
 
@@ -46,6 +46,9 @@ def act_quant_kernel(
             jax.ShapeDtypeStruct((m, k), jnp.int8),
             jax.ShapeDtypeStruct((m, 1), jnp.float32),
         ],
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel",),  # M tiles are independent
+        ),
         interpret=interpret,
     )(x)
     return q, s

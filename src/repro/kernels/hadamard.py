@@ -13,19 +13,13 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.rowops import fwht_rows
 
 
 def _kernel(x_ref, o_ref, *, d: int):
-    y = x_ref[...].astype(jnp.float32)
-    bm = y.shape[0]
-    h = 1
-    while h < d:
-        y = y.reshape(bm, d // (2 * h), 2, h)
-        a = y[:, :, 0, :]
-        b = y[:, :, 1, :]
-        y = jnp.stack([a + b, a - b], axis=2)
-        h *= 2
-    y = y.reshape(bm, d) * (1.0 / (d**0.5))
+    y = fwht_rows(x_ref[...].astype(jnp.float32), d)
     o_ref[...] = y.astype(o_ref.dtype)
 
 
@@ -41,5 +35,8 @@ def fwht_kernel(x: jnp.ndarray, bm: int = 256, interpret: bool = True):
         in_specs=[pl.BlockSpec((bm, d), lambda i: (i, 0))],
         out_specs=pl.BlockSpec((bm, d), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((m, d), x.dtype),
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel",),  # M tiles are independent
+        ),
         interpret=interpret,
     )(x)

@@ -1,8 +1,13 @@
 """jit'd public wrappers around the Pallas kernels.
 
-Responsibilities: shape padding to block multiples, interpret-mode selection
-(interpret=True on CPU — validates the kernel bodies; compiled Mosaic on real
-TPU), and the end-to-end fused entry used by ``QLinear(impl="pallas")``.
+Responsibilities: shape padding to block multiples (weights, scales and the
+low-rank factors are zero-padded, so odd MLP widths never crash the pallas
+path), block-size selection per serving regime (decode / mixed / prefill),
+interpret-mode selection (interpret=True on CPU — validates the kernel
+bodies; compiled Mosaic on real TPU), and the end-to-end fused entry
+``w4a4_lrc_forward`` used by ``QLinear(impl="pallas")`` and the serving
+engine: fused activation prologue (rotate → quantize → low-rank project,
+one HBM pass over x) chained into the W4A4 GEMM + low-rank epilogue.
 """
 
 from __future__ import annotations
@@ -15,8 +20,13 @@ import jax.numpy as jnp
 from repro.core.quantizers import QuantSpec
 from repro.kernels.actquant import act_quant_kernel
 from repro.kernels.hadamard import fwht_kernel
+from repro.kernels.prologue import fused_prologue_kernel
 from repro.kernels.w4a4 import w4a4_lowrank_matmul_kernel
 from repro.kernels.flash_attn import flash_attention_kernel
+
+# V is held whole in VMEM by the fused prologue; past this footprint the
+# wrapper falls back to the unfused three-pass chain.
+_PROLOGUE_V_BYTES_MAX = 8 * 1024 * 1024
 
 
 def _interpret() -> bool:
@@ -31,6 +41,54 @@ def _pad_to(x, mult, axis):
     widths = [(0, 0)] * x.ndim
     widths[axis] = (0, pad)
     return jnp.pad(x, widths), size
+
+
+def _round_pow2(m: int) -> int:
+    p = 8
+    while p * 2 <= m:
+        p *= 2
+    return p
+
+
+# ---------------------------------------------------------------------------
+# block-size autotune table
+# ---------------------------------------------------------------------------
+
+# Regime-keyed (BM, BN, BK) tiles, replacing the old hard-coded 128/128/256.
+# decode  (M ≤ 32):  tiny M tile; wide N×K tiles stream the weight matrix —
+#                    the decode hot path is weight-HBM-bound.
+# mixed   (M ≤ 512): balanced tiles.
+# prefill (M > 512): large M tile; the GEMM is MXU-bound at these M.
+_BLOCK_TABLE = {
+    "decode": (16, 256, 512),
+    "mixed": (128, 128, 256),
+    "prefill": (256, 256, 256),
+}
+
+
+def gemm_regime(m: int) -> str:
+    if m <= 32:
+        return "decode"
+    if m <= 512:
+        return "mixed"
+    return "prefill"
+
+
+def select_blocks(m: int, k: int, n: int, r: int = 0):
+    """(BM, BN, BK) for a (M, K, N, R) problem; clamped to the actual dims.
+    Large ranks shrink BN so the U tile + f32 accumulator stay within VMEM."""
+    bm, bn, bk = _BLOCK_TABLE[gemm_regime(m)]
+    bm = min(bm, _round_pow2(max(m, 8)))
+    bn = min(bn, _round_pow2(max(n, 8)))
+    bk = min(bk, _round_pow2(max(k, 8)))
+    if r >= 512:
+        bn = min(bn, 128)
+    return bm, bn, bk
+
+
+# ---------------------------------------------------------------------------
+# single-kernel wrappers
+# ---------------------------------------------------------------------------
 
 
 def act_quant(x: jnp.ndarray, spec: QuantSpec, bm: int = 128):
@@ -49,45 +107,115 @@ def fwht(x: jnp.ndarray, bm: int = 256):
     return fwht_kernel(xp, bm=bm, interpret=_interpret())[:m]
 
 
-def w4a4_lowrank_matmul(
+def fused_prologue(x: jnp.ndarray, v, spec: QuantSpec,
+                   rotate: bool = False, bm: int = 128):
+    """Single-HBM-pass activation prologue: optional WHT rotation, per-token
+    quantization, and the (x·V) projection, from one row-tile read of x.
+
+    x: (M, K); v: (K, R) or None.  Returns (xq, sx, xv-or-None)."""
+    assert spec.group_size is None, "kernel path: per-token scales only"
+    xp, m = _pad_to(x, bm, 0)
+    q, s, xv = fused_prologue_kernel(
+        xp, None if v is None else jnp.asarray(v, jnp.float32),
+        bits=spec.bits, clip_ratio=spec.clip_ratio, rotate=rotate, bm=bm,
+        interpret=_interpret(),
+    )
+    return q[:m], s[:m], None if xv is None else xv[:m]
+
+
+# ---------------------------------------------------------------------------
+# fused W4A4 + LRC forward
+# ---------------------------------------------------------------------------
+
+
+def _pad_gemm_operands(xq, sx, wpacked, w_scale, u, xv, bm, bn, bk):
+    """Zero-pad every GEMM operand to its block multiple.  Zero weight
+    nibbles/scales/U-rows contribute nothing, so padded K/N columns are exact;
+    padded M rows are sliced off the output."""
+    xqp, _ = _pad_to(xq, bm, 0)
+    xqp, _ = _pad_to(xqp, bk, 1)
+    sxp, _ = _pad_to(sx, bm, 0)
+    wp, _ = _pad_to(wpacked, bk // 2, 0)  # K//2 rows
+    wp, _ = _pad_to(wp, bn, 1)
+    sw, _ = _pad_to(w_scale.reshape(1, -1), bn, 1)
+    if u is not None:
+        u, _ = _pad_to(jnp.asarray(u, jnp.float32), bn, 0)
+        xv, _ = _pad_to(xv, bm, 0)
+    return xqp, sxp, wp, sw, u, xv
+
+
+def w4a4_lrc_forward(
     x: jnp.ndarray,  # (M, K) float
     wpacked: jnp.ndarray,  # (K//2, N) uint8
     w_scale: jnp.ndarray,  # (N,)
     u,  # (N, R) or None
     v,  # (K, R) or None
     act_spec: QuantSpec,
-    bm: int = 128,
-    bn: int = 128,
-    bk: int = 256,
+    rotate: bool = False,
+    blocks=None,  # optional (bm, bn, bk) override; default: autotune table
 ):
-    """Full fused path: quantize activations, W4A4 GEMM + LR epilogue."""
+    """The full W4A4+LRC serving hot path, two kernels end to end:
+
+      1. fused activation prologue — ONE HBM read of x yields the rotated,
+         quantized activations and the (x·V) projection;
+      2. fused W4A4 GEMM + low-rank epilogue (kernels/w4a4.py).
+
+    ``rotate`` applies the online Walsh-Hadamard rotation (K power of two)
+    inside the prologue.  All operands are zero-padded to block multiples, so
+    arbitrary M/K/N (odd MLP widths included) take the pallas path.
+    """
     m0, k = x.shape
     n = wpacked.shape[1]
-    bm = min(bm, _round_pow2(m0))
-    bn = min(bn, n)
-    bk = min(bk, k)
-    assert k % bk == 0 and n % bn == 0, (k, n, bk, bn)
+    r = 0 if v is None else v.shape[-1]
+    bm, bn, bk = blocks if blocks is not None else select_blocks(m0, k, n, r)
 
-    xq, sx = act_quant(x, act_spec, bm=bm)
-    xv = None
-    if u is not None:
-        xv = (x.astype(jnp.float32) @ v.astype(jnp.float32)).astype(jnp.float32)
-        xv, _ = _pad_to(xv, bm, 0)
-    xqp, _ = _pad_to(xq, bm, 0)
-    sxp, _ = _pad_to(sx, bm, 0)
+    if rotate:
+        assert k & (k - 1) == 0, \
+            f"online rotation needs power-of-two K, got {k}"
+    assert act_spec.group_size is None, "kernel path: per-token scales only"
+    # run the prologue on the M-padded activations directly — its outputs
+    # stay bm-aligned so the GEMM padding below never re-pads axis 0
+    xp, _ = _pad_to(x, bm, 0)
+    if r == 0 or (k * r * 4) <= _PROLOGUE_V_BYTES_MAX:
+        xq, sx, xv = fused_prologue_kernel(
+            xp, jnp.asarray(v, jnp.float32) if r else None,
+            bits=act_spec.bits, clip_ratio=act_spec.clip_ratio,
+            rotate=rotate, bm=bm, interpret=_interpret(),
+        )
+    else:  # unfused fallback: V too large for VMEM residency
+        xr = fwht(xp, bm=bm) if rotate else xp
+        xq, sx = act_quant(xr, act_spec, bm=bm)
+        xv = xr.astype(jnp.float32) @ jnp.asarray(v, jnp.float32)
+
+    xqp, sxp, wp, sw, up, xvp = _pad_gemm_operands(
+        xq, sx, wpacked, w_scale, u if r else None, xv, bm, bn, bk)
     out = w4a4_lowrank_matmul_kernel(
-        xqp, sxp, wpacked, w_scale.reshape(1, -1),
-        xv, u if u is None else jnp.asarray(u, jnp.float32),
+        xqp, sxp, wp, sw, xvp, up,
         bm=bm, bn=bn, bk=bk, interpret=_interpret(),
     )
-    return out[:m0]
+    return out[:m0, :n]
 
 
-def _round_pow2(m: int) -> int:
-    p = 8
-    while p * 2 <= m:
-        p *= 2
-    return p
+def w4a4_lowrank_matmul(
+    x: jnp.ndarray,
+    wpacked: jnp.ndarray,
+    w_scale: jnp.ndarray,
+    u,
+    v,
+    act_spec: QuantSpec,
+    bm: int = None,
+    bn: int = None,
+    bk: int = None,
+):
+    """Back-compat alias for :func:`w4a4_lrc_forward` (no online rotation)."""
+    blocks = None
+    if bm is not None or bn is not None or bk is not None:
+        m0, k = x.shape
+        n = wpacked.shape[1]
+        r = 0 if v is None else v.shape[-1]
+        dbm, dbn, dbk = select_blocks(m0, k, n, r)
+        blocks = (bm or dbm, bn or dbn, bk or dbk)
+    return w4a4_lrc_forward(x, wpacked, w_scale, u, v, act_spec, blocks=blocks)
 
 
 def flash_attention(q, k, v, scale: float, causal: bool = True,

@@ -1,0 +1,131 @@
+"""Fused activation prologue: rotate -> quantize -> low-rank project.
+
+The W4A4+LRC serving path needs three activation-side products before the
+quantized GEMM can run:
+
+  x_rot = x @ H          (QuaRot online Walsh-Hadamard rotation, optional)
+  xq,sx = Q_a(x_rot)     (per-token int4-grid quantization, paper §2)
+  xv    = x_rot @ V      (the low-rank projection half of (xV)Uᵀ)
+
+Unfused these are three independent HBM passes over the activations (plus a
+rotated-x round-trip) — exactly the "data movement is important" regime the
+paper's §5 measures as a 23-52% latency tax, and LQER identifies as
+activation-bandwidth-bound at decode batch sizes.  This kernel performs all
+three on a row tile of ``x`` held in VMEM: the grid walks M tiles once, each
+tile is read from HBM a single time, and ``xq``/``sx``/``xv`` are emitted
+directly — no rotated-x or float intermediate ever returns to HBM.
+
+Semantics are bit-identical to the three-pass reference chain
+(`hadamard.fwht_kernel` → `actquant.act_quant_kernel` → ``x_rot @ V``) for
+float32 inputs: the butterfly, the amax guard, and the scale-then-round all
+reuse the same operation order.
+
+V is kept whole in VMEM (R ≪ K); the ops-layer wrapper falls back to the
+unfused path when (K, R) would not fit.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.rowops import fwht_rows, scale_round_quantize
+
+
+def _kernel_lr(x_ref, v_ref, q_ref, s_ref, xv_ref, *,
+               qmax: int, clip_ratio: float, rotate: bool, d: int):
+    x = x_ref[...].astype(jnp.float32)
+    if rotate:
+        x = fwht_rows(x, d)
+    q, s = scale_round_quantize(x, qmax, clip_ratio)
+    q_ref[...] = q
+    s_ref[...] = s
+    xv_ref[...] = jax.lax.dot_general(
+        x, v_ref[...].astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def _kernel_nolr(x_ref, q_ref, s_ref, *,
+                 qmax: int, clip_ratio: float, rotate: bool, d: int):
+    x = x_ref[...].astype(jnp.float32)
+    if rotate:
+        x = fwht_rows(x, d)
+    q, s = scale_round_quantize(x, qmax, clip_ratio)
+    q_ref[...] = q
+    s_ref[...] = s
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bits", "clip_ratio", "rotate", "bm", "interpret"),
+)
+def fused_prologue_kernel(
+    x: jnp.ndarray,  # (M, K)
+    v,  # (K, R) or None
+    bits: int = 4,
+    clip_ratio: float = 1.0,
+    rotate: bool = False,
+    bm: int = 128,
+    interpret: bool = True,
+):
+    """One grid pass over row tiles: returns (xq int8, sx (M,1) f32[, xv f32]).
+
+    ``rotate`` applies the normalized WHT over K (requires K a power of two)
+    before quantization and projection, matching fwht_kernel → act_quant_kernel
+    → x_rot @ V run back-to-back.
+    """
+    m, k = x.shape
+    assert m % bm == 0, (m, bm)
+    if rotate:
+        assert k & (k - 1) == 0, f"online rotation needs power-of-two K, got {k}"
+    qmax = 2 ** (bits - 1) - 1
+    grid = (m // bm,)
+    semantics = pltpu.TPUCompilerParams(dimension_semantics=("parallel",))
+
+    if v is None:
+        q, s = pl.pallas_call(
+            functools.partial(_kernel_nolr, qmax=qmax, clip_ratio=clip_ratio,
+                              rotate=rotate, d=k),
+            grid=grid,
+            in_specs=[pl.BlockSpec((bm, k), lambda i: (i, 0))],
+            out_specs=[
+                pl.BlockSpec((bm, k), lambda i: (i, 0)),
+                pl.BlockSpec((bm, 1), lambda i: (i, 0)),
+            ],
+            out_shape=[
+                jax.ShapeDtypeStruct((m, k), jnp.int8),
+                jax.ShapeDtypeStruct((m, 1), jnp.float32),
+            ],
+            compiler_params=semantics,
+            interpret=interpret,
+        )(x)
+        return q, s, None
+
+    r = v.shape[1]
+    q, s, xv = pl.pallas_call(
+        functools.partial(_kernel_lr, qmax=qmax, clip_ratio=clip_ratio,
+                          rotate=rotate, d=k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i: (i, 0)),  # x row tile
+            pl.BlockSpec((k, r), lambda i: (0, 0)),  # V, whole, reused per tile
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, k), lambda i: (i, 0)),
+            pl.BlockSpec((bm, 1), lambda i: (i, 0)),
+            pl.BlockSpec((bm, r), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, k), jnp.int8),
+            jax.ShapeDtypeStruct((m, 1), jnp.float32),
+            jax.ShapeDtypeStruct((m, r), jnp.float32),
+        ],
+        compiler_params=semantics,
+        interpret=interpret,
+    )(x, v)
+    return q, s, xv

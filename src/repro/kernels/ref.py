@@ -35,6 +35,18 @@ def fwht_ref(x):
     return fwht(x.astype(jnp.float32)).astype(x.dtype)
 
 
+def fused_prologue_ref(x, v=None, bits: int = 4, clip_ratio: float = 1.0,
+                       rotate: bool = False):
+    """Three-pass reference for the fused activation prologue: WHT rotation,
+    per-token quantization, and the (x·V) projection, run back-to-back."""
+    x = x.astype(jnp.float32)
+    if rotate:
+        x = fwht_ref(x)
+    q, s = act_quant_ref(x, bits=bits, clip_ratio=clip_ratio)
+    xv = None if v is None else x @ v.astype(jnp.float32)
+    return q, s, xv
+
+
 def flash_attention_ref(q, k, v, scale: float, causal: bool = True):
     """q/k/v: (BH, S, D) — standard softmax attention."""
     s_ = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale

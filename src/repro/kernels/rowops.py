@@ -1,0 +1,36 @@
+"""Shared row-tile compute bodies used by multiple Pallas kernels.
+
+The fused prologue's bitwise-parity contract with the standalone hadamard /
+actquant kernels (tests/test_kernels_prologue.py acceptance) holds because
+all three import THESE implementations — the butterfly order and the
+scale-then-round operation order live in exactly one place.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def fwht_rows(y: jnp.ndarray, d: int) -> jnp.ndarray:
+    """Normalized Walsh-Hadamard transform over the last axis of a (bm, d)
+    f32 tile, d a power of two: log2(d) butterfly sweeps in registers/VMEM."""
+    bm = y.shape[0]
+    h = 1
+    while h < d:
+        y = y.reshape(bm, d // (2 * h), 2, h)
+        a = y[:, :, 0, :]
+        b = y[:, :, 1, :]
+        y = jnp.stack([a + b, a - b], axis=2)
+        h *= 2
+    return y.reshape(bm, d) * (1.0 / (d**0.5))
+
+
+def scale_round_quantize(x: jnp.ndarray, qmax: int, clip_ratio: float):
+    """Paper §2 scale-then-round on the symmetric int grid: per-token amax
+    (zero-guarded) → s = c·amax/qmax → q = clip(round(x/s)).
+    Returns (q int8, s f32 (bm, 1))."""
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    amax = jnp.where(amax <= 0.0, 1.0, amax)
+    s = clip_ratio * amax / qmax
+    q = jnp.clip(jnp.round(x / s), -qmax - 1, qmax)
+    return q.astype(jnp.int8), s

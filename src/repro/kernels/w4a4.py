@@ -44,8 +44,8 @@ def _unpack_block(wp):
     return w.reshape(bk2 * 2, bn)
 
 
-def _kernel(xq_ref, sx_ref, wp_ref, sw_ref, xv_ref, u_ref, out_ref, acc_ref, *,
-            n_k: int, with_lr: bool):
+def _body(xq_ref, sx_ref, wp_ref, sw_ref, xv_ref, u_ref, out_ref, acc_ref, *,
+          n_k: int):
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -61,7 +61,7 @@ def _kernel(xq_ref, sx_ref, wp_ref, sw_ref, xv_ref, u_ref, out_ref, acc_ref, *,
     @pl.when(k == n_k - 1)
     def _epilogue():
         out = acc_ref[...].astype(jnp.float32) * sx_ref[...] * sw_ref[...]
-        if with_lr:
+        if xv_ref is not None:
             lr = jax.lax.dot_general(
                 xv_ref[...].astype(jnp.float32),
                 u_ref[...].astype(jnp.float32),
@@ -70,6 +70,17 @@ def _kernel(xq_ref, sx_ref, wp_ref, sw_ref, xv_ref, u_ref, out_ref, acc_ref, *,
             )
             out = out + lr
         out_ref[...] = out
+
+
+def _kernel_lr(xq_ref, sx_ref, wp_ref, sw_ref, xv_ref, u_ref, out_ref, acc_ref,
+               *, n_k: int):
+    _body(xq_ref, sx_ref, wp_ref, sw_ref, xv_ref, u_ref, out_ref, acc_ref,
+          n_k=n_k)
+
+
+def _kernel_nolr(xq_ref, sx_ref, wp_ref, sw_ref, out_ref, acc_ref, *, n_k: int):
+    _body(xq_ref, sx_ref, wp_ref, sw_ref, None, None, out_ref, acc_ref,
+          n_k=n_k)
 
 
 @functools.partial(
@@ -93,26 +104,38 @@ def w4a4_lowrank_matmul_kernel(
     assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
     n_k = k // bk
     with_lr = xv is not None
-    if not with_lr:  # placeholder operands keep the pallas signature static
-        xv = jnp.zeros((m, 8), jnp.float32)
-        u = jnp.zeros((n, 8), jnp.float32)
-    r = xv.shape[1]
 
     grid = (m // bm, n // bn, n_k)
-    out = pl.pallas_call(
-        functools.partial(_kernel, n_k=n_k, with_lr=with_lr),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),  # xq
-            pl.BlockSpec((bm, 1), lambda i, j, kk: (i, 0)),  # sx
-            pl.BlockSpec((bk // 2, bn), lambda i, j, kk: (kk, j)),  # wpacked
-            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),  # sw
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),  # xq
+        pl.BlockSpec((bm, 1), lambda i, j, kk: (i, 0)),  # sx
+        pl.BlockSpec((bk // 2, bn), lambda i, j, kk: (kk, j)),  # wpacked
+        pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),  # sw
+    ]
+    operands = [xq, sx, wpacked, sw]
+    if with_lr:  # rank-0 calls simply omit the LR operands from the signature
+        r = xv.shape[1]
+        in_specs += [
             pl.BlockSpec((bm, r), lambda i, j, kk: (i, 0)),  # xv
             pl.BlockSpec((bn, r), lambda i, j, kk: (j, 0)),  # u
-        ],
+        ]
+        operands += [xv, u]
+        kernel = functools.partial(_kernel_lr, n_k=n_k)
+    else:
+        kernel = functools.partial(_kernel_nolr, n_k=n_k)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        # Mosaic pipeline: M/N tiles are independent (megacore-splittable);
+        # K carries the accumulator and must stay sequential + innermost.
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
         interpret=interpret,
-    )(xq, sx, wpacked, sw, xv, u)
+    )(*operands)
     return out

@@ -175,6 +175,33 @@ def roofline_from_costs(costs: dict, model_flops_total: float, n_chips: int,
     )
 
 
+def prologue_activation_bytes(m: int, k: int, r: int = 0, *,
+                              rotate: bool = True, fused: bool = False,
+                              act_bytes: int = 2) -> float:
+    """Activation-side HBM traffic of the W4A4+LRC prologue
+    (rotate → quantize → low-rank project) for an (M, K) activation block.
+
+    unfused — three independent passes: the WHT kernel reads x and writes the
+    rotated copy; the quantizer re-reads it and writes xq/sx; the (x·V)
+    projection re-reads it once more and writes xv.
+    fused   — kernels/prologue.py: ONE read of x emits xq, sx and xv; the
+    rotated copy never exists in HBM.
+
+    Weight-side bytes (V itself, the packed W) are identical in both layouts
+    and excluded — this isolates exactly the traffic fusion removes.
+    """
+    a = m * k * act_bytes  # one full read or write of the activation block
+    out = m * k + 4 * m + (4 * m * r if r else 0)  # xq + sx (+ xv f32)
+    if fused:
+        return a + out
+    total = a + out  # quantizer pass: read source, write xq/sx
+    if rotate:
+        total += 2 * a  # WHT pass: read x, write the rotated copy to HBM
+    if r:
+        total += a  # projection pass re-reads the (rotated) activations
+    return total
+
+
 def model_flops(cfg, shape) -> float:
     """MODEL_FLOPS = 6·N·D (train) / 2·N·D (inference); N = active matmul
     params (embedding lookup excluded), D = tokens processed."""

@@ -17,6 +17,10 @@ def main():
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--impl", default="auto",
+                    choices=("auto", "sim", "int8", "pallas"),
+                    help="QLinear execution path for decode; auto = fused "
+                         "pallas kernels on TPU, calibrated impl on CPU")
     args = ap.parse_args()
 
     import jax
@@ -43,7 +47,8 @@ def main():
         )
         print("serving the W4A4+LRC quantized model")
 
-    eng = ServeEngine(cfg, params, batch_slots=args.slots, max_seq=args.max_seq)
+    eng = ServeEngine(cfg, params, batch_slots=args.slots, max_seq=args.max_seq,
+                      kernel_impl=args.impl)
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         eng.submit(Request(

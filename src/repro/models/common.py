@@ -10,6 +10,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.jaxcompat import get_abstract_mesh
 from repro.quant.qlinear import apply_linear
 
 
@@ -67,7 +68,7 @@ def shard_hint(x: jnp.ndarray, axes: tuple) -> jnp.ndarray:
     ``axes`` entries: mesh-axis name (shard, with divisibility guard →
     FREE), None (force replicated), or FREE (leave to GSPMD).
     """
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = get_abstract_mesh()
     if mesh is None or not mesh.axis_names:
         return x
     P = jax.sharding.PartitionSpec
@@ -94,7 +95,7 @@ def attn_qkv_hints(q, k, v):
         fix, §Perf);
       * decode (q_len == 1) is left to GSPMD (logits are tiny).
     """
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = get_abstract_mesh()
     if mesh is None or not mesh.axis_names or "model" not in mesh.shape:
         return q, k, v
     tp = mesh.shape["model"]

@@ -138,11 +138,18 @@ def _apply_int8(q: QLinear, x: jnp.ndarray) -> jnp.ndarray:
 
 
 def _apply_pallas(q: QLinear, x: jnp.ndarray) -> jnp.ndarray:
+    """Two fused kernels: activation prologue (quantize + low-rank project in
+    one HBM pass over x) chained into the W4A4 GEMM + low-rank epilogue.
+
+    Precision note: the kernels compute the (xV)Uᵀ correction in f32 VMEM
+    from the (bf16-stored) factors, so outputs differ from the int8 path —
+    which matmuls in the LR storage dtype — by ~bf16 epsilon of the LR term
+    (the fused path is the more accurate of the two)."""
     from repro.kernels import ops
 
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
-    y = ops.w4a4_lowrank_matmul(
+    y = ops.w4a4_lrc_forward(
         x2, q.qweight, q.w_scale, q.u, q.v, act_spec=q.act_spec
     )
     return y.reshape(*lead, q.d_out).astype(x.dtype)
@@ -154,6 +161,10 @@ def qlinear_apply(q: QLinear, x: jnp.ndarray) -> jnp.ndarray:
     if q.impl == "int8":
         return _apply_int8(q, x)
     if q.impl == "pallas":
+        if q.act_group is not None:
+            # the fused kernels emit per-token scales only; group-wise
+            # calibrated layers (paper Table 2) run the int8 grouped GEMM
+            return _apply_int8(q, x)
         return _apply_pallas(q, x)
     raise ValueError(f"unknown impl {q.impl!r}")
 
@@ -163,3 +174,18 @@ def apply_linear(w, x: jnp.ndarray) -> jnp.ndarray:
     if isinstance(w, QLinear):
         return qlinear_apply(w, x)
     return x @ w.astype(x.dtype)
+
+
+def retag_qlinear_impl(params, impl: str):
+    """Switch every QLinear leaf in a param tree to another execution path
+    (e.g. the serving engine retags to "pallas" so decode runs the fused
+    prologue + GEMM kernels).  Non-QLinear leaves pass through unchanged."""
+    assert impl in ("sim", "int8", "pallas"), impl
+
+    def _retag(leaf):
+        if isinstance(leaf, QLinear):
+            return dataclasses.replace(leaf, impl=impl)
+        return leaf
+
+    return jax.tree.map(_retag, params,
+                        is_leaf=lambda l: isinstance(l, QLinear))

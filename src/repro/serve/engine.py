@@ -39,8 +39,20 @@ class Request:
 
 class ServeEngine:
     def __init__(self, cfg, params, batch_slots: int = 4, max_seq: int = 256,
-                 eos_id: Optional[int] = None, seed: int = 0):
+                 eos_id: Optional[int] = None, seed: int = 0,
+                 kernel_impl: Optional[str] = "auto"):
         assert cfg.family in ("dense", "vlm", "ssm", "hybrid", "moe"), cfg.family
+        # Decode runs W4A4+LRC through the fused pallas path (activation
+        # prologue + GEMM/epilogue kernels) whenever a compiled backend is
+        # attached; "auto" keeps the calibrated impl on CPU where the pallas
+        # interpreter would only slow the reference semantics down.  Pass an
+        # explicit impl ("pallas"/"int8"/"sim") to force a path.
+        if kernel_impl == "auto":
+            kernel_impl = "pallas" if jax.default_backend() != "cpu" else None
+        if kernel_impl is not None:
+            from repro.quant.qlinear import retag_qlinear_impl
+
+            params = retag_qlinear_impl(params, kernel_impl)
         self.cfg = cfg
         self.params = params
         self.b = batch_slots

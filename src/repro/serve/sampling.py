@@ -14,5 +14,7 @@ def sample_token(logits, key, temperature: float = 0.0, top_k: int = 0):
     if top_k > 0:
         vals, _ = jax.lax.top_k(logits, top_k)
         cutoff = vals[..., -1:]
-        logits = jnp.where(logits < cutoff, -1e30, logits)
+        # dtype-aware mask: -1e30 overflows float16 (max ~6.5e4) to -inf and
+        # can NaN through downstream softmax arithmetic
+        logits = jnp.where(logits < cutoff, jnp.finfo(logits.dtype).min, logits)
     return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

@@ -1,0 +1,80 @@
+"""Minimal deterministic stand-in for `hypothesis` (not installed in the
+hermetic container — tier-1 must still run the property tests).
+
+Implements exactly the surface this test-suite uses: ``given``, ``settings``
+and the ``integers`` / ``sampled_from`` / ``booleans`` strategies (plus
+``.map``).  ``given`` draws a fixed number of pseudo-random examples from a
+seeded generator, so runs are reproducible; real hypothesis, when available,
+is always preferred (see conftest.py).
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+
+import numpy as np
+
+_DEFAULT_EXAMPLES = 20
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng):
+        return self._draw(rng)
+
+    def map(self, fn):
+        return _Strategy(lambda rng: fn(self._draw(rng)))
+
+
+class _strategies:
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    @staticmethod
+    def sampled_from(options):
+        options = list(options)
+        return _Strategy(lambda rng: options[int(rng.integers(len(options)))])
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda rng: bool(rng.integers(2)))
+
+
+strategies = _strategies
+
+
+def settings(max_examples: int = _DEFAULT_EXAMPLES, **_ignored):
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(**named_strategies):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            # @settings is applied OUTSIDE @given, so it stamps the wrapper
+            n = getattr(wrapper, "_stub_max_examples",
+                        getattr(fn, "_stub_max_examples", _DEFAULT_EXAMPLES))
+            rng = np.random.default_rng(12345)
+            for _ in range(n):
+                drawn = {k: s.draw(rng) for k, s in named_strategies.items()}
+                fn(*args, **kwargs, **drawn)
+
+        # hide the strategy-drawn parameters from pytest's fixture resolution
+        # (functools.wraps exposes the original signature via __wrapped__)
+        sig = inspect.signature(fn)
+        wrapper.__signature__ = sig.replace(parameters=[
+            p for name, p in sig.parameters.items()
+            if name not in named_strategies
+        ])
+        del wrapper.__wrapped__
+        return wrapper
+
+    return deco

@@ -25,9 +25,9 @@ p = moe_lib.init_moe_params(cfg, key, jnp.float32)
 rng = np.random.default_rng(0)
 x = jnp.asarray(rng.standard_normal((2, 16, cfg.d_model)), jnp.float32)
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
-with jax.set_mesh(mesh):
+from repro.core.jaxcompat import make_mesh, set_mesh
+mesh = make_mesh((2, 4), ("data", "model"))
+with set_mesh(mesh):
     dense = jax.jit(lambda p, x: moe_lib.moe_block(cfg, p, x, impl="dense"))(p, x)
     ep = jax.jit(lambda p, x: moe_lib.moe_block(cfg, p, x, impl="ep"))(p, x)
 err = float(jnp.abs(dense - ep).max())
@@ -37,7 +37,7 @@ assert rel < 2e-5, rel
 
 # with a tight capacity factor, EP drops tokens but stays finite
 cfg2 = dataclasses.replace(cfg, capacity_factor=0.5)
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     ep2 = jax.jit(lambda p, x: moe_lib.moe_block(cfg2, p, x, impl="ep"))(p, x)
 assert bool(jnp.all(jnp.isfinite(ep2)))
 print("OK")

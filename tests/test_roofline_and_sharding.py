@@ -96,10 +96,9 @@ def test_config_registry_complete():
 
 def _mesh22():
     # AbstractMesh: rule logic only needs axis names/sizes (1-device CPU test)
-    return jax.sharding.AbstractMesh(
-        (2, 2), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    from repro.core.jaxcompat import abstract_mesh
+
+    return abstract_mesh((2, 2), ("data", "model"))
 
 
 def test_param_rules_shard_attention_and_mlp():

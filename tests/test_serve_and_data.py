@@ -42,6 +42,22 @@ def test_sampling_modes(rng):
     assert t.shape == (3,)
 
 
+def test_sampling_topk_halfprec_logits_finite(rng):
+    """The top-k mask must be dtype-aware: a -1e30 fill overflows float16
+    (max ~6.5e4) to -inf, which can NaN through temperature scaling /
+    categorical; bf16 shares the mantissa problem at lower severity."""
+    for dtype in (jnp.float16, jnp.bfloat16):
+        logits = jnp.asarray(rng.standard_normal((4, 64)) * 8, dtype)
+        t = sample_token(logits, jax.random.PRNGKey(1), temperature=0.7, top_k=3)
+        assert t.shape == (4,)
+        assert bool(jnp.all((t >= 0) & (t < 64)))
+        # the dtype-aware mask stays finite (the old -1e30 fill is -inf in f16)
+        vals, _ = jax.lax.top_k(logits, 3)
+        masked = jnp.where(logits < vals[..., -1:], jnp.finfo(dtype).min, logits)
+        assert bool(jnp.all(jnp.isfinite(masked.astype(jnp.float32))))
+    assert not np.isfinite(np.float16(-1e30))  # what the fix guards against
+
+
 @pytest.mark.parametrize("family_arch", ["smollm-135m", "mamba2-370m"])
 def test_engine_matches_sequential_greedy(family_arch, rng):
     """Engine output == manual greedy decode — batching must not change
@@ -90,7 +106,8 @@ import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
 from repro.train.compression import compressed_psum, zero_residual
 
-mesh = jax.make_mesh((4,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.core.jaxcompat import make_mesh, set_mesh, shard_map
+mesh = make_mesh((4,), ("data",))
 rng = np.random.default_rng(0)
 g_local = jnp.asarray(rng.standard_normal((4, 64, 32)), jnp.float32)
 
@@ -100,9 +117,9 @@ def f(g):
         res = zero_residual(grads)
         out, _ = compressed_psum(grads, res, "data")
         return out["w"]
-    return jax.shard_map(inner, mesh=mesh, in_specs=P("data"), out_specs=P("data"))(g)
+    return shard_map(inner, mesh=mesh, in_specs=P("data"), out_specs=P("data"))(g)
 
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     out = jax.jit(f)(g_local)
 exact = jnp.mean(g_local, axis=0, keepdims=True)
 err = float(jnp.abs(out[0] - exact[0]).max()) / float(jnp.abs(exact).max())
