@@ -1,0 +1,158 @@
+"""Autotune sweep for the W4A4+LRC kernel execution-plan table.
+
+For each serving regime (decode / mixed / prefill) this harness evaluates
+candidate execution plans — kernel path (fused single-kernel vs. the
+prologue → GEMM chain) × (BM, BN, BK) tiles — at a representative
+(M, K, N, R) shape, scores them, and persists the winners to
+``results/block_table.json``, which ``repro.kernels.ops.load_block_table``
+overlays onto the analytic defaults (``launch/serve.py --block-table``).
+
+Two scoring modes:
+
+  --measure    wall-clock the actual kernels.  Meaningful on a real TPU
+               (compiled Mosaic); on CPU the pallas interpreter's overhead
+               swamps tile effects, so measured winners from a CPU run are
+               NOT committed.
+  (default)    analytic: the v5e roofline byte/FLOP model plus a VMEM
+               feasibility check — deterministic, hardware-free, and the
+               source of the committed table.
+
+    PYTHONPATH=src python -m benchmarks.autotune_blocks [--measure]
+        [--out results/block_table.json] [--smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+import itertools
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.latency_kernels import _roofline_time
+
+RESULTS = Path(__file__).resolve().parents[1] / "results"
+
+# representative (M, K, N, R) per regime: Llama-7B MLP shapes, rank 128
+REGIME_SHAPES = {
+    "decode": (16, 4096, 11008, 128),
+    "mixed": (256, 4096, 11008, 128),
+    "prefill": (2048, 4096, 11008, 128),
+}
+
+CANDIDATE_BMS = {"decode": [8, 16, 32], "mixed": [64, 128, 256],
+                 "prefill": [128, 256, 512]}
+CANDIDATE_BNS = [128, 256, 512]
+CANDIDATE_BKS = [128, 256, 512]
+
+
+def _candidates(regime, smoke=False):
+    bms = CANDIDATE_BMS[regime]
+    bns, bks = CANDIDATE_BNS, CANDIDATE_BKS
+    if smoke:
+        bms, bns, bks = bms[:2], bns[:2], bks[:2]
+    for path, bm, bn, bk in itertools.product(("fused", "chained"),
+                                              bms, bns, bks):
+        yield dict(path=path, bm=bm, bn=bn, bk=bk)
+
+
+def _analytic_score(regime, cand):
+    """v5e roofline latency of the candidate; infeasible plans score inf."""
+    from repro.kernels.ops import (_FUSED_VMEM_BYTES_MAX,
+                                   _fused_vmem_bytes)
+
+    m, k, n, r = REGIME_SHAPES[regime]
+    if cand["path"] == "fused":
+        k_pad = k + (-k) % cand["bk"]
+        if _fused_vmem_bytes(cand["bm"], k, k_pad, cand["bn"], r) \
+                > _FUSED_VMEM_BYTES_MAX:
+            return (float("inf"), float("inf"))
+    # the roofline is tile-agnostic; break byte-model ties toward plans whose
+    # tiles divide the problem evenly (fewer ragged edge tiles), then toward
+    # LARGER tiles (fewer grid steps — less pipeline/loop overhead, bigger
+    # MXU ops)
+    t = _roofline_time(m, k, n, r, cand["path"])
+    waste = sum(((-d) % b) / d
+                for d, b in ((m, cand["bm"]), (n, cand["bn"]),
+                             (k, cand["bk"])))
+    steps = (-(-m // cand["bm"]) * -(-n // cand["bn"]) * -(-k // cand["bk"]))
+    return (t * (1.0 + 0.1 * waste), steps)
+
+
+def _measure_score(regime, cand, reps=3, scale_down=True):
+    """Wall-clock the actual kernel path.  On CPU the shapes are scaled down
+    so the interpreter finishes; only TPU numbers are table-worthy."""
+    import jax
+
+    from benchmarks.common import make_w4a4_problem
+    from repro.kernels import ops
+
+    m, k, n, r = REGIME_SHAPES[regime]
+    if scale_down and jax.default_backend() == "cpu":
+        m, k, n, r = min(m, 32), min(k, 512), min(n, 512), min(r, 32)
+    rng = np.random.default_rng(0)
+    spec, x, wp, s, u, v = make_w4a4_problem(rng, m, k, n, r)
+    blocks = (min(cand["bm"], m), min(cand["bn"], n), min(cand["bk"], k))
+
+    def f():
+        return ops.w4a4_lrc_forward(x, wp, s, u, v, spec,
+                                    blocks=blocks, impl=cand["path"])
+
+    try:
+        f().block_until_ready()  # compile
+    except Exception as e:  # infeasible tiling for this shape
+        print(f"    [{regime}] {cand} infeasible: {type(e).__name__}")
+        return (float("inf"), float("inf"))
+    t0 = time.time()
+    for _ in range(reps):
+        f().block_until_ready()
+    return ((time.time() - t0) / reps, 0)
+
+
+def autotune_sweep(measure: bool = False, smoke: bool = False) -> dict:
+    """Sweep all candidates per regime; return {regime: winning plan}."""
+    winners = {}
+    score = _measure_score if measure else _analytic_score
+    for regime in REGIME_SHAPES:
+        best, best_t = None, (float("inf"), float("inf"))
+        for cand in _candidates(regime, smoke=smoke):
+            t = score(regime, cand)
+            if t < best_t:
+                best, best_t = dict(cand), t
+        best["score_us"] = round(best_t[0] * 1e6, 2) \
+            if best_t[0] != float("inf") else None
+        best["shape_mknr"] = list(REGIME_SHAPES[regime])
+        winners[regime] = best
+        print(f"[{regime}] winner: {best}")
+    return winners
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--measure", action="store_true",
+                    help="wall-clock the kernels instead of the analytic "
+                         "roofline score (use on real TPU)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny candidate grid (CI sanity)")
+    ap.add_argument("--out", default=str(RESULTS / "block_table.json"))
+    args = ap.parse_args(argv)
+
+    winners = autotune_sweep(measure=args.measure, smoke=args.smoke)
+    out = Path(args.out)
+    out.parent.mkdir(exist_ok=True)
+    out.write_text(json.dumps(winners, indent=2) + "\n")
+    print(f"wrote {out}")
+
+    # round-trip through the loader so a malformed table fails HERE, not at
+    # serve time
+    from repro.kernels import ops
+
+    ops.load_block_table(out)
+    ops.reset_block_table()
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,101 @@
+"""CI roofline regression gate for the W4A4+LRC kernel byte model.
+
+Recomputes the analytic roofline rows (benchmarks/latency_kernels.py) from
+the CURRENT code and compares them against the committed baseline
+``results/latency_kernels.json``:
+
+  * every activation-byte column (``act_prologue_kb_{unfused,chained,fused}``,
+    i.e. ``prologue_activation_bytes`` on all three kernel paths) and every
+    predicted-latency column may not regress more than ``--tolerance``
+    (default 5%) over the baseline;
+  * the fused single-kernel path must stay STRICTLY below the chained path's
+    activation bytes at decode shapes (the PR acceptance invariant: the M×K
+    xq write+read is eliminated).
+
+Exit status 1 on any violation — wire this after the bench-smoke step in CI.
+
+    PYTHONPATH=src python -m benchmarks.check_regression \
+        [--baseline results/latency_kernels.json] [--tolerance 0.05]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from benchmarks.latency_kernels import HEADER, analytic_rows
+
+# columns the gate protects: lower is better, >tolerance growth fails
+_GUARDED = [
+    "us_unfused", "us_chained", "us_fused",
+    "act_prologue_kb_unfused", "act_prologue_kb_chained",
+    "act_prologue_kb_fused",
+]
+
+
+def check(baseline_path: Path, tolerance: float) -> list[str]:
+    baseline = json.loads(baseline_path.read_text())
+    b_idx = {h: i for i, h in enumerate(baseline["header"])}
+    missing = [c for c in _GUARDED + ["matrix", "ranks"] if c not in b_idx]
+    if missing:
+        return [f"baseline {baseline_path} lacks columns {missing}; "
+                "regenerate it with benchmarks/latency_kernels.py"]
+    b_rows = {(r[b_idx["matrix"]], r[b_idx["ranks"]]): r
+              for r in baseline["rows"]}
+    c_idx = {h: i for i, h in enumerate(HEADER)}
+
+    failures = []
+    matched = 0
+    for row in analytic_rows():
+        key = (row[c_idx["matrix"]], row[c_idx["ranks"]])
+        base = b_rows.get(key)
+        if base is None:
+            continue  # new shape, nothing to regress against
+        matched += 1
+        for col in _GUARDED:
+            b, c = base[b_idx[col]], row[c_idx[col]]
+            if not (isinstance(b, (int, float)) and isinstance(c, (int, float))):
+                continue
+            if b > 0 and c > b * (1.0 + tolerance):
+                failures.append(
+                    f"{key[0]} r={key[1]} {col}: {c} vs baseline {b} "
+                    f"(+{(c / b - 1) * 100:.1f}% > {tolerance * 100:.0f}%)")
+        # decode-shape invariant: the single kernel must beat the chain
+        if key[0].startswith("M16_"):
+            fu = row[c_idx["act_prologue_kb_fused"]]
+            ch = row[c_idx["act_prologue_kb_chained"]]
+            if not fu < ch:
+                failures.append(
+                    f"{key[0]} r={key[1]}: fused activation bytes {fu} kB "
+                    f"not strictly below chained {ch} kB")
+    if matched == 0:
+        failures.append(
+            f"no baseline rows matched current shapes — baseline "
+            f"{baseline_path} is stale; regenerate it")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline",
+                    default=str(Path(__file__).resolve().parents[1]
+                                / "results" / "latency_kernels.json"))
+    ap.add_argument("--tolerance", type=float, default=0.05)
+    args = ap.parse_args(argv)
+
+    failures = check(Path(args.baseline), args.tolerance)
+    if failures:
+        print("roofline regression gate FAILED:")
+        for f in failures:
+            print(f"  {f}")
+        return 1
+    print(f"roofline regression gate passed "
+          f"(tolerance {args.tolerance * 100:.0f}%, "
+          f"baseline {args.baseline})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

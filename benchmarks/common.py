@@ -23,6 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
+from repro.core.quantizers import QuantSpec, pack_int4
 from repro.models import model as model_lib
 from repro.models.config import reduced
 from repro.checkpoint.ckpt import load_checkpoint, save_checkpoint, latest_step
@@ -107,6 +108,20 @@ def make_policy(method: str, rank_frac: float = 0.10, act_group=None,
 
 def quantize(cfg, params, policy, calib):
     return quantize_model(cfg, params, calib, policy, rotate=True)
+
+
+def make_w4a4_problem(rng, m: int, k: int, n: int, r: int):
+    """Random (spec, x, wpacked, w_scale, u, v) W4A4+LRC problem in the
+    layout ops.w4a4_lrc_forward expects — ONE definition shared by the
+    bench smoke, the autotune measure mode, and the kernel parity tests, so
+    they all exercise the same problem family."""
+    spec = QuantSpec(bits=4, clip_ratio=0.9)
+    x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    q = jnp.asarray(rng.integers(-8, 8, (n, k)), jnp.int8)
+    s = jnp.asarray(rng.uniform(0.01, 0.2, (n,)), jnp.float32)
+    u = jnp.asarray(rng.standard_normal((n, r)), jnp.float32) if r else None
+    v = jnp.asarray(rng.standard_normal((k, r)), jnp.float32) if r else None
+    return spec, x, pack_int4(q).T, s, u, v
 
 
 def record(table: str, rows, header):

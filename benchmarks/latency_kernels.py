@@ -3,18 +3,26 @@
 The paper timed Cutlass int4 on an A100 and found even 128 ranks cost 23-52%
 extra latency (unfused second pass).  No TPU is attached here, so we report:
 
-  * the ROOFLINE-MODEL v5e latency of the unfused layer (int4 GEMM bytes +
-    a separate LR pass) vs. the FUSED kernel (one activation read, one output
-    write — kernels/w4a4.py), derived from exact byte/FLOP counts;
+  * the ROOFLINE-MODEL v5e latency of the W4A4+LRC layer on the three kernel
+    paths — unfused (three activation passes + GEMM), chained (PR 1: fused
+    prologue → GEMM, one M×K xq round-trip between them) and fused (single
+    kernel, kernels/fused_gemm.py: xq never touches HBM) — derived from
+    exact byte/FLOP counts;
+  * the activation-side HBM bytes of each path
+    (repro.launch.roofline.prologue_activation_bytes), the columns the CI
+    regression gate (benchmarks/check_regression.py) protects;
   * measured CPU wall-clock of the int8 execution path as a sanity ratio
     (relative, not absolute).
 
-Derived column = fused/unfused predicted-latency ratio — the win the paper's
-§5 speculates about.
+``--smoke`` swaps the analytic sweep for an actual-kernel run: the three
+paths execute in pallas interpret mode at small decode/mixed shapes, with
+bitwise cross-path parity checked and wall-clock recorded — the CI
+bench-smoke job runs this and uploads results/latency_kernels_smoke.json.
 """
 
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
@@ -33,55 +41,128 @@ RANKS = [0, 128, 256, 512, 1024]
 # compute-bound and fusion only saves energy/bytes, not latency.
 MS = [16, 256, 2048]
 
+HEADER = [
+    "matrix", "ranks",
+    "us_unfused", "us_chained", "us_fused",
+    "speedup_vs_fp16_unfused", "speedup_vs_fp16_fused",
+    "fused_over_chained",
+    "act_prologue_kb_unfused", "act_prologue_kb_chained",
+    "act_prologue_kb_fused", "act_prologue_byte_ratio",
+]
 
-def _roofline_time(m, k, n, r, fused: bool):
-    """Bytes + flops → v5e time bound for the W4A4(+LR) layer."""
+
+def _roofline_time(m, k, n, r, path: str):
+    """Bytes + flops → v5e time bound for the W4A4(+LR) layer on one path."""
     bytes_w = k * n / 2 + 4 * n  # packed int4 + scales
     bytes_x = m * k * 2  # bf16 activations read
-    bytes_q = m * k  # int8 quantized copy written+read
     bytes_out = m * n * 4
-    bytes_lr = (k * r + n * r) * 2 + m * r * 4 if r else 0
-    if fused or r == 0:
-        total_bytes = bytes_w + bytes_x + bytes_q + bytes_out + bytes_lr
-    else:
-        # unfused: second pass re-reads x and re-writes the output
-        total_bytes = bytes_w + bytes_x + bytes_q + 2 * bytes_out + bytes_lr + bytes_x
+    bytes_lr_w = (k * r + n * r) * 2 if r else 0  # U/V factor reads
+    inter = m * k + 4 * m + (4 * m * r if r else 0)  # xq + sx (+ xv)
+    total_bytes = bytes_w + bytes_x + bytes_out + bytes_lr_w
+    if path in ("chained", "unfused"):
+        total_bytes += 2 * inter  # prologue writes xq/sx/xv; GEMM reads back
+    if path == "unfused":
+        if r:
+            # separate LR pass: re-read x, read+write the output again
+            total_bytes += bytes_x + 2 * bytes_out
+        total_bytes += 2 * bytes_x  # online-rotation pass: x round-trip
     flops = 2 * m * k * n + (2 * m * (k + n) * r if r else 0)
     # int8 MXU runs ~2x bf16 peak on the GEMM portion
-    t_compute = (2 * m * k * n) / (2 * PEAK_FLOPS) + (flops - 2 * m * k * n) / PEAK_FLOPS
+    t_compute = (2 * m * k * n) / (2 * PEAK_FLOPS) \
+        + (flops - 2 * m * k * n) / PEAK_FLOPS
     t_mem = total_bytes / HBM_BW
     return max(t_compute, t_mem)
 
 
-def run():
+def analytic_rows(ms=MS, sizes=SIZES, ranks=RANKS):
+    """The roofline rows — shared by the full benchmark run and the CI
+    regression gate (which recomputes them against the committed baseline)."""
     rows = []
-    rng = np.random.default_rng(0)
-    for m in MS:
-        for k, n in SIZES:
+    for m in ms:
+        for k, n in sizes:
             # fp16 reference roofline: bf16 weights dominate
             t_fp16 = max((2 * m * k * n) / PEAK_FLOPS,
                          (k * n * 2 + m * (k + n) * 2) / HBM_BW)
-            for r in RANKS:
-                t_unfused = _roofline_time(m, k, n, r, fused=False)
-                t_fused = _roofline_time(m, k, n, r, fused=True)
-                # activation-prologue HBM traffic (rotate→quantize→project,
-                # online-rotated serving path): three passes vs. the fused
-                # kernels/prologue.py single pass
-                act_unfused = prologue_activation_bytes(m, k, r, rotate=True,
-                                                        fused=False)
-                act_fused = prologue_activation_bytes(m, k, r, rotate=True,
-                                                      fused=True)
+            for r in ranks:
+                t_un = _roofline_time(m, k, n, r, "unfused")
+                t_ch = _roofline_time(m, k, n, r, "chained")
+                t_fu = _roofline_time(m, k, n, r, "fused")
+                act = {p: prologue_activation_bytes(m, k, r, rotate=True,
+                                                    path=p)
+                       for p in ("unfused", "chained", "fused")}
                 rows.append([
                     f"M{m}_{n}x{k}", r,
-                    round(t_unfused * 1e6, 1), round(t_fused * 1e6, 1),
-                    round(t_fp16 / t_unfused, 2), round(t_fp16 / t_fused, 2),
-                    round(t_fused / t_unfused, 3),
-                    round(act_unfused / 1024, 1), round(act_fused / 1024, 1),
-                    round(act_unfused / act_fused, 2),
+                    round(t_un * 1e6, 1), round(t_ch * 1e6, 1),
+                    round(t_fu * 1e6, 1),
+                    round(t_fp16 / t_un, 2), round(t_fp16 / t_fu, 2),
+                    round(t_fu / t_ch, 3),
+                    round(act["unfused"] / 1024, 1),
+                    round(act["chained"] / 1024, 1),
+                    round(act["fused"] / 1024, 1),
+                    round(act["chained"] / act["fused"], 2),
                 ])
-    # CPU wall sanity: relative cost of the int8 path with/without LR (small size)
+    return rows
+
+
+def smoke_rows():
+    """Run the three kernel paths for real (pallas interpret mode) at small
+    decode/mixed shapes: cross-path bitwise parity + wall-clock."""
+    from benchmarks.common import make_w4a4_problem
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(0)
+    rows = []
+    # (m, k, n, r, rotate) — decode and mixed regime shapes, odd N included
+    shapes = [
+        (16, 256, 512, 0, False),
+        (16, 256, 512, 32, True),
+        (16, 512, 300, 64, False),
+        (64, 256, 256, 32, True),
+    ]
+    for m, k, n, r, rot in shapes:
+        spec, x, wp, s, u, v = make_w4a4_problem(rng, m, k, n, r)
+        outs, times = {}, {}
+        for impl in ("unfused", "chained", "fused"):
+            f = lambda: ops.w4a4_lrc_forward(x, wp, s, u, v, spec,
+                                             rotate=rot, impl=impl)
+            f().block_until_ready()  # compile
+            t0 = time.time()
+            out = f().block_until_ready()
+            times[impl] = (time.time() - t0) * 1e6
+            outs[impl] = np.asarray(out)
+        bitwise = (np.array_equal(outs["fused"], outs["chained"])
+                   and np.array_equal(outs["fused"], outs["unfused"]))
+        assert bitwise, f"cross-path mismatch at {(m, k, n, r, rot)}"
+        act_ch = prologue_activation_bytes(m, k, r, rotate=rot, path="chained")
+        act_fu = prologue_activation_bytes(m, k, r, rotate=rot, path="fused")
+        rows.append([
+            f"M{m}_{n}x{k}_r{r}{'_rot' if rot else ''}",
+            r,
+            round(times["unfused"], 1), round(times["chained"], 1),
+            round(times["fused"], 1),
+            "", "", "",
+            round(prologue_activation_bytes(m, k, r, rotate=rot,
+                                            path="unfused") / 1024, 1),
+            round(act_ch / 1024, 1), round(act_fu / 1024, 1),
+            round(act_ch / act_fu, 2),
+        ])
+    return rows
+
+
+def run(smoke: bool = False):
+    if smoke:
+        rows = smoke_rows()
+        record("latency_kernels_smoke", rows, HEADER)
+        return rows
+
+    rows = analytic_rows()
+    record("latency_kernels", rows, HEADER)
+
+    # CPU wall sanity (its own table — the roofline columns don't apply):
+    # relative cost of the int8 path with/without LR at a small size
     from repro.quant.qlinear import make_qlinear, qlinear_apply
 
+    rng = np.random.default_rng(0)
     d_in, d_out, r = 1024, 2048, 128
     q = jnp.asarray(rng.integers(-8, 8, (d_out, d_in)), jnp.int8)
     s = jnp.ones((d_out, 1), jnp.float32) * 0.02
@@ -99,17 +180,17 @@ def run():
 
     t0 = timed(make_qlinear(q, s, None, None, impl="int8"))
     t1 = timed(make_qlinear(q, s, u, v, impl="int8", lr_dtype=jnp.float32))
-    rows.append(["cpu_sim_1024x2048", r, round(t0, 1), round(t1, 1),
-                 "", "", round(t1 / t0, 3), "", "", ""])
-    record(
-        "latency_kernels", rows,
-        ["matrix", "ranks", "us_unfused", "us_fused",
-         "speedup_vs_fp16_unfused", "speedup_vs_fp16_fused", "fused_over_unfused",
-         "act_prologue_kb_unfused", "act_prologue_kb_fused",
-         "act_prologue_byte_ratio"],
-    )
+    record("latency_cpu_sanity",
+           [["cpu_int8_1024x2048", r, round(t0, 1), round(t1, 1),
+             round(t1 / t0, 3)]],
+           ["case", "ranks", "us_int8_nolr", "us_int8_lr", "lr_overhead"])
     return rows
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="run the actual kernels in interpret mode at small "
+                         "decode/mixed shapes (CI bench-smoke job)")
+    args = ap.parse_args()
+    run(smoke=args.smoke)

@@ -4,30 +4,40 @@ The paper's Limitations section (§5) measures that the *unfused* low-rank
 matmul costs 23-52% extra latency even at rank 128 ("data movement is
 important, and ... a fused kernel could improve latency") and speculates the
 low-rank path "may be computable in parallel with the low-bitwidth
-computation".  The serving hot path is now TWO fused kernels end to end
-(`ops.w4a4_lrc_forward`):
+computation".  The serving hot path is now ONE pallas kernel end to end
+(`ops.w4a4_lrc_forward`, fused_gemm.py): the grid covers (M-tile, N-tile)
+with the K reduction loop inside; the activation prologue (blocked
+Walsh-Hadamard rotation, per-token amax/scale + int4-grid quantization, and
+the (x·V) low-rank projection) runs on each M-tile's first N visit and
+deposits xq/sx/xv into VMEM scratch, from which the int8×int8→int32 MXU GEMM
+and the (xV)Uᵀ low-rank epilogue feed directly — the quantized activations
+never touch HBM.  Two graceful-degradation paths remain behind the same
+entry point:
 
-  1. prologue.py — fused activation prologue: ONE grid pass over row tiles
-     of x held in VMEM applies the blocked Walsh-Hadamard rotation, the
-     per-token amax/scale + int4-grid quantization, and the (x·V) low-rank
-     projection, emitting xq/sx/xv from a single HBM read of the activations
-     (the unfused chain made three passes plus a rotated-x round-trip);
-  2. w4a4.py — fused W4A4 GEMM + low-rank epilogue: packed-int4 weights are
-     unpacked in VMEM, the int8×int8→int32 MXU GEMM accumulates over K tiles,
-     and the epilogue applies the per-token/per-channel rescale AND the
-     (xV)Uᵀ term while the output tile is still in VMEM.
+  chained — prologue.py → w4a4.py, TWO kernels: the prologue emits xq/sx/xv
+     in one HBM pass over x, the GEMM+epilogue kernel consumes them (one
+     M×K xq round-trip between the two).  Used when the fused working set
+     exceeds VMEM, and by default at prefill M where the GEMM is MXU-bound.
+  unfused — three activation passes (hadamard.py, actquant.py, per-tile
+     projection) + the GEMM kernel.  Used when V alone is past the prologue
+     VMEM budget (`ops._PROLOGUE_V_BYTES_MAX`).
 
-Block sizes come from a small autotune table keyed on the (M, K, N, R)
-serving regime — decode / mixed / prefill (`ops.select_blocks`); all GEMM
+Execution plans (kernel path + block sizes) come from a small autotune table
+keyed on the (M, K, N, R) serving regime — decode / mixed / prefill
+(`ops.select_plan`); measured winners from benchmarks/autotune_blocks.py can
+overlay it via `ops.load_block_table(results/block_table.json)`.  All GEMM
 operands are zero-padded to block multiples so odd MLP widths take the
-pallas path; grids carry Mosaic ``dimension_semantics`` annotations
-(parallel M/N, sequential-innermost K).
+pallas path; grids carry Mosaic ``dimension_semantics`` annotations.  All
+three paths are bitwise identical in interpret mode: they share the row-tile
+bodies in rowops.py and integer accumulation is exact under any K split.
 
+  fused_gemm.py — single-kernel W4A4+LRC forward (prologue + GEMM + epilogue)
   prologue.py — fused rotate → quantize → low-rank-project prologue
   w4a4.py     — fused W4A4 matmul + low-rank epilogue (pl.pallas_call)
   actquant.py — standalone per-token int4/int8 activation quantizer
   hadamard.py — standalone blocked Walsh-Hadamard transform (QuaRot R3/R4)
-  ops.py      — jit'd wrappers (padding, block table, interpret fallback)
+  rowops.py   — shared row-tile bodies (butterfly, quantize, prologue, unpack)
+  ops.py      — jit'd wrappers (padding, plan table, path dispatch)
   ref.py      — pure-jnp oracles for every kernel
 """
 

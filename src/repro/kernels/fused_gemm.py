@@ -1,0 +1,168 @@
+"""Single-kernel fused W4A4+LRC forward: prologue + GEMM in ONE pallas call.
+
+PR 1 collapsed rotate → quantize → low-rank-project into one prologue kernel,
+but the serving path still chained TWO kernels (prologue → GEMM), so the
+quantized activations ``xq`` (and ``sx``/``xv``) made a full M×K HBM
+write+read between them.  This kernel closes that gap: the grid covers
+(M-tile, N-tile) with the K reduction loop INSIDE the kernel body, and the
+activation prologue runs on each M-tile's FIRST visit (N-tile index 0),
+depositing ``xq``/``sx``/``xv`` into VMEM scratch that persists across the
+M-tile's remaining N-tile visits.  The int4 GEMM and the low-rank epilogue
+feed straight from that residency — ``xq`` never touches HBM.
+
+Per grid step (i, j):
+
+  j == 0   : x row tile (bm, K) → rotate → quantize → project
+             (kernels/rowops.prologue_rows — the SAME body the two-kernel
+             chain runs, so outputs are bitwise identical) → VMEM scratch
+  every j  : K-loop over bk chunks of the scratch-resident xq against the
+             (K//2, bn) packed-weight slab; int8×int8→int32 accumulation
+  epilogue : acc · sx · sw (+ xv Uᵀ) while the output tile is in VMEM
+
+The x row slab, V (whole), and the per-N-tile weight slab must fit VMEM —
+the ops-layer wrapper checks the footprint and falls back to the two-kernel
+chain (decode/mixed fit comfortably; prefill M-tiles default to the chain,
+where the GEMM is MXU-bound anyway and fusion buys bytes, not latency).
+
+K is consumed UNPADDED by the prologue (the rotation/amax must not see pad
+columns); xq is zero-padded to the bk multiple on its way into scratch, so
+the integer accumulation over padded chunks is exact.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.rowops import prologue_rows, unpack_int4_rows
+
+
+def _body(x_ref, v_ref, wp_ref, sw_ref, u_ref, out_ref, xq_s, sx_s, xv_s, *,
+          qmax: int, clip_ratio: float, rotate: bool,
+          k: int, k_pad: int, bk: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _prologue():
+        q, s, xv = prologue_rows(x_ref[...].astype(jnp.float32),
+                                 None if v_ref is None else v_ref[...],
+                                 qmax, clip_ratio, rotate, k)
+        if k_pad > k:
+            q = jnp.pad(q, ((0, 0), (0, k_pad - k)))
+        xq_s[...] = q
+        sx_s[...] = s
+        if xv_s is not None:
+            xv_s[...] = xv
+
+    n_k = k_pad // bk
+
+    def _k_step(kk, acc):
+        w_blk = unpack_int4_rows(wp_ref[pl.ds(kk * (bk // 2), bk // 2), :])
+        x_blk = xq_s[:, pl.ds(kk * bk, bk)]
+        return acc + jax.lax.dot_general(
+            x_blk, w_blk, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        )
+
+    bm, bn = out_ref.shape
+    acc = jax.lax.fori_loop(
+        0, n_k, _k_step, jnp.zeros((bm, bn), jnp.int32))
+
+    out = acc.astype(jnp.float32) * sx_s[...] * sw_ref[...]
+    if xv_s is not None:
+        out = out + jax.lax.dot_general(
+            xv_s[...], u_ref[...].astype(jnp.float32),
+            (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+    out_ref[...] = out
+
+
+def _kernel_lr(x_ref, v_ref, wp_ref, sw_ref, u_ref, out_ref,
+               xq_s, sx_s, xv_s, **kw):
+    _body(x_ref, v_ref, wp_ref, sw_ref, u_ref, out_ref, xq_s, sx_s, xv_s, **kw)
+
+
+def _kernel_nolr(x_ref, wp_ref, sw_ref, out_ref, xq_s, sx_s, **kw):
+    _body(x_ref, None, wp_ref, sw_ref, None, out_ref, xq_s, sx_s, None, **kw)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bits", "clip_ratio", "rotate", "bm", "bn", "bk",
+                     "interpret"),
+)
+def fused_w4a4_lrc_kernel(
+    x: jnp.ndarray,  # (M, K) float — K UNPADDED (prologue semantics)
+    v,  # (K, R) f32 or None
+    wpacked: jnp.ndarray,  # (Kp//2, N) uint8, Kp = K rounded up to bk
+    sw: jnp.ndarray,  # (1, N) f32
+    u,  # (N, R) f32 or None
+    bits: int = 4,
+    clip_ratio: float = 1.0,
+    rotate: bool = False,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 256,
+    interpret: bool = True,
+):
+    """One pallas call for the whole W4A4+LRC forward; returns (M, N) f32."""
+    m, k = x.shape
+    k_pad = wpacked.shape[0] * 2
+    n = wpacked.shape[1]
+    assert m % bm == 0 and n % bn == 0 and k_pad % bk == 0, \
+        (m, n, k, k_pad, bm, bn, bk)
+    assert k_pad >= k, (k_pad, k)
+    if rotate:
+        assert k & (k - 1) == 0, \
+            f"online rotation needs power-of-two K, got {k}"
+    qmax = 2 ** (bits - 1) - 1
+    with_lr = v is not None
+
+    grid = (m // bm, n // bn)
+    kw = dict(qmax=qmax, clip_ratio=clip_ratio, rotate=rotate,
+              k=k, k_pad=k_pad, bk=bk)
+    in_specs = [
+        pl.BlockSpec((bm, k), lambda i, j: (i, 0)),  # x row slab
+    ]
+    operands = [x]
+    if with_lr:
+        r = v.shape[1]
+        in_specs.append(pl.BlockSpec((k, r), lambda i, j: (0, 0)))  # V whole
+        operands.append(v)
+    in_specs += [
+        pl.BlockSpec((k_pad // 2, bn), lambda i, j: (0, j)),  # W column slab
+        pl.BlockSpec((1, bn), lambda i, j: (0, j)),  # sw
+    ]
+    operands += [wpacked, sw]
+    scratch = [
+        pltpu.VMEM((bm, k_pad), jnp.int8),  # xq residency
+        pltpu.VMEM((bm, 1), jnp.float32),  # sx
+    ]
+    if with_lr:
+        in_specs.append(pl.BlockSpec((bn, r), lambda i, j: (j, 0)))  # u
+        operands.append(u)
+        scratch.append(pltpu.VMEM((bm, r), jnp.float32))  # xv
+        kernel = functools.partial(_kernel_lr, **kw)
+    else:
+        kernel = functools.partial(_kernel_nolr, **kw)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=scratch,
+        # M tiles are independent (megacore-splittable); N visits of one M
+        # tile share the prologue's scratch residency and must stay
+        # sequential so j==0 writes before j>0 reads.
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(*operands)

@@ -2,31 +2,56 @@
 
 Responsibilities: shape padding to block multiples (weights, scales and the
 low-rank factors are zero-padded, so odd MLP widths never crash the pallas
-path), block-size selection per serving regime (decode / mixed / prefill),
-interpret-mode selection (interpret=True on CPU — validates the kernel
-bodies; compiled Mosaic on real TPU), and the end-to-end fused entry
-``w4a4_lrc_forward`` used by ``QLinear(impl="pallas")`` and the serving
-engine: fused activation prologue (rotate → quantize → low-rank project,
-one HBM pass over x) chained into the W4A4 GEMM + low-rank epilogue.
+path), execution-plan selection per serving regime (decode / mixed /
+prefill) — kernel path AND (BM, BN, BK) tiles, overridable from a measured
+``results/block_table.json`` via :func:`load_block_table` —, interpret-mode
+selection (interpret=True on CPU — validates the kernel bodies; compiled
+Mosaic on real TPU), and the end-to-end entry ``w4a4_lrc_forward`` used by
+``QLinear(impl="pallas"/"fused")`` and the serving engine.
+
+Three kernel paths, strongest fusion first:
+
+  fused   — ONE pallas kernel (kernels/fused_gemm.py): the activation
+            prologue runs on each M-tile's first N visit and the int4 GEMM +
+            LRC epilogue feed from the VMEM scratch residency; xq never
+            touches HBM.
+  chained — TWO kernels (prologue → w4a4 GEMM); xq/sx/xv make one HBM
+            round-trip between them.  Fallback when the fused kernel's
+            working set (x row slab + V + weight slab) exceeds VMEM.
+  unfused — three activation passes (rotate, quantize, project) + the GEMM
+            kernel.  Fallback when V alone exceeds the prologue VMEM budget.
+
+All three are bitwise identical in interpret mode: they share the row bodies
+in kernels/rowops.py and integer accumulation is exact under any K split.
 """
 
 from __future__ import annotations
 
+import json
 from functools import partial
+from pathlib import Path
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.quantizers import QuantSpec
 from repro.kernels.actquant import act_quant_kernel
+from repro.kernels.fused_gemm import fused_w4a4_lrc_kernel
 from repro.kernels.hadamard import fwht_kernel
 from repro.kernels.prologue import fused_prologue_kernel
 from repro.kernels.w4a4 import w4a4_lowrank_matmul_kernel
 from repro.kernels.flash_attn import flash_attention_kernel
 
-# V is held whole in VMEM by the fused prologue; past this footprint the
-# wrapper falls back to the unfused three-pass chain.
+# V is held whole in VMEM by the fused prologue (both the single-kernel and
+# the chained path); past this footprint the wrapper falls back to the
+# unfused three-pass chain.
 _PROLOGUE_V_BYTES_MAX = 8 * 1024 * 1024
+
+# Working-set ceiling for the single-kernel fused path (x row slab + xq
+# scratch + V + weight slab + U/xv/out tiles); past it, auto dispatch takes
+# the two-kernel chain.  ~¾ of a v5e core's 16 MB VMEM, leaving room for
+# Mosaic's double-buffering of the streamed operands.
+_FUSED_VMEM_BYTES_MAX = 12 * 1024 * 1024
 
 
 def _interpret() -> bool:
@@ -51,19 +76,56 @@ def _round_pow2(m: int) -> int:
 
 
 # ---------------------------------------------------------------------------
-# block-size autotune table
+# execution-plan autotune table (kernel path + block sizes)
 # ---------------------------------------------------------------------------
 
-# Regime-keyed (BM, BN, BK) tiles, replacing the old hard-coded 128/128/256.
-# decode  (M ≤ 32):  tiny M tile; wide N×K tiles stream the weight matrix —
-#                    the decode hot path is weight-HBM-bound.
-# mixed   (M ≤ 512): balanced tiles.
-# prefill (M > 512): large M tile; the GEMM is MXU-bound at these M.
+# Regime-keyed execution plans: the kernel path plus (BM, BN, BK) tiles.
+# decode  (M ≤ 32):  single-kernel fused — the decode hot path is
+#                    activation+weight-HBM-bound, and the fused kernel's
+#                    small x row slab trivially fits VMEM; tiny M tile, wide
+#                    N×K tiles stream the weight matrix.
+# mixed   (M ≤ 512): single-kernel fused, balanced tiles.
+# prefill (M > 512): two-kernel chain — at these M the GEMM is MXU-bound,
+#                    fusion saves bytes but no latency, and the (BM, K) f32
+#                    row slab would crowd VMEM at large K.
 _BLOCK_TABLE = {
-    "decode": (16, 256, 512),
-    "mixed": (128, 128, 256),
-    "prefill": (256, 256, 256),
+    "decode": dict(path="fused", bm=16, bn=256, bk=512),
+    "mixed": dict(path="fused", bm=128, bn=128, bk=256),
+    "prefill": dict(path="chained", bm=256, bn=256, bk=256),
 }
+
+_KERNEL_PATHS = ("fused", "chained", "unfused")
+
+# Measured winners loaded from results/block_table.json (autotune sweep);
+# overlays the analytic defaults above.  Populated by load_block_table().
+_MEASURED_TABLE: dict = {}
+
+
+def load_block_table(path) -> dict:
+    """Overlay measured autotune winners (benchmarks/autotune_blocks.py →
+    results/block_table.json) onto the analytic block table.  Each entry is
+    {"regime": {"path": ..., "bm": ..., "bn": ..., "bk": ...}}."""
+    table = json.loads(Path(path).read_text())
+    for regime, entry in table.items():
+        if regime not in _BLOCK_TABLE:
+            raise ValueError(
+                f"unknown regime {regime!r} in block table {path}; "
+                f"expected one of {sorted(_BLOCK_TABLE)}")
+        if entry.get("path") not in _KERNEL_PATHS:
+            raise ValueError(
+                f"unknown kernel path {entry.get('path')!r} for regime "
+                f"{regime!r}; expected one of {_KERNEL_PATHS}")
+        missing = {"bm", "bn", "bk"} - set(entry)
+        if missing:
+            raise ValueError(f"regime {regime!r} missing keys {missing}")
+    _MEASURED_TABLE.clear()
+    _MEASURED_TABLE.update(table)
+    return table
+
+
+def reset_block_table():
+    """Drop any loaded measured winners; back to the analytic defaults."""
+    _MEASURED_TABLE.clear()
 
 
 def gemm_regime(m: int) -> str:
@@ -74,16 +136,45 @@ def gemm_regime(m: int) -> str:
     return "prefill"
 
 
-def select_blocks(m: int, k: int, n: int, r: int = 0):
-    """(BM, BN, BK) for a (M, K, N, R) problem; clamped to the actual dims.
-    Large ranks shrink BN so the U tile + f32 accumulator stay within VMEM."""
-    bm, bn, bk = _BLOCK_TABLE[gemm_regime(m)]
-    bm = min(bm, _round_pow2(max(m, 8)))
-    bn = min(bn, _round_pow2(max(n, 8)))
-    bk = min(bk, _round_pow2(max(k, 8)))
+def select_plan(m: int, k: int, n: int, r: int = 0, regime: str = None):
+    """Execution plan (path, BM, BN, BK) for a (M, K, N, R) problem.
+
+    ``regime`` overrides the M-derived serving regime; unknown strings raise.
+    Blocks are clamped to the actual dims; large ranks shrink BN so the U
+    tile + f32 accumulator stay within VMEM."""
+    if regime is None:
+        regime = gemm_regime(m)
+    elif regime not in _BLOCK_TABLE:
+        raise ValueError(f"unknown regime {regime!r}; "
+                         f"expected one of {sorted(_BLOCK_TABLE)}")
+    entry = _MEASURED_TABLE.get(regime, _BLOCK_TABLE[regime])
+    bm = min(entry["bm"], _round_pow2(max(m, 8)))
+    bn = min(entry["bn"], _round_pow2(max(n, 8)))
+    bk = min(entry["bk"], _round_pow2(max(k, 8)))
     if r >= 512:
         bn = min(bn, 128)
-    return bm, bn, bk
+    return entry["path"], bm, bn, bk
+
+
+def select_blocks(m: int, k: int, n: int, r: int = 0, regime: str = None):
+    """(BM, BN, BK) for a (M, K, N, R) problem (see :func:`select_plan`).
+    Unknown ``regime`` strings raise ValueError."""
+    return select_plan(m, k, n, r, regime=regime)[1:]
+
+
+def _fused_vmem_bytes(bm: int, k: int, k_pad: int, bn: int, r: int) -> int:
+    """Worst-case VMEM working set of the single-kernel fused path."""
+    return (
+        bm * k * 4          # x row slab (f32 upper bound)
+        + bm * k_pad        # xq int8 scratch residency
+        + bm * 4            # sx
+        + k * r * 4         # V, whole
+        + (k_pad // 2) * bn  # packed-weight column slab
+        + bn * 4            # sw
+        + bn * r * 4        # U tile
+        + bm * r * 4        # xv scratch
+        + 2 * bm * bn * 4   # out tile + int32 accumulator
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -124,7 +215,7 @@ def fused_prologue(x: jnp.ndarray, v, spec: QuantSpec,
 
 
 # ---------------------------------------------------------------------------
-# fused W4A4 + LRC forward
+# W4A4 + LRC forward (fused / chained / unfused)
 # ---------------------------------------------------------------------------
 
 
@@ -144,6 +235,39 @@ def _pad_gemm_operands(xq, sx, wpacked, w_scale, u, xv, bm, bn, bk):
     return xqp, sxp, wp, sw, u, xv
 
 
+def _project_tiles(xr, v, bm: int):
+    """(x·V) for the unfused fallback, computed per (bm, K) row tile with the
+    exact dot the in-kernel prologue issues — keeps the three paths bitwise
+    identical (a single whole-M dot may schedule its K reduction differently
+    from the kernels' per-tile dots)."""
+    tiles = [
+        jax.lax.dot_general(
+            xr[t:t + bm].astype(jnp.float32), v,
+            (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32,
+        )
+        for t in range(0, xr.shape[0], bm)
+    ]
+    return tiles[0] if len(tiles) == 1 else jnp.concatenate(tiles, axis=0)
+
+
+def _forward_fused(xp, wpacked, w_scale, u, v, act_spec, rotate, bm, bn, bk):
+    """Single-kernel path: pad the weight-side operands, hand the UNPADDED-K
+    activations to kernels/fused_gemm.py (the in-kernel prologue must not see
+    pad columns), emit the output straight from the one pallas call."""
+    wp, _ = _pad_to(wpacked, bk // 2, 0)
+    wp, _ = _pad_to(wp, bn, 1)
+    sw, _ = _pad_to(w_scale.reshape(1, -1), bn, 1)
+    up = None
+    if v is not None:
+        up, _ = _pad_to(jnp.asarray(u, jnp.float32), bn, 0)
+        v = jnp.asarray(v, jnp.float32)
+    return fused_w4a4_lrc_kernel(
+        xp, v, wp, sw, up,
+        bits=act_spec.bits, clip_ratio=act_spec.clip_ratio, rotate=rotate,
+        bm=bm, bn=bn, bk=bk, interpret=_interpret(),
+    )
+
+
 def w4a4_lrc_forward(
     x: jnp.ndarray,  # (M, K) float
     wpacked: jnp.ndarray,  # (K//2, N) uint8
@@ -153,21 +277,44 @@ def w4a4_lrc_forward(
     act_spec: QuantSpec,
     rotate: bool = False,
     blocks=None,  # optional (bm, bn, bk) override; default: autotune table
+    impl: str = "auto",  # auto | fused | chained | unfused
 ):
-    """The full W4A4+LRC serving hot path, two kernels end to end:
+    """The full W4A4+LRC serving hot path.
 
-      1. fused activation prologue — ONE HBM read of x yields the rotated,
-         quantized activations and the (x·V) projection;
-      2. fused W4A4 GEMM + low-rank epilogue (kernels/w4a4.py).
+    ``impl="auto"`` follows the block-table plan with VMEM-feasibility
+    demotion: single-kernel fused (xq never touches HBM) when the working
+    set fits, else the two-kernel prologue → GEMM chain, else (V past the
+    prologue budget) the unfused three-pass chain.  Explicit ``impl`` values
+    force a path — "fused"/"chained" trust the caller on VMEM fit.
 
     ``rotate`` applies the online Walsh-Hadamard rotation (K power of two)
     inside the prologue.  All operands are zero-padded to block multiples, so
-    arbitrary M/K/N (odd MLP widths included) take the pallas path.
+    arbitrary M/K/N (odd MLP widths included) take the pallas path.  The
+    three paths are bitwise identical in interpret mode (shared row bodies,
+    exact integer accumulation).
     """
     m0, k = x.shape
     n = wpacked.shape[1]
     r = 0 if v is None else v.shape[-1]
-    bm, bn, bk = blocks if blocks is not None else select_blocks(m0, k, n, r)
+    path, bm, bn, bk = select_plan(m0, k, n, r)
+    if blocks is not None:
+        bm, bn, bk = blocks
+
+    if impl != "auto":
+        if impl not in _KERNEL_PATHS:
+            raise ValueError(f"unknown impl {impl!r}; "
+                             f"expected auto or one of {_KERNEL_PATHS}")
+        path = impl
+    else:
+        v_fits = r == 0 or (k * r * 4) <= _PROLOGUE_V_BYTES_MAX
+        k_pad = k + (-k) % bk
+        if path == "fused" and not (
+                v_fits
+                and _fused_vmem_bytes(bm, k, k_pad, bn, r)
+                <= _FUSED_VMEM_BYTES_MAX):
+            path = "chained"
+        if path == "chained" and not v_fits:
+            path = "unfused"
 
     if rotate:
         assert k & (k - 1) == 0, \
@@ -176,16 +323,22 @@ def w4a4_lrc_forward(
     # run the prologue on the M-padded activations directly — its outputs
     # stay bm-aligned so the GEMM padding below never re-pads axis 0
     xp, _ = _pad_to(x, bm, 0)
-    if r == 0 or (k * r * 4) <= _PROLOGUE_V_BYTES_MAX:
+
+    if path == "fused":
+        out = _forward_fused(xp, wpacked, w_scale, u if r else None,
+                             v if r else None, act_spec, rotate, bm, bn, bk)
+        return out[:m0, :n]
+
+    if path == "chained":
         xq, sx, xv = fused_prologue_kernel(
             xp, jnp.asarray(v, jnp.float32) if r else None,
             bits=act_spec.bits, clip_ratio=act_spec.clip_ratio,
             rotate=rotate, bm=bm, interpret=_interpret(),
         )
-    else:  # unfused fallback: V too large for VMEM residency
+    else:  # unfused: three activation passes (V too large for VMEM residency)
         xr = fwht(xp, bm=bm) if rotate else xp
         xq, sx = act_quant(xr, act_spec, bm=bm)
-        xv = xr.astype(jnp.float32) @ jnp.asarray(v, jnp.float32)
+        xv = _project_tiles(xr, jnp.asarray(v, jnp.float32), bm) if r else None
 
     xqp, sxp, wp, sw, up, xvp = _pad_gemm_operands(
         xq, sx, wpacked, w_scale, u if r else None, xv, bm, bn, bk)

@@ -33,29 +33,22 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.rowops import fwht_rows, scale_round_quantize
+from repro.kernels.rowops import prologue_rows
 
 
 def _kernel_lr(x_ref, v_ref, q_ref, s_ref, xv_ref, *,
                qmax: int, clip_ratio: float, rotate: bool, d: int):
-    x = x_ref[...].astype(jnp.float32)
-    if rotate:
-        x = fwht_rows(x, d)
-    q, s = scale_round_quantize(x, qmax, clip_ratio)
+    q, s, xv = prologue_rows(x_ref[...].astype(jnp.float32), v_ref[...],
+                             qmax, clip_ratio, rotate, d)
     q_ref[...] = q
     s_ref[...] = s
-    xv_ref[...] = jax.lax.dot_general(
-        x, v_ref[...].astype(jnp.float32), (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32,
-    )
+    xv_ref[...] = xv
 
 
 def _kernel_nolr(x_ref, q_ref, s_ref, *,
                  qmax: int, clip_ratio: float, rotate: bool, d: int):
-    x = x_ref[...].astype(jnp.float32)
-    if rotate:
-        x = fwht_rows(x, d)
-    q, s = scale_round_quantize(x, qmax, clip_ratio)
+    q, s, _ = prologue_rows(x_ref[...].astype(jnp.float32), None,
+                            qmax, clip_ratio, rotate, d)
     q_ref[...] = q
     s_ref[...] = s
 

@@ -47,6 +47,16 @@ def fused_prologue_ref(x, v=None, bits: int = 4, clip_ratio: float = 1.0,
     return q, s, xv
 
 
+def w4a4_lrc_forward_ref(x, wpacked, w_scale, u=None, v=None, bits: int = 4,
+                         clip_ratio: float = 1.0, rotate: bool = False):
+    """End-to-end oracle for ops.w4a4_lrc_forward: prologue reference chained
+    into the GEMM reference — same math as all three kernel paths."""
+    xq, sx, xv = fused_prologue_ref(x, v, bits=bits, clip_ratio=clip_ratio,
+                                    rotate=rotate)
+    return w4a4_lowrank_matmul_ref(xq, sx, wpacked, w_scale.reshape(1, -1),
+                                   xv, u)
+
+
 def flash_attention_ref(q, k, v, scale: float, causal: bool = True):
     """q/k/v: (BH, S, D) — standard softmax attention."""
     s_ = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale

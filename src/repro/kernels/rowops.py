@@ -1,13 +1,17 @@
 """Shared row-tile compute bodies used by multiple Pallas kernels.
 
-The fused prologue's bitwise-parity contract with the standalone hadamard /
-actquant kernels (tests/test_kernels_prologue.py acceptance) holds because
-all three import THESE implementations — the butterfly order and the
-scale-then-round operation order live in exactly one place.
+The bitwise-parity contract between the single-kernel fused forward
+(kernels/fused_gemm.py), the two-kernel chain (prologue → w4a4 GEMM) and the
+standalone hadamard / actquant kernels (tests/test_kernels_prologue.py and
+tests/test_kernels_fused.py acceptance) holds because all of them import
+THESE implementations — the butterfly order, the scale-then-round operation
+order, the prologue body and the int4 nibble layout live in exactly one
+place.
 """
 
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 
@@ -34,3 +38,31 @@ def scale_round_quantize(x: jnp.ndarray, qmax: int, clip_ratio: float):
     s = clip_ratio * amax / qmax
     q = jnp.clip(jnp.round(x / s), -qmax - 1, qmax)
     return q.astype(jnp.int8), s
+
+
+def prologue_rows(x, v, qmax: int, clip_ratio: float, rotate: bool, d: int):
+    """The full activation-prologue row body on a (bm, d) f32 tile: optional
+    WHT rotation, per-token quantization, and the (x·V) projection.
+    Returns (q int8, s f32 (bm, 1), xv f32 (bm, R) or None)."""
+    if rotate:
+        x = fwht_rows(x, d)
+    q, s = scale_round_quantize(x, qmax, clip_ratio)
+    xv = None
+    if v is not None:
+        xv = jax.lax.dot_general(
+            x, v.astype(jnp.float32), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+    return q, s, xv
+
+
+def unpack_int4_rows(wp: jnp.ndarray) -> jnp.ndarray:
+    """(BK//2, BN) uint8 -> (BK, BN) int8 in [-8, 7]; even rows = low nibble.
+    Packed rows interleave (2i, 2i+1): stack on a new axis, then fold."""
+    lo = (wp & 0xF).astype(jnp.int8)
+    hi = ((wp >> 4) & 0xF).astype(jnp.int8)
+    lo = jnp.where(lo >= 8, lo - 16, lo)
+    hi = jnp.where(hi >= 8, hi - 16, hi)
+    bk2, bn = wp.shape
+    w = jnp.stack([lo, hi], axis=1)  # (BK//2, 2, BN)
+    return w.reshape(bk2 * 2, bn)

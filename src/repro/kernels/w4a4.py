@@ -31,17 +31,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-
-def _unpack_block(wp):
-    """(BK//2, BN) uint8 -> (BK, BN) int8 in [-8, 7]; even rows = low nibble."""
-    lo = (wp & 0xF).astype(jnp.int8)
-    hi = ((wp >> 4) & 0xF).astype(jnp.int8)
-    lo = jnp.where(lo >= 8, lo - 16, lo)
-    hi = jnp.where(hi >= 8, hi - 16, hi)
-    # packed rows interleave (2i, 2i+1) -> stack on a new axis then fold
-    bk2, bn = wp.shape
-    w = jnp.stack([lo, hi], axis=1)  # (BK//2, 2, BN)
-    return w.reshape(bk2 * 2, bn)
+from repro.kernels.rowops import unpack_int4_rows as _unpack_block
 
 
 def _body(xq_ref, sx_ref, wp_ref, sw_ref, xv_ref, u_ref, out_ref, acc_ref, *,

@@ -176,25 +176,41 @@ def roofline_from_costs(costs: dict, model_flops_total: float, n_chips: int,
 
 
 def prologue_activation_bytes(m: int, k: int, r: int = 0, *,
-                              rotate: bool = True, fused: bool = False,
+                              rotate: bool = True, fused: bool = None,
+                              path: str = None,
                               act_bytes: int = 2) -> float:
-    """Activation-side HBM traffic of the W4A4+LRC prologue
-    (rotate → quantize → low-rank project) for an (M, K) activation block.
+    """Activation-side HBM traffic of the W4A4+LRC forward for an (M, K)
+    activation block, up to (excluding) the output-tile write — i.e. every
+    intermediate the GEMM's consumption of xq/sx/xv implies.
 
-    unfused — three independent passes: the WHT kernel reads x and writes the
-    rotated copy; the quantizer re-reads it and writes xq/sx; the (x·V)
-    projection re-reads it once more and writes xv.
-    fused   — kernels/prologue.py: ONE read of x emits xq, sx and xv; the
-    rotated copy never exists in HBM.
+    path="unfused" — three independent passes: the WHT kernel reads x and
+    writes the rotated copy; the quantizer re-reads it and writes xq/sx; the
+    (x·V) projection re-reads it once more and writes xv; the GEMM kernel
+    then reads xq/sx/xv back from HBM.
+    path="chained" — kernels/prologue.py → kernels/w4a4.py: ONE read of x
+    emits xq/sx/xv (the rotated copy never exists in HBM), but the GEMM
+    kernel still reads the M×K xq (+ sx/xv) back — one full round-trip.
+    path="fused"   — kernels/fused_gemm.py single kernel: ONE read of x;
+    xq/sx/xv live and die in VMEM scratch.  The chained→fused delta is
+    exactly the eliminated M×K write+read (plus the sx/xv round-trip).
 
-    Weight-side bytes (V itself, the packed W) are identical in both layouts
-    and excluded — this isolates exactly the traffic fusion removes.
+    ``fused`` is the legacy boolean spelling (True ≡ "chained", the PR 1
+    fusion; False ≡ "unfused").  Weight-side bytes (V itself, the packed W)
+    are identical in all layouts and excluded — this isolates exactly the
+    traffic fusion removes.
     """
+    if path is None:
+        path = "chained" if fused else "unfused"
     a = m * k * act_bytes  # one full read or write of the activation block
     out = m * k + 4 * m + (4 * m * r if r else 0)  # xq + sx (+ xv f32)
-    if fused:
-        return a + out
-    total = a + out  # quantizer pass: read source, write xq/sx
+    if path == "fused":
+        return a  # single kernel: x in, everything else VMEM-resident
+    if path == "chained":
+        return a + 2 * out  # prologue writes xq/sx/xv; the GEMM reads them
+    if path != "unfused":
+        raise ValueError(f"unknown path {path!r}; "
+                         "expected fused | chained | unfused")
+    total = a + 2 * out  # quantizer pass + GEMM-side re-read
     if rotate:
         total += 2 * a  # WHT pass: read x, write the rotated copy to HBM
     if r:

@@ -18,9 +18,16 @@ def main():
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-seq", type=int, default=128)
     ap.add_argument("--impl", default="auto",
-                    choices=("auto", "sim", "int8", "pallas"),
-                    help="QLinear execution path for decode; auto = fused "
-                         "pallas kernels on TPU, calibrated impl on CPU")
+                    choices=("auto", "sim", "int8", "pallas", "fused"),
+                    help="QLinear execution path for decode; auto = pallas "
+                         "kernels on TPU (single-kernel fused forward per "
+                         "the plan table), calibrated impl on CPU; fused "
+                         "pins the single-kernel path")
+    ap.add_argument("--block-table", default=None,
+                    help="path to measured autotune winners "
+                         "(results/block_table.json from "
+                         "benchmarks/autotune_blocks.py) to overlay on the "
+                         "analytic kernel plan table")
     args = ap.parse_args()
 
     import jax
@@ -29,6 +36,12 @@ def main():
     from repro.models import model as model_lib
     from repro.models.config import reduced as reduce_cfg
     from repro.serve.engine import Request, ServeEngine
+
+    if args.block_table:
+        from repro.kernels import ops
+
+        ops.load_block_table(args.block_table)
+        print(f"loaded kernel plan table from {args.block_table}")
 
     cfg = get_config(args.arch)
     if args.reduced:

@@ -5,12 +5,15 @@
 with Ŵ int4 (packed two-per-byte), Q_a the on-the-fly activation quantizer,
 and U, Vᵀ the full-precision low-rank correction acting on the UNQUANTIZED x.
 
-Three execution paths (static ``impl`` field):
+Four execution paths (static ``impl`` field):
   sim    — fake-quant float math; reference semantics for CPU tests/benches.
   int8   — integer GEMM (int8×int8→int32) with per-token rescale; the
            TPU-native lowering used by the dry-run (MXU int8 path).
-  pallas — fused Pallas kernel (kernels/w4a4.py): LR epilogue rides along
-           with the quantized GEMM (the paper's "future work" fusion).
+  pallas — Pallas kernels behind the autotune plan table (kernels/ops.py):
+           single-kernel fused forward where the working set fits VMEM,
+           prologue→GEMM chain otherwise (the paper's "future work" fusion).
+  fused  — force the single-kernel path (kernels/fused_gemm.py): prologue +
+           int4 GEMM + LRC epilogue in ONE pallas call, xq never in HBM.
 
 Weight layout in models is (d_in, d_out) with ``y = x @ w``; the LRC solver's
 (d_out, d_in) result is transposed at pack time.
@@ -51,7 +54,7 @@ class QLinear:
     act_bits: int = _static(default=4)
     act_group: Optional[int] = _static(default=None)
     clip_ratio: float = _static(default=1.0)
-    impl: str = _static(default="int8")  # sim | int8 | pallas
+    impl: str = _static(default="int8")  # sim | int8 | pallas | fused
 
     @property
     def d_in(self) -> int:
@@ -137,20 +140,23 @@ def _apply_int8(q: QLinear, x: jnp.ndarray) -> jnp.ndarray:
     return y.astype(x.dtype)
 
 
-def _apply_pallas(q: QLinear, x: jnp.ndarray) -> jnp.ndarray:
-    """Two fused kernels: activation prologue (quantize + low-rank project in
-    one HBM pass over x) chained into the W4A4 GEMM + low-rank epilogue.
+def _apply_pallas(q: QLinear, x: jnp.ndarray,
+                  kernel_impl: str = "auto") -> jnp.ndarray:
+    """Pallas kernel paths: ``auto`` follows the plan table (single-kernel
+    fused forward where the working set fits VMEM, prologue → GEMM chain
+    otherwise); ``fused`` pins the single-kernel path.
 
     Precision note: the kernels compute the (xV)Uᵀ correction in f32 VMEM
     from the (bf16-stored) factors, so outputs differ from the int8 path —
     which matmuls in the LR storage dtype — by ~bf16 epsilon of the LR term
-    (the fused path is the more accurate of the two)."""
+    (the kernel paths are the more accurate of the two)."""
     from repro.kernels import ops
 
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
     y = ops.w4a4_lrc_forward(
-        x2, q.qweight, q.w_scale, q.u, q.v, act_spec=q.act_spec
+        x2, q.qweight, q.w_scale, q.u, q.v, act_spec=q.act_spec,
+        impl=kernel_impl,
     )
     return y.reshape(*lead, q.d_out).astype(x.dtype)
 
@@ -160,12 +166,12 @@ def qlinear_apply(q: QLinear, x: jnp.ndarray) -> jnp.ndarray:
         return _apply_sim(q, x)
     if q.impl == "int8":
         return _apply_int8(q, x)
-    if q.impl == "pallas":
+    if q.impl in ("pallas", "fused"):
         if q.act_group is not None:
             # the fused kernels emit per-token scales only; group-wise
             # calibrated layers (paper Table 2) run the int8 grouped GEMM
             return _apply_int8(q, x)
-        return _apply_pallas(q, x)
+        return _apply_pallas(q, x, "auto" if q.impl == "pallas" else "fused")
     raise ValueError(f"unknown impl {q.impl!r}")
 
 
@@ -179,8 +185,8 @@ def apply_linear(w, x: jnp.ndarray) -> jnp.ndarray:
 def retag_qlinear_impl(params, impl: str):
     """Switch every QLinear leaf in a param tree to another execution path
     (e.g. the serving engine retags to "pallas" so decode runs the fused
-    prologue + GEMM kernels).  Non-QLinear leaves pass through unchanged."""
-    assert impl in ("sim", "int8", "pallas"), impl
+    kernels).  Non-QLinear leaves pass through unchanged."""
+    assert impl in ("sim", "int8", "pallas", "fused"), impl
 
     def _retag(leaf):
         if isinstance(leaf, QLinear):

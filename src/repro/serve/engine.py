@@ -42,11 +42,12 @@ class ServeEngine:
                  eos_id: Optional[int] = None, seed: int = 0,
                  kernel_impl: Optional[str] = "auto"):
         assert cfg.family in ("dense", "vlm", "ssm", "hybrid", "moe"), cfg.family
-        # Decode runs W4A4+LRC through the fused pallas path (activation
-        # prologue + GEMM/epilogue kernels) whenever a compiled backend is
-        # attached; "auto" keeps the calibrated impl on CPU where the pallas
-        # interpreter would only slow the reference semantics down.  Pass an
-        # explicit impl ("pallas"/"int8"/"sim") to force a path.
+        # Decode runs W4A4+LRC through the pallas kernels (single-kernel
+        # fused forward at decode/mixed shapes, prologue→GEMM chain past the
+        # VMEM gate) whenever a compiled backend is attached; "auto" keeps
+        # the calibrated impl on CPU where the pallas interpreter would only
+        # slow the reference semantics down.  Pass an explicit impl
+        # ("fused"/"pallas"/"int8"/"sim") to force a path.
         if kernel_impl == "auto":
             kernel_impl = "pallas" if jax.default_backend() != "cpu" else None
         if kernel_impl is not None:
