@@ -2,23 +2,29 @@
 
 For each serving regime (decode / mixed / prefill) this harness evaluates
 candidate execution plans — kernel path (fused single-kernel vs. the
-prologue → GEMM chain) × (BM, BN, BK) tiles — at a representative
+prologue → GEMM chain) × (BM, BN, BK, BR) tiles — at a representative
 (M, K, N, R) shape, scores them, and persists the winners to
 ``results/block_table.json``, which ``repro.kernels.ops.load_block_table``
 overlays onto the analytic defaults (``launch/serve.py --block-table``).
+BK is the K-chunk of the K-split fused grid (and the chained prologue's V
+stream), BR the R-tile of the streamed low-rank factor.
 
 Two scoring modes:
 
   --measure    wall-clock the actual kernels.  Meaningful on a real TPU
                (compiled Mosaic); on CPU the pallas interpreter's overhead
                swamps tile effects, so measured winners from a CPU run are
-               NOT committed.
-  (default)    analytic: the v5e roofline byte/FLOP model plus a VMEM
-               feasibility check — deterministic, hardware-free, and the
-               source of the committed table.
+               NOT committed.  Combine with ``--vmem-budget`` (or a "vmem"
+               entry written into the table) to probe real-hardware VMEM
+               ceilings.
+  (default)    analytic: the v5e roofline byte/FLOP model plus the ops-layer
+               per-slab VMEM feasibility check (serving rotates, which pins
+               the RESIDENT prologue variant, so fused candidates are
+               checked against the resident footprint) — deterministic,
+               hardware-free, and the source of the committed table.
 
     PYTHONPATH=src python -m benchmarks.autotune_blocks [--measure]
-        [--out results/block_table.json] [--smoke]
+        [--out results/block_table.json] [--smoke] [--vmem-budget BYTES]
 """
 
 from __future__ import annotations
@@ -46,34 +52,41 @@ CANDIDATE_BMS = {"decode": [8, 16, 32], "mixed": [64, 128, 256],
                  "prefill": [128, 256, 512]}
 CANDIDATE_BNS = [128, 256, 512]
 CANDIDATE_BKS = [128, 256, 512]
+CANDIDATE_BRS = [128, 256, 512]
 
 
 def _candidates(regime, smoke=False):
     bms = CANDIDATE_BMS[regime]
-    bns, bks = CANDIDATE_BNS, CANDIDATE_BKS
+    bns, bks, brs = CANDIDATE_BNS, CANDIDATE_BKS, CANDIDATE_BRS
     if smoke:
-        bms, bns, bks = bms[:2], bns[:2], bks[:2]
-    for path, bm, bn, bk in itertools.product(("fused", "chained"),
-                                              bms, bns, bks):
-        yield dict(path=path, bm=bm, bn=bn, bk=bk)
+        bms, bns, bks, brs = bms[:2], bns[:2], bks[:2], brs[:1]
+    for path, bm, bn, bk, br in itertools.product(("fused", "chained"),
+                                                  bms, bns, bks, brs):
+        yield dict(path=path, bm=bm, bn=bn, bk=bk, br=br)
 
 
 def _analytic_score(regime, cand):
-    """v5e roofline latency of the candidate; infeasible plans score inf."""
-    from repro.kernels.ops import (_FUSED_VMEM_BYTES_MAX,
-                                   _fused_vmem_bytes)
+    """v5e roofline latency of the candidate; infeasible plans score inf.
+    Serving applies the online rotation, so feasibility is checked with
+    rotate=True (the stricter case — it pins the resident prologue)."""
+    from repro.kernels import ops
 
     m, k, n, r = REGIME_SHAPES[regime]
-    if cand["path"] == "fused":
-        k_pad = k + (-k) % cand["bk"]
-        if _fused_vmem_bytes(cand["bm"], k, k_pad, cand["bn"], r) \
-                > _FUSED_VMEM_BYTES_MAX:
+    br = min(cand["br"], r) if r else cand["br"]
+    path = cand["path"]
+    if path == "fused":
+        if ops._fused_vmem_bytes(k, r, cand["bm"], cand["bn"], cand["bk"],
+                                 br, True) > ops.fused_vmem_budget():
             return (float("inf"), float("inf"))
-    # the roofline is tile-agnostic; break byte-model ties toward plans whose
-    # tiles divide the problem evenly (fewer ragged edge tiles), then toward
-    # LARGER tiles (fewer grid steps — less pipeline/loop overhead, bigger
-    # MXU ops)
-    t = _roofline_time(m, k, n, r, cand["path"])
+    else:
+        if ops._prologue_vmem_bytes(k, r, cand["bm"], cand["bk"], br,
+                                    True) > ops.prologue_vmem_budget():
+            return (float("inf"), float("inf"))
+    # the roofline is tile-agnostic beyond bm (V/U re-reads per M-tile);
+    # break byte-model ties toward plans whose tiles divide the problem
+    # evenly (fewer ragged edge tiles), then toward LARGER tiles (fewer grid
+    # steps — less pipeline/loop overhead, bigger MXU ops)
+    t = _roofline_time(m, k, n, r, path, bm=cand["bm"])
     waste = sum(((-d) % b) / d
                 for d, b in ((m, cand["bm"]), (n, cand["bn"]),
                              (k, cand["bk"])))
@@ -94,7 +107,8 @@ def _measure_score(regime, cand, reps=3, scale_down=True):
         m, k, n, r = min(m, 32), min(k, 512), min(n, 512), min(r, 32)
     rng = np.random.default_rng(0)
     spec, x, wp, s, u, v = make_w4a4_problem(rng, m, k, n, r)
-    blocks = (min(cand["bm"], m), min(cand["bn"], n), min(cand["bk"], k))
+    blocks = (min(cand["bm"], m), min(cand["bn"], n), min(cand["bk"], k),
+              min(cand["br"], max(r, 8)))
 
     def f():
         return ops.w4a4_lrc_forward(x, wp, s, u, v, spec,
@@ -136,10 +150,25 @@ def main(argv=None) -> int:
                          "roofline score (use on real TPU)")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny candidate grid (CI sanity)")
+    ap.add_argument("--vmem-budget", type=int, default=None,
+                    help="override the fused/prologue VMEM working-set "
+                         "budgets (bytes) for the sweep — probe real-TPU "
+                         "ceilings instead of the analytic defaults")
     ap.add_argument("--out", default=str(RESULTS / "block_table.json"))
     args = ap.parse_args(argv)
 
+    from repro.kernels import ops
+
+    if args.vmem_budget is not None:
+        ops.set_vmem_budgets(fused=args.vmem_budget,
+                             prologue=args.vmem_budget)
     winners = autotune_sweep(measure=args.measure, smoke=args.smoke)
+    if args.vmem_budget is not None:
+        # persist the probed budgets with the winners they were swept
+        # under, so load_block_table replays them at serve time instead of
+        # re-shrinking the plans against the default budgets
+        winners["vmem"] = dict(fused_bytes_max=args.vmem_budget,
+                               prologue_bytes_max=args.vmem_budget)
     out = Path(args.out)
     out.parent.mkdir(exist_ok=True)
     out.write_text(json.dumps(winners, indent=2) + "\n")
@@ -147,8 +176,6 @@ def main(argv=None) -> int:
 
     # round-trip through the loader so a malformed table fails HERE, not at
     # serve time
-    from repro.kernels import ops
-
     ops.load_block_table(out)
     ops.reset_block_table()
     return 0

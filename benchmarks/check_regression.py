@@ -27,21 +27,39 @@ from pathlib import Path
 
 from benchmarks.latency_kernels import HEADER, analytic_rows
 
-# columns the gate protects: lower is better, >tolerance growth fails
-_GUARDED = [
-    "us_unfused", "us_chained", "us_fused",
-    "act_prologue_kb_unfused", "act_prologue_kb_chained",
-    "act_prologue_kb_fused",
-]
+# columns the gate protects: every predicted-latency and activation-byte
+# column the CURRENT code emits (lower is better, >tolerance growth fails).
+# Derived from HEADER so a new column added by a kernel change is guarded
+# automatically — and a baseline that predates it fails with a clear
+# "regenerate" message instead of a KeyError.
+_GUARDED = [h for h in HEADER
+            if h.startswith("us_") or h.startswith("act_prologue_kb_")]
 
 
 def check(baseline_path: Path, tolerance: float) -> list[str]:
-    baseline = json.loads(baseline_path.read_text())
+    try:
+        baseline = json.loads(baseline_path.read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"baseline {baseline_path} is unreadable ({e}); "
+                "regenerate it with: PYTHONPATH=src python -m "
+                "benchmarks.latency_kernels"]
+    if not isinstance(baseline, dict) or "header" not in baseline \
+            or "rows" not in baseline:
+        return [f"baseline {baseline_path} lacks header/rows; regenerate it "
+                "with: PYTHONPATH=src python -m benchmarks.latency_kernels"]
     b_idx = {h: i for i, h in enumerate(baseline["header"])}
     missing = [c for c in _GUARDED + ["matrix", "ranks"] if c not in b_idx]
     if missing:
-        return [f"baseline {baseline_path} lacks columns {missing}; "
-                "regenerate it with benchmarks/latency_kernels.py"]
+        return [f"baseline {baseline_path} lacks columns {missing} that the "
+                "current benchmark emits — the committed baseline predates "
+                "this code; regenerate it with: PYTHONPATH=src python -m "
+                "benchmarks.latency_kernels"]
+    short = [r for r in baseline["rows"] if len(r) < len(baseline["header"])]
+    if short:
+        return [f"baseline {baseline_path} has {len(short)} row(s) shorter "
+                f"than its header ({len(baseline['header'])} columns); "
+                "regenerate it with: PYTHONPATH=src python -m "
+                "benchmarks.latency_kernels"]
     b_rows = {(r[b_idx["matrix"]], r[b_idx["ranks"]]): r
               for r in baseline["rows"]}
     c_idx = {h: i for i, h in enumerate(HEADER)}

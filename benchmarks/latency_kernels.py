@@ -3,11 +3,13 @@
 The paper timed Cutlass int4 on an A100 and found even 128 ranks cost 23-52%
 extra latency (unfused second pass).  No TPU is attached here, so we report:
 
-  * the ROOFLINE-MODEL v5e latency of the W4A4+LRC layer on the three kernel
-    paths — unfused (three activation passes + GEMM), chained (PR 1: fused
-    prologue → GEMM, one M×K xq round-trip between them) and fused (single
-    kernel, kernels/fused_gemm.py: xq never touches HBM) — derived from
-    exact byte/FLOP counts;
+  * the ROOFLINE-MODEL v5e latency of the W4A4+LRC layer on the kernel
+    paths — unfused (three activation passes + GEMM), chained (fused
+    prologue → GEMM, one M×K xq round-trip between them) and the
+    single-kernel K-split fused path in both prologue variants (resident:
+    one x read; streamed: two x reads, no f32 row slab in VMEM) — derived
+    from exact byte/FLOP counts, including the per-M-tile V/U factor
+    streaming the K-split grid implies;
   * the activation-side HBM bytes of each path
     (repro.launch.roofline.prologue_activation_bytes), the columns the CI
     regression gate (benchmarks/check_regression.py) protects;
@@ -15,7 +17,9 @@ extra latency (unfused second pass).  No TPU is attached here, so we report:
     (relative, not absolute).
 
 ``--smoke`` swaps the analytic sweep for an actual-kernel run: the three
-paths execute in pallas interpret mode at small decode/mixed shapes, with
+paths execute in pallas interpret mode at small decode/mixed shapes PLUS one
+rank-1024, large-K shape (K×R×4 = 32 MB — far past the old 8 MB whole-VMEM
+V ceiling) that must resolve to the fused path with no demotion, with
 bitwise cross-path parity checked and wall-clock recorded — the CI
 bench-smoke job runs this and uploads results/latency_kernels_smoke.json.
 """
@@ -38,7 +42,8 @@ RANKS = [0, 128, 256, 512, 1024]
 # Three serving regimes: decode (M=16, weight-bound), mixed (M=256), and the
 # paper's prefill setting (M=2048+, compute-bound on TPU).  The fusion win
 # lives in the memory-bound regimes; at the paper's M the v5e GEMM is
-# compute-bound and fusion only saves energy/bytes, not latency.
+# compute-bound and fusion saves energy/bytes, not latency — which is why
+# the K-split fused path (same MXU work, fewer bytes) now wins prefill too.
 MS = [16, 256, 2048]
 
 HEADER = [
@@ -48,19 +53,37 @@ HEADER = [
     "fused_over_chained",
     "act_prologue_kb_unfused", "act_prologue_kb_chained",
     "act_prologue_kb_fused", "act_prologue_byte_ratio",
+    # K-split columns: the streamed-prologue fused variant (no f32 row slab
+    # in VMEM, one extra x read).  NOTE: the streamed variant only executes
+    # with rotate=False (rotation pins the resident slab), so for the
+    # rotated rows below these columns are the what-if figure of serving
+    # the same shape unrotated — not an attainable plan for that row.
+    "us_fused_stream", "act_prologue_kb_fused_stream",
 ]
 
 
-def _roofline_time(m, k, n, r, path: str):
-    """Bytes + flops → v5e time bound for the W4A4(+LR) layer on one path."""
+def _roofline_time(m, k, n, r, path: str, bm: int = None):
+    """Bytes + flops → v5e time bound for the W4A4(+LR) layer on one path.
+
+    The K-split grid streams the f32 U/V factors from HBM once per M-tile
+    (they are no longer VMEM-resident across the whole problem), so the
+    factor traffic scales with ceil(m/bm) — ``bm`` defaults to the plan
+    table's M tile for the regime."""
+    if bm is None:
+        from repro.kernels.ops import select_blocks
+
+        bm = select_blocks(m, k, n, r)[0]
+    n_m = -(-m // bm)
     bytes_w = k * n / 2 + 4 * n  # packed int4 + scales
     bytes_x = m * k * 2  # bf16 activations read
     bytes_out = m * n * 4
-    bytes_lr_w = (k * r + n * r) * 2 if r else 0  # U/V factor reads
+    bytes_lr_w = n_m * (k * r + n * r) * 4 if r else 0  # f32 U/V per M-tile
     inter = m * k + 4 * m + (4 * m * r if r else 0)  # xq + sx (+ xv)
     total_bytes = bytes_w + bytes_x + bytes_out + bytes_lr_w
     if path in ("chained", "unfused"):
         total_bytes += 2 * inter  # prologue writes xq/sx/xv; GEMM reads back
+    if path == "fused_stream":
+        total_bytes += bytes_x  # the first GEMM visit re-streams x
     if path == "unfused":
         if r:
             # separate LR pass: re-read x, read+write the output again
@@ -87,9 +110,11 @@ def analytic_rows(ms=MS, sizes=SIZES, ranks=RANKS):
                 t_un = _roofline_time(m, k, n, r, "unfused")
                 t_ch = _roofline_time(m, k, n, r, "chained")
                 t_fu = _roofline_time(m, k, n, r, "fused")
+                t_fs = _roofline_time(m, k, n, r, "fused_stream")
                 act = {p: prologue_activation_bytes(m, k, r, rotate=True,
                                                     path=p)
-                       for p in ("unfused", "chained", "fused")}
+                       for p in ("unfused", "chained", "fused",
+                                 "fused_stream")}
                 rows.append([
                     f"M{m}_{n}x{k}", r,
                     round(t_un * 1e6, 1), round(t_ch * 1e6, 1),
@@ -100,29 +125,42 @@ def analytic_rows(ms=MS, sizes=SIZES, ranks=RANKS):
                     round(act["chained"] / 1024, 1),
                     round(act["fused"] / 1024, 1),
                     round(act["chained"] / act["fused"], 2),
+                    round(t_fs * 1e6, 1),
+                    round(act["fused_stream"] / 1024, 1),
                 ])
     return rows
 
 
 def smoke_rows():
-    """Run the three kernel paths for real (pallas interpret mode) at small
-    decode/mixed shapes: cross-path bitwise parity + wall-clock."""
+    """Run the three kernel paths for real (pallas interpret mode): small
+    decode/mixed shapes plus the rank-1024 large-K no-demotion shape.
+    Cross-path bitwise parity + wall-clock; the big shape additionally
+    asserts that auto dispatch resolves to the fused path (the old whole-V
+    VMEM ceiling would have demoted it to unfused)."""
     from benchmarks.common import make_w4a4_problem
     from repro.kernels import ops
 
     rng = np.random.default_rng(0)
     rows = []
-    # (m, k, n, r, rotate) — decode and mixed regime shapes, odd N included
+    # (m, k, n, r, rotate) — decode and mixed regime shapes, odd N included,
+    # and the K-split acceptance shape: K×R×4 = 32 MB of V, 4× the old
+    # 8 MB whole-VMEM ceiling.
     shapes = [
         (16, 256, 512, 0, False),
         (16, 256, 512, 32, True),
         (16, 512, 300, 64, False),
         (64, 256, 256, 32, True),
+        (16, 8192, 256, 1024, True),  # previously demoted to unfused
     ]
     for m, k, n, r, rot in shapes:
+        big = k * r * 4 > ops._PROLOGUE_V_BYTES_MAX
+        if big:
+            plan = ops.resolve_plan(m, k, n, r, rotate=rot)
+            assert plan.path == "fused", \
+                f"K-split regression: {(m, k, n, r)} resolved to {plan}"
         spec, x, wp, s, u, v = make_w4a4_problem(rng, m, k, n, r)
         outs, times = {}, {}
-        for impl in ("unfused", "chained", "fused"):
+        for impl in ("unfused", "chained", "fused", "auto"):
             f = lambda: ops.w4a4_lrc_forward(x, wp, s, u, v, spec,
                                              rotate=rot, impl=impl)
             f().block_until_ready()  # compile
@@ -131,7 +169,8 @@ def smoke_rows():
             times[impl] = (time.time() - t0) * 1e6
             outs[impl] = np.asarray(out)
         bitwise = (np.array_equal(outs["fused"], outs["chained"])
-                   and np.array_equal(outs["fused"], outs["unfused"]))
+                   and np.array_equal(outs["fused"], outs["unfused"])
+                   and np.array_equal(outs["fused"], outs["auto"]))
         assert bitwise, f"cross-path mismatch at {(m, k, n, r, rot)}"
         act_ch = prologue_activation_bytes(m, k, r, rotate=rot, path="chained")
         act_fu = prologue_activation_bytes(m, k, r, rotate=rot, path="fused")
@@ -145,6 +184,9 @@ def smoke_rows():
                                             path="unfused") / 1024, 1),
             round(act_ch / 1024, 1), round(act_fu / 1024, 1),
             round(act_ch / act_fu, 2),
+            "",
+            round(prologue_activation_bytes(m, k, r, rotate=rot,
+                                            path="fused_stream") / 1024, 1),
         ])
     return rows
 
@@ -190,7 +232,8 @@ def run(smoke: bool = False):
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
-                    help="run the actual kernels in interpret mode at small "
-                         "decode/mixed shapes (CI bench-smoke job)")
+                    help="run the actual kernels in interpret mode (small "
+                         "decode/mixed shapes + the rank-1024 large-K "
+                         "no-demotion shape; CI bench-smoke job)")
     args = ap.parse_args()
     run(smoke=args.smoke)

@@ -5,31 +5,36 @@ matmul costs 23-52% extra latency even at rank 128 ("data movement is
 important, and ... a fused kernel could improve latency") and speculates the
 low-rank path "may be computable in parallel with the low-bitwidth
 computation".  The serving hot path is now ONE pallas kernel end to end
-(`ops.w4a4_lrc_forward`, fused_gemm.py): the grid covers (M-tile, N-tile)
-with the K reduction loop inside; the activation prologue (blocked
+(`ops.w4a4_lrc_forward`, fused_gemm.py) in EVERY regime: the K-split grid
+covers (M-tile, N-visit, K-chunk, R-tile); the activation prologue (blocked
 Walsh-Hadamard rotation, per-token amax/scale + int4-grid quantization, and
-the (x·V) low-rank projection) runs on each M-tile's first N visit and
-deposits xq/sx/xv into VMEM scratch, from which the int8×int8→int32 MXU GEMM
-and the (xV)Uᵀ low-rank epilogue feed directly — the quantized activations
-never touch HBM.  Two graceful-degradation paths remain behind the same
+the K-chunked/R-tiled (x·V) low-rank projection) sweeps the K-chunks on
+each M-tile's first N visit, the int8×int8→int32 MXU GEMM partial-sums over
+the same chunks, and V/W stream per chunk — no operand slab is whole in
+VMEM and the quantized activations never touch HBM.  Per-slab VMEM
+feasibility (`ops.resolve_plan`) shrinks tiles to fit the budget before the
+path ever demotes; two graceful-degradation paths remain behind the same
 entry point:
 
   chained — prologue.py → w4a4.py, TWO kernels: the prologue emits xq/sx/xv
-     in one HBM pass over x, the GEMM+epilogue kernel consumes them (one
-     M×K xq round-trip between the two).  Used when the fused working set
-     exceeds VMEM, and by default at prefill M where the GEMM is MXU-bound.
-  unfused — three activation passes (hadamard.py, actquant.py, per-tile
-     projection) + the GEMM kernel.  Used when V alone is past the prologue
-     VMEM budget (`ops._PROLOGUE_V_BYTES_MAX`).
+     in one HBM pass over x (V streamed in (bk, br) tiles), the
+     GEMM+epilogue kernel consumes them (one M×K xq round-trip between the
+     two).  Used when no fused tiling fits the VMEM budget.
+  unfused — three activation passes (hadamard.py, actquant.py, tiled
+     projection) + the GEMM kernel.  Final fallback when even the prologue
+     kernel's row slab cannot fit (`ops.prologue_vmem_budget`).
 
-Execution plans (kernel path + block sizes) come from a small autotune table
-keyed on the (M, K, N, R) serving regime — decode / mixed / prefill
-(`ops.select_plan`); measured winners from benchmarks/autotune_blocks.py can
-overlay it via `ops.load_block_table(results/block_table.json)`.  All GEMM
-operands are zero-padded to block multiples so odd MLP widths take the
-pallas path; grids carry Mosaic ``dimension_semantics`` annotations.  All
-three paths are bitwise identical in interpret mode: they share the row-tile
-bodies in rowops.py and integer accumulation is exact under any K split.
+Execution plans (kernel path + BM/BN/BK/BR tiles) come from a small
+autotune table keyed on the (M, K, N, R) serving regime — decode / mixed /
+prefill (`ops.select_plan`); measured winners from
+benchmarks/autotune_blocks.py can overlay it via
+`ops.load_block_table(results/block_table.json)`, which may also carry
+VMEM-budget overrides (`ops.set_vmem_budgets`).  All GEMM operands are
+zero-padded to block multiples so odd MLP widths take the pallas path;
+grids carry Mosaic ``dimension_semantics`` annotations.  All three paths
+are bitwise identical in interpret mode: they share the row-tile bodies in
+rowops.py (including the canonical chunked projection-accumulation order)
+and integer accumulation is exact under any K split.
 
   fused_gemm.py — single-kernel W4A4+LRC forward (prologue + GEMM + epilogue)
   prologue.py — fused rotate → quantize → low-rank-project prologue

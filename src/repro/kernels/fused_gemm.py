@@ -1,32 +1,58 @@
 """Single-kernel fused W4A4+LRC forward: prologue + GEMM in ONE pallas call.
 
-PR 1 collapsed rotate → quantize → low-rank-project into one prologue kernel,
-but the serving path still chained TWO kernels (prologue → GEMM), so the
-quantized activations ``xq`` (and ``sx``/``xv``) made a full M×K HBM
-write+read between them.  This kernel closes that gap: the grid covers
-(M-tile, N-tile) with the K reduction loop INSIDE the kernel body, and the
-activation prologue runs on each M-tile's FIRST visit (N-tile index 0),
-depositing ``xq``/``sx``/``xv`` into VMEM scratch that persists across the
-M-tile's remaining N-tile visits.  The int4 GEMM and the low-rank epilogue
-feed straight from that residency — ``xq`` never touches HBM.
+PR 2 fused the activation prologue into the GEMM kernel, but its (M, N) grid
+kept every K-side operand WHOLE in VMEM: the (bm, K) f32 activation slab,
+the full K×R V factor, and a (K//2, bn) packed-weight column slab.  Those
+residencies were the VMEM ceilings that demoted the fused path exactly in
+the paper's headline regime (rank ≈ 10-30% of the weight matrix at large K)
+and kept prefill on the two-kernel chain.
 
-Per grid step (i, j):
+This version splits the reduction across the grid: (M-tile, N-visit,
+K-chunk, R-tile), K/R innermost, with
 
-  j == 0   : x row tile (bm, K) → rotate → quantize → project
-             (kernels/rowops.prologue_rows — the SAME body the two-kernel
-             chain runs, so outputs are bitwise identical) → VMEM scratch
-  every j  : K-loop over bk chunks of the scratch-resident xq against the
-             (K//2, bn) packed-weight slab; int8×int8→int32 accumulation
-  epilogue : acc · sx · sw (+ xv Uᵀ) while the output tile is in VMEM
+  * the packed-weight slab streamed per (K-chunk, N-visit) — (bk//2, bn),
+  * V streamed per (K-chunk, R-tile) — (bk, br), never whole,
+  * the int4 GEMM partial-summing across K-chunks in a (bm, bn) int32
+    scratch accumulator,
+  * ``xv`` accumulating across K-chunks in a (bm, r_pad) f32 scratch,
+    R-tile by R-tile, via the canonical ``rowops.project_chunk_rows``
+    partials in ascending-K order (bitwise-shared with the chained and
+    unfused paths),
+  * only the inherently-resident pieces left in VMEM scratch: the int8
+    ``xq`` row (bm × k_pad bytes — the point of the fusion is that it never
+    touches HBM), ``sx`` and ``xv``.
 
-The x row slab, V (whole), and the per-N-tile weight slab must fit VMEM —
-the ops-layer wrapper checks the footprint and falls back to the two-kernel
-chain (decode/mixed fit comfortably; prefill M-tiles default to the chain,
-where the GEMM is MXU-bound anyway and fusion buys bytes, not latency).
+N-visit 0 is the PROLOGUE SWEEP: it walks the K-chunks once before any GEMM
+work (the per-token scale needs the whole row's amax before any chunk can be
+quantized).  Two prologue variants trade an HBM re-read against VMEM:
 
-K is consumed UNPADDED by the prologue (the rotation/amax must not see pad
-columns); xq is zero-padded to the bk multiple on its way into scratch, so
-the integer accumulation over padded chunks is exact.
+  resident — the (possibly rotated) f32 row is stashed in a (bm, k_pad)
+      scratch slab during the sweep (rotation REQUIRES this: the cross-chunk
+      butterfly stages need every chunk; ``rowops.fwht_intra_rows`` runs per
+      chunk at stash time, ``fwht_cross_rows`` at the end of the sweep —
+      bitwise equal to the whole-row transform).  x is read from HBM once.
+  streamed — no f32 slab: the sweep only folds the per-chunk amax, and the
+      first GEMM visit re-streams the x chunks to quantize and project them
+      on the fly.  One extra M×K read of x; rotate=False only.
+
+The ops-layer per-slab feasibility model picks the variant (and shrinks
+tiles) instead of demoting the path, so the fused kernel now serves all
+three regimes — decode, mixed AND prefill — at any rank.
+
+Per grid step (i, j, kk, rr), K_pad = K rounded up to bk, R_pad to br:
+
+  j == 0          : prologue sweep (see above); no output write
+  j >= 1, rr == 0 : int8×int8→int32 partial sum of xq[:, kk·bk:] against the
+                    streamed weight chunk into the acc scratch
+  j == 1          : xv[:, rr·br:] += x_rot chunk · V tile  (projection rides
+                    the first GEMM visit, when V streams)
+  last (kk, rr)   : epilogue acc·sx·sw (+ xv Uᵀ) → one HBM write of the
+                    (bm, bn) output tile for N-visit j-1
+
+K is consumed UNPADDED by the prologue math (zero pad columns are exact for
+amax/quantize/project; rotation requires K = K_pad, power of two), so the
+integer accumulation over padded chunks is exact and all paths stay bitwise
+identical in interpret mode.
 """
 
 from __future__ import annotations
@@ -38,63 +64,102 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.rowops import prologue_rows, unpack_int4_rows
+from repro.kernels.rowops import (
+    amax_to_scale,
+    default_proj_tiles,
+    fwht_cross_rows,
+    fwht_intra_rows,
+    project_chunk_rows,
+    quantize_rows,
+    row_amax,
+    unpack_int4_rows,
+)
+
+_VARIANTS = ("resident", "streamed")
 
 
-def _body(x_ref, v_ref, wp_ref, sw_ref, u_ref, out_ref, xq_s, sx_s, xv_s, *,
-          qmax: int, clip_ratio: float, rotate: bool,
-          k: int, k_pad: int, bk: int):
+def _body(x_ref, v_ref, wp_ref, sw_ref, u_ref, out_ref,
+          xq_s, sx_s, xv_s, rot_s, acc_s, *,
+          qmax: int, clip_ratio: float, rotate: bool, resident: bool,
+          k_pad: int, bk: int, br: int, n_k: int, n_r: int):
     j = pl.program_id(1)
+    kk = pl.program_id(2)
+    rr = pl.program_id(3)
+    last_kr = (kk == n_k - 1) & (rr == n_r - 1)
 
-    @pl.when(j == 0)
-    def _prologue():
-        q, s, xv = prologue_rows(x_ref[...].astype(jnp.float32),
-                                 None if v_ref is None else v_ref[...],
-                                 qmax, clip_ratio, rotate, k)
-        if k_pad > k:
-            q = jnp.pad(q, ((0, 0), (0, k_pad - k)))
-        xq_s[...] = q
-        sx_s[...] = s
-        if xv_s is not None:
-            xv_s[...] = xv
+    # ---- prologue sweep (N-visit 0) -------------------------------------
+    if resident:
+        @pl.when((j == 0) & (rr == 0))
+        def _stash():
+            xc = x_ref[...].astype(jnp.float32)
+            if rotate:
+                xc = fwht_intra_rows(xc, bk)
+            rot_s[:, pl.ds(kk * bk, bk)] = xc
 
-    n_k = k_pad // bk
+        @pl.when((j == 0) & last_kr)
+        def _finalize():
+            row = rot_s[...]
+            if rotate:
+                row = fwht_cross_rows(row, k_pad, bk)
+                rot_s[...] = row
+            s = amax_to_scale(row_amax(row), qmax, clip_ratio)
+            sx_s[...] = s
+            xq_s[...] = quantize_rows(row, s, qmax)
+    else:
+        @pl.when((j == 0) & (rr == 0))
+        def _fold_amax():
+            a = row_amax(x_ref[...].astype(jnp.float32))
+            prev = jnp.where(kk == 0, jnp.zeros_like(a), sx_s[...])
+            amax = jnp.maximum(prev, a)
+            # the last chunk's fold doubles as the scale conversion
+            sx_s[...] = jnp.where(kk == n_k - 1,
+                                  amax_to_scale(amax, qmax, clip_ratio), amax)
 
-    def _k_step(kk, acc):
-        w_blk = unpack_int4_rows(wp_ref[pl.ds(kk * (bk // 2), bk // 2), :])
-        x_blk = xq_s[:, pl.ds(kk * bk, bk)]
-        return acc + jax.lax.dot_general(
-            x_blk, w_blk, (((1,), (0,)), ((), ())),
+        @pl.when((j == 1) & (rr == 0))
+        def _quantize_chunk():
+            xq_s[:, pl.ds(kk * bk, bk)] = quantize_rows(
+                x_ref[...].astype(jnp.float32), sx_s[...], qmax)
+
+    # ---- low-rank projection rides the first GEMM visit (V streams) -----
+    if xv_s is not None:
+        @pl.when(j == 1)
+        def _project():
+            xc = (rot_s[:, pl.ds(kk * bk, bk)] if resident
+                  else x_ref[...].astype(jnp.float32))
+            part = project_chunk_rows(xc, v_ref[...])
+            prev = xv_s[:, pl.ds(rr * br, br)]
+            xv_s[:, pl.ds(rr * br, br)] = jnp.where(kk == 0, part, prev + part)
+
+    # ---- int4 GEMM partial sum over the K-chunks -------------------------
+    @pl.when((j >= 1) & (rr == 0))
+    def _gemm_chunk():
+        @pl.when(kk == 0)
+        def _zero():
+            acc_s[...] = jnp.zeros_like(acc_s)
+
+        w_blk = unpack_int4_rows(wp_ref[...])
+        acc_s[...] += jax.lax.dot_general(
+            xq_s[:, pl.ds(kk * bk, bk)], w_blk, (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.int32,
         )
 
-    bm, bn = out_ref.shape
-    acc = jax.lax.fori_loop(
-        0, n_k, _k_step, jnp.zeros((bm, bn), jnp.int32))
-
-    out = acc.astype(jnp.float32) * sx_s[...] * sw_ref[...]
-    if xv_s is not None:
-        out = out + jax.lax.dot_general(
-            xv_s[...], u_ref[...].astype(jnp.float32),
-            (((1,), (1,)), ((), ())),
-            preferred_element_type=jnp.float32,
-        )
-    out_ref[...] = out
-
-
-def _kernel_lr(x_ref, v_ref, wp_ref, sw_ref, u_ref, out_ref,
-               xq_s, sx_s, xv_s, **kw):
-    _body(x_ref, v_ref, wp_ref, sw_ref, u_ref, out_ref, xq_s, sx_s, xv_s, **kw)
-
-
-def _kernel_nolr(x_ref, wp_ref, sw_ref, out_ref, xq_s, sx_s, **kw):
-    _body(x_ref, None, wp_ref, sw_ref, None, out_ref, xq_s, sx_s, None, **kw)
+    # ---- epilogue: one HBM write per (M-tile, N-tile) --------------------
+    @pl.when((j >= 1) & last_kr)
+    def _epilogue():
+        out = acc_s[...].astype(jnp.float32) * sx_s[...] * sw_ref[...]
+        if xv_s is not None:
+            out = out + jax.lax.dot_general(
+                xv_s[...], u_ref[...].astype(jnp.float32),
+                (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+        out_ref[...] = out
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("bits", "clip_ratio", "rotate", "bm", "bn", "bk",
-                     "interpret"),
+    static_argnames=("bits", "clip_ratio", "rotate", "bm", "bn", "bk", "br",
+                     "variant", "interpret"),
 )
 def fused_w4a4_lrc_kernel(
     x: jnp.ndarray,  # (M, K) float — K UNPADDED (prologue semantics)
@@ -108,6 +173,8 @@ def fused_w4a4_lrc_kernel(
     bm: int = 128,
     bn: int = 128,
     bk: int = 256,
+    br: int = None,  # R-tile of the streamed V (defaults: 512-capped pow2)
+    variant: str = "resident",  # resident | streamed prologue (see module doc)
     interpret: bool = True,
 ):
     """One pallas call for the whole W4A4+LRC forward; returns (M, N) f32."""
@@ -117,52 +184,113 @@ def fused_w4a4_lrc_kernel(
     assert m % bm == 0 and n % bn == 0 and k_pad % bk == 0, \
         (m, n, k, k_pad, bm, bn, bk)
     assert k_pad >= k, (k_pad, k)
+    assert variant in _VARIANTS, variant
+    resident = variant == "resident"
     if rotate:
         assert k & (k - 1) == 0, \
             f"online rotation needs power-of-two K, got {k}"
+        assert k_pad == k, (k, k_pad)
+        assert resident, "rotation's cross-chunk butterflies need the " \
+                         "resident row slab"
     qmax = 2 ** (bits - 1) - 1
     with_lr = v is not None
 
-    grid = (m // bm, n // bn)
+    if k_pad > k:
+        x = jnp.pad(x, ((0, 0), (0, k_pad - k)))
+
+    r_pad = 0
+    if with_lr:
+        r = v.shape[1]
+        br = default_proj_tiles(k, r, bk, br)[1]
+        r_pad = r + (-r) % br
+        v = jnp.asarray(v, jnp.float32)
+        if (k_pad > k) or (r_pad > r):
+            v = jnp.pad(v, ((0, k_pad - k), (0, r_pad - r)))
+        if r_pad > r:
+            u = jnp.pad(jnp.asarray(u, jnp.float32), ((0, 0), (0, r_pad - r)))
+    n_k = k_pad // bk
+    n_r = max(r_pad // br, 1) if with_lr else 1
+
+    # N-visit 0 is the prologue sweep; visits 1..n/bn do GEMM work for
+    # output column j-1.
+    grid = (m // bm, n // bn + 1, n_k, n_r)
     kw = dict(qmax=qmax, clip_ratio=clip_ratio, rotate=rotate,
-              k=k, k_pad=k_pad, bk=bk)
+              resident=resident, k_pad=k_pad, bk=bk, br=br, n_k=n_k, n_r=n_r)
+
+    # x chunks stream during the prologue sweep (and, for the streamed
+    # variant, again on the first GEMM visit); later visits pin chunk 0 so
+    # consecutive fetches dedupe.
+    x_reads = (lambda j: j == 0) if resident else (lambda j: j <= 1)
     in_specs = [
-        pl.BlockSpec((bm, k), lambda i, j: (i, 0)),  # x row slab
+        pl.BlockSpec((bm, bk),
+                     lambda i, j, kk, rr: (i, jnp.where(x_reads(j), kk, 0))),
     ]
     operands = [x]
     if with_lr:
-        r = v.shape[1]
-        in_specs.append(pl.BlockSpec((k, r), lambda i, j: (0, 0)))  # V whole
+        in_specs.append(pl.BlockSpec(
+            (bk, br),
+            lambda i, j, kk, rr: (jnp.where(j == 1, kk, 0),
+                                  jnp.where(j == 1, rr, 0))))  # V tile
         operands.append(v)
     in_specs += [
-        pl.BlockSpec((k_pad // 2, bn), lambda i, j: (0, j)),  # W column slab
-        pl.BlockSpec((1, bn), lambda i, j: (0, j)),  # sw
+        pl.BlockSpec((bk // 2, bn),
+                     lambda i, j, kk, rr: (jnp.where(j == 0, 0, kk),
+                                           jnp.maximum(j - 1, 0))),  # W chunk
+        pl.BlockSpec((1, bn),
+                     lambda i, j, kk, rr: (0, jnp.maximum(j - 1, 0))),  # sw
     ]
     operands += [wpacked, sw]
     scratch = [
         pltpu.VMEM((bm, k_pad), jnp.int8),  # xq residency
-        pltpu.VMEM((bm, 1), jnp.float32),  # sx
+        pltpu.VMEM((bm, 1), jnp.float32),  # sx (amax accumulator first)
     ]
     if with_lr:
-        in_specs.append(pl.BlockSpec((bn, r), lambda i, j: (j, 0)))  # u
+        in_specs.append(pl.BlockSpec(
+            (bn, r_pad), lambda i, j, kk, rr: (jnp.maximum(j - 1, 0), 0)))  # U
         operands.append(u)
-        scratch.append(pltpu.VMEM((bm, r), jnp.float32))  # xv
-        kernel = functools.partial(_kernel_lr, **kw)
-    else:
-        kernel = functools.partial(_kernel_nolr, **kw)
+        scratch.append(pltpu.VMEM((bm, r_pad), jnp.float32))  # xv accumulator
+    if resident:
+        scratch.append(pltpu.VMEM((bm, k_pad), jnp.float32))  # f32 row slab
+    scratch.append(pltpu.VMEM((bm, bn), jnp.int32))  # GEMM partial sums
+
+    def kernel(*refs):
+        i = 0
+        x_ref = refs[i]; i += 1
+        v_ref = None
+        if with_lr:
+            v_ref = refs[i]; i += 1
+        wp_ref = refs[i]; i += 1
+        sw_ref = refs[i]; i += 1
+        u_ref = None
+        if with_lr:
+            u_ref = refs[i]; i += 1
+        out_ref = refs[i]; i += 1
+        xq_s = refs[i]; i += 1
+        sx_s = refs[i]; i += 1
+        xv_s = None
+        if with_lr:
+            xv_s = refs[i]; i += 1
+        rot_s = None
+        if resident:
+            rot_s = refs[i]; i += 1
+        acc_s = refs[i]
+        _body(x_ref, v_ref, wp_ref, sw_ref, u_ref, out_ref,
+              xq_s, sx_s, xv_s, rot_s, acc_s, **kw)
 
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_specs=pl.BlockSpec((bm, bn),
+                               lambda i, j, kk, rr: (i, jnp.maximum(j - 1, 0))),
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
         scratch_shapes=scratch,
-        # M tiles are independent (megacore-splittable); N visits of one M
-        # tile share the prologue's scratch residency and must stay
-        # sequential so j==0 writes before j>0 reads.
+        # M tiles are independent (megacore-splittable); the N/K/R visits of
+        # one M tile share the prologue's scratch residency and the partial
+        # sums, and must stay sequential.
         compiler_params=pltpu.TPUCompilerParams(
-            dimension_semantics=("parallel", "arbitrary"),
+            dimension_semantics=("parallel", "arbitrary", "arbitrary",
+                                 "arbitrary"),
         ),
         interpret=interpret,
     )(*operands)

@@ -3,32 +3,44 @@
 Responsibilities: shape padding to block multiples (weights, scales and the
 low-rank factors are zero-padded, so odd MLP widths never crash the pallas
 path), execution-plan selection per serving regime (decode / mixed /
-prefill) — kernel path AND (BM, BN, BK) tiles, overridable from a measured
-``results/block_table.json`` via :func:`load_block_table` —, interpret-mode
-selection (interpret=True on CPU — validates the kernel bodies; compiled
-Mosaic on real TPU), and the end-to-end entry ``w4a4_lrc_forward`` used by
-``QLinear(impl="pallas"/"fused")`` and the serving engine.
+prefill) — kernel path AND (BM, BN, BK, BR) tiles, overridable from a
+measured ``results/block_table.json`` via :func:`load_block_table` —,
+per-slab VMEM feasibility (tiles shrink to fit the budget before the path
+ever demotes), interpret-mode selection (interpret=True on CPU — validates
+the kernel bodies; compiled Mosaic on real TPU), and the end-to-end entry
+``w4a4_lrc_forward`` used by ``QLinear(impl="pallas"/"fused")`` and the
+serving engine.
 
 Three kernel paths, strongest fusion first:
 
-  fused   — ONE pallas kernel (kernels/fused_gemm.py): the activation
-            prologue runs on each M-tile's first N visit and the int4 GEMM +
-            LRC epilogue feed from the VMEM scratch residency; xq never
-            touches HBM.
+  fused   — ONE pallas kernel (kernels/fused_gemm.py): K-split (M, N,
+            K-chunk, R-tile) grid; the activation prologue sweeps the
+            K-chunks on each M-tile's first N visit, the int4 GEMM
+            partial-sums across the same chunks, and V/W stream per chunk —
+            no operand slab is whole in VMEM and xq never touches HBM.
+            Two prologue variants: "resident" (f32 row slab in scratch, one
+            x read; required for rotation) and "streamed" (no slab, one
+            extra x read).
   chained — TWO kernels (prologue → w4a4 GEMM); xq/sx/xv make one HBM
-            round-trip between them.  Fallback when the fused kernel's
-            working set (x row slab + V + weight slab) exceeds VMEM.
-  unfused — three activation passes (rotate, quantize, project) + the GEMM
-            kernel.  Fallback when V alone exceeds the prologue VMEM budget.
+            round-trip between them.  V streams in (bk, br) tiles here too.
+  unfused — three activation passes (rotate, quantize, tiled project) + the
+            GEMM kernel.  Final fallback when even the prologue kernel's
+            row slab cannot fit.
 
 All three are bitwise identical in interpret mode: they share the row bodies
-in kernels/rowops.py and integer accumulation is exact under any K split.
+in kernels/rowops.py (including the canonical K-chunked/R-tiled projection
+accumulation order) and integer accumulation is exact under any K split.
+
+VMEM budgets default to the module constants below; override them at
+runtime via :func:`set_vmem_budgets`, a ``"vmem"`` entry in the block-table
+JSON, or the serve CLI's ``--vmem-budget`` flag (so autotune on real TPUs
+can probe them).
 """
 
 from __future__ import annotations
 
 import json
-from functools import partial
+from typing import NamedTuple, Optional
 from pathlib import Path
 
 import jax
@@ -39,19 +51,48 @@ from repro.kernels.actquant import act_quant_kernel
 from repro.kernels.fused_gemm import fused_w4a4_lrc_kernel
 from repro.kernels.hadamard import fwht_kernel
 from repro.kernels.prologue import fused_prologue_kernel
+from repro.kernels.rowops import (default_proj_tiles, project_rows_tiled,
+                                  round_pow2 as _round_pow2)
 from repro.kernels.w4a4 import w4a4_lowrank_matmul_kernel
 from repro.kernels.flash_attn import flash_attention_kernel
 
-# V is held whole in VMEM by the fused prologue (both the single-kernel and
-# the chained path); past this footprint the wrapper falls back to the
-# unfused three-pass chain.
+# Default working-set budget of the two-kernel chain's prologue (x row slab
+# + rotated-row scratch + xq/sx/xv outputs + double-buffered V tiles).
+# Historically this was the ceiling on a WHOLE-VMEM V; V now streams in
+# (bk, br) tiles, so the budget gates the row slab instead and the 8 MB
+# figure keeps the same "three quarters of a useful VMEM half" intent.
 _PROLOGUE_V_BYTES_MAX = 8 * 1024 * 1024
 
-# Working-set ceiling for the single-kernel fused path (x row slab + xq
-# scratch + V + weight slab + U/xv/out tiles); past it, auto dispatch takes
-# the two-kernel chain.  ~¾ of a v5e core's 16 MB VMEM, leaving room for
-# Mosaic's double-buffering of the streamed operands.
+# Default working-set ceiling for the single-kernel fused path (resident
+# scratch + double-buffered streamed blocks).  ~¾ of a v5e core's 16 MB
+# VMEM, leaving room for Mosaic's pipelining overheads.  Tiles shrink to
+# fit this before the path demotes (see _fit_fused).
 _FUSED_VMEM_BYTES_MAX = 12 * 1024 * 1024
+
+# Runtime overrides for the two budgets (set_vmem_budgets / block-table
+# "vmem" entry / serve --vmem-budget).  Empty -> the module constants above
+# (which tests may monkeypatch directly).
+_VMEM_OVERRIDES: dict = {}
+
+
+def set_vmem_budgets(fused: int = None, prologue: int = None):
+    """Override the VMEM working-set budgets (bytes) used by plan
+    resolution.  ``None`` leaves a budget at its current default."""
+    for key, val in (("fused", fused), ("prologue", prologue)):
+        if val is None:
+            continue
+        if not isinstance(val, int) or isinstance(val, bool) or val < 0:
+            raise ValueError(f"{key} VMEM budget must be a non-negative "
+                             f"int of bytes, got {val!r}")
+        _VMEM_OVERRIDES[key] = val
+
+
+def fused_vmem_budget() -> int:
+    return _VMEM_OVERRIDES.get("fused", _FUSED_VMEM_BYTES_MAX)
+
+
+def prologue_vmem_budget() -> int:
+    return _VMEM_OVERRIDES.get("prologue", _PROLOGUE_V_BYTES_MAX)
 
 
 def _interpret() -> bool:
@@ -68,30 +109,24 @@ def _pad_to(x, mult, axis):
     return jnp.pad(x, widths), size
 
 
-def _round_pow2(m: int) -> int:
-    p = 8
-    while p * 2 <= m:
-        p *= 2
-    return p
-
-
 # ---------------------------------------------------------------------------
 # execution-plan autotune table (kernel path + block sizes)
 # ---------------------------------------------------------------------------
 
-# Regime-keyed execution plans: the kernel path plus (BM, BN, BK) tiles.
+# Regime-keyed execution plans: the kernel path plus (BM, BN, BK, BR) tiles.
 # decode  (M ≤ 32):  single-kernel fused — the decode hot path is
-#                    activation+weight-HBM-bound, and the fused kernel's
-#                    small x row slab trivially fits VMEM; tiny M tile, wide
-#                    N×K tiles stream the weight matrix.
+#                    activation+weight-HBM-bound; tiny M tile, wide N×K
+#                    tiles stream the weight matrix.
 # mixed   (M ≤ 512): single-kernel fused, balanced tiles.
-# prefill (M > 512): two-kernel chain — at these M the GEMM is MXU-bound,
-#                    fusion saves bytes but no latency, and the (BM, K) f32
-#                    row slab would crowd VMEM at large K.
+# prefill (M > 512): single-kernel fused as well since the K-split grid —
+#                    the (BM, K) f32 row slab that used to crowd VMEM now
+#                    either fits (resident) or is traded for one extra x
+#                    read (streamed); the GEMM is MXU-bound at these M, and
+#                    fused ≤ chained on activation bytes at every M.
 _BLOCK_TABLE = {
-    "decode": dict(path="fused", bm=16, bn=256, bk=512),
-    "mixed": dict(path="fused", bm=128, bn=128, bk=256),
-    "prefill": dict(path="chained", bm=256, bn=256, bk=256),
+    "decode": dict(path="fused", bm=16, bn=256, bk=512, br=512),
+    "mixed": dict(path="fused", bm=128, bn=128, bk=256, br=512),
+    "prefill": dict(path="fused", bm=256, bn=256, bk=256, br=512),
 }
 
 _KERNEL_PATHS = ("fused", "chained", "unfused")
@@ -100,32 +135,79 @@ _KERNEL_PATHS = ("fused", "chained", "unfused")
 # overlays the analytic defaults above.  Populated by load_block_table().
 _MEASURED_TABLE: dict = {}
 
+_TILE_DIMS_REQUIRED = ("bm", "bn", "bk")
+_TILE_DIMS_ALL = ("bm", "bn", "bk", "br")
+_VMEM_KEYS = ("fused_bytes_max", "prologue_bytes_max")
+
+
+def _validate_entry(regime: str, entry, path) -> None:
+    if not isinstance(entry, dict):
+        raise ValueError(f"regime {regime!r} in block table {path} must map "
+                         f"to an object, got {type(entry).__name__}")
+    if entry.get("path") not in _KERNEL_PATHS:
+        raise ValueError(
+            f"unknown kernel path {entry.get('path')!r} for regime "
+            f"{regime!r}; expected one of {_KERNEL_PATHS}")
+    missing = set(_TILE_DIMS_REQUIRED) - set(entry)
+    if missing:
+        raise ValueError(f"regime {regime!r} missing keys {missing}")
+    for dim in _TILE_DIMS_ALL:
+        if dim not in entry:
+            continue  # br is optional (pre-K-split tables)
+        val = entry[dim]
+        if not isinstance(val, int) or isinstance(val, bool) or val <= 0:
+            raise ValueError(
+                f"regime {regime!r} tile dim {dim!r} must be a positive "
+                f"integer, got {val!r}")
+
 
 def load_block_table(path) -> dict:
     """Overlay measured autotune winners (benchmarks/autotune_blocks.py →
     results/block_table.json) onto the analytic block table.  Each entry is
-    {"regime": {"path": ..., "bm": ..., "bn": ..., "bk": ...}}."""
-    table = json.loads(Path(path).read_text())
+    {"regime": {"path": ..., "bm": ..., "bn": ..., "bk": ..., "br": ...}}
+    (``br`` optional — pre-K-split tables stay loadable).  A reserved
+    top-level ``"vmem"`` entry {"fused_bytes_max": ..,
+    "prologue_bytes_max": ..} overrides the VMEM budgets.  Malformed tables
+    raise ValueError and leave no partial state behind."""
+    try:
+        table = json.loads(Path(path).read_text())
+    except json.JSONDecodeError as e:
+        raise ValueError(f"block table {path} is not valid JSON: {e}") from e
+    if not isinstance(table, dict):
+        raise ValueError(f"block table {path} must be a JSON object, got "
+                         f"{type(table).__name__}")
+    vmem = table.get("vmem", {})
+    if not isinstance(vmem, dict):
+        raise ValueError(f"'vmem' entry in block table {path} must be an "
+                         f"object, got {type(vmem).__name__}")
+    unknown = set(vmem) - set(_VMEM_KEYS)
+    if unknown:
+        raise ValueError(f"unknown vmem budget keys {sorted(unknown)} in "
+                         f"block table {path}; expected {_VMEM_KEYS}")
+    for key, val in vmem.items():
+        if not isinstance(val, int) or isinstance(val, bool) or val <= 0:
+            raise ValueError(f"vmem budget {key!r} must be a positive int "
+                             f"of bytes, got {val!r}")
     for regime, entry in table.items():
+        if regime == "vmem":
+            continue
         if regime not in _BLOCK_TABLE:
             raise ValueError(
                 f"unknown regime {regime!r} in block table {path}; "
                 f"expected one of {sorted(_BLOCK_TABLE)}")
-        if entry.get("path") not in _KERNEL_PATHS:
-            raise ValueError(
-                f"unknown kernel path {entry.get('path')!r} for regime "
-                f"{regime!r}; expected one of {_KERNEL_PATHS}")
-        missing = {"bm", "bn", "bk"} - set(entry)
-        if missing:
-            raise ValueError(f"regime {regime!r} missing keys {missing}")
+        _validate_entry(regime, entry, path)
     _MEASURED_TABLE.clear()
-    _MEASURED_TABLE.update(table)
+    _MEASURED_TABLE.update({k: v for k, v in table.items() if k != "vmem"})
+    set_vmem_budgets(fused=vmem.get("fused_bytes_max"),
+                     prologue=vmem.get("prologue_bytes_max"))
     return table
 
 
 def reset_block_table():
-    """Drop any loaded measured winners; back to the analytic defaults."""
+    """Drop any loaded measured winners and VMEM-budget overrides; back to
+    the analytic defaults."""
     _MEASURED_TABLE.clear()
+    _VMEM_OVERRIDES.clear()
 
 
 def gemm_regime(m: int) -> str:
@@ -137,7 +219,8 @@ def gemm_regime(m: int) -> str:
 
 
 def select_plan(m: int, k: int, n: int, r: int = 0, regime: str = None):
-    """Execution plan (path, BM, BN, BK) for a (M, K, N, R) problem.
+    """Table execution plan (path, BM, BN, BK, BR) for a (M, K, N, R)
+    problem — no VMEM feasibility applied (see :func:`resolve_plan`).
 
     ``regime`` overrides the M-derived serving regime; unknown strings raise.
     Blocks are clamped to the actual dims; large ranks shrink BN so the U
@@ -151,30 +234,164 @@ def select_plan(m: int, k: int, n: int, r: int = 0, regime: str = None):
     bm = min(entry["bm"], _round_pow2(max(m, 8)))
     bn = min(entry["bn"], _round_pow2(max(n, 8)))
     bk = min(entry["bk"], _round_pow2(max(k, 8)))
+    if "br" in entry:
+        br = min(entry["br"], _round_pow2(max(r, 8)))
+    else:  # pre-K-split tables: the shared kernel default
+        br = default_proj_tiles(k, r)[1]
     if r >= 512:
         bn = min(bn, 128)
-    return entry["path"], bm, bn, bk
+    return entry["path"], bm, bn, bk, br
 
 
 def select_blocks(m: int, k: int, n: int, r: int = 0, regime: str = None):
-    """(BM, BN, BK) for a (M, K, N, R) problem (see :func:`select_plan`).
+    """(BM, BN, BK, BR) for a (M, K, N, R) problem (see :func:`select_plan`).
     Unknown ``regime`` strings raise ValueError."""
     return select_plan(m, k, n, r, regime=regime)[1:]
 
 
-def _fused_vmem_bytes(bm: int, k: int, k_pad: int, bn: int, r: int) -> int:
-    """Worst-case VMEM working set of the single-kernel fused path."""
-    return (
-        bm * k * 4          # x row slab (f32 upper bound)
-        + bm * k_pad        # xq int8 scratch residency
+# ---------------------------------------------------------------------------
+# per-slab VMEM feasibility: shrink tiles to fit, demote only when nothing
+# fits
+# ---------------------------------------------------------------------------
+
+
+class Plan(NamedTuple):
+    """A resolved execution plan: kernel path, tile dims, and (fused only)
+    the prologue variant ("resident" | "streamed")."""
+    path: str
+    bm: int
+    bn: int
+    bk: int
+    br: int
+    variant: Optional[str] = None
+
+
+def _fused_vmem_bytes(k: int, r: int, bm: int, bn: int, bk: int, br: int,
+                      resident: bool) -> int:
+    """Worst-case VMEM working set of the K-split fused kernel: resident
+    scratch plus double-buffered streamed blocks."""
+    k_pad = k + (-k) % bk
+    r_pad = (r + (-r) % br) if r else 0
+    res = (
+        bm * k_pad          # xq int8 residency
         + bm * 4            # sx
-        + k * r * 4         # V, whole
-        + (k_pad // 2) * bn  # packed-weight column slab
-        + bn * 4            # sw
-        + bn * r * 4        # U tile
-        + bm * r * 4        # xv scratch
-        + 2 * bm * bn * 4   # out tile + int32 accumulator
+        + bm * bn * 4       # int32 GEMM accumulator
     )
+    if r:
+        res += bm * r_pad * 4  # xv accumulator
+    if resident:
+        res += bm * k_pad * 4  # f32 (rotated) row slab
+    stream = (
+        bm * bk * 4         # x chunk (f32 upper bound)
+        + (bk // 2) * bn    # packed-weight chunk
+        + bn * 4            # sw
+        + bm * bn * 4       # out tile
+    )
+    if r:
+        stream += bk * br * 4 + bn * r_pad * 4  # V tile + U slab
+    return res + 2 * stream
+
+
+def _prologue_vmem_bytes(k: int, r: int, bm: int, bk: int, br: int,
+                         rotate: bool) -> int:
+    """Working set of the standalone (chained-path) prologue kernel: the x
+    row slab, the rotated-row scratch, the xq/sx/xv outputs and the
+    double-buffered streamed V tiles."""
+    k_pad = k + (-k) % bk if r else k
+    r_pad = (r + (-r) % br) if r else 0
+    b = bm * k_pad * 4 + bm * k_pad + bm * 4  # x slab + q out + s out
+    if rotate:
+        b += bm * k_pad * 4  # rotated-row scratch
+    if r:
+        b += bm * r_pad * 4 + 2 * (bk * br * 4)  # xv out + V tiles
+    return b
+
+
+def _shrink_to_fit(bytes_fn, tiles: dict, mins: dict, budget: int):
+    """Greedily halve tile dims (largest byte saving first, deterministic
+    tie-break in ``mins`` key order) until ``bytes_fn(**tiles)`` fits
+    ``budget``.  Returns the fitted tiles dict or None."""
+    tiles = dict(tiles)
+    while bytes_fn(**tiles) > budget:
+        best = None
+        for dim in mins:
+            if tiles[dim] // 2 < mins[dim]:
+                continue
+            cand = dict(tiles)
+            cand[dim] //= 2
+            got = bytes_fn(**cand)
+            if best is None or got < best[0]:
+                best = (got, dim)
+        if best is None:
+            return None
+        tiles[best[1]] //= 2
+    return tiles
+
+
+def _fit_fused(k: int, r: int, bm: int, bn: int, bk: int, br: int,
+               rotate: bool, budget: int):
+    """Feasible (bm, bn, bk, br, variant) for the fused kernel under
+    ``budget``, shrinking tiles as needed; None when nothing fits.  The
+    resident prologue is preferred (one x read); the streamed variant
+    (rotate=False only) trades an extra x read for dropping the f32 row
+    slab."""
+    mins = dict(bk=min(bk, 128), br=min(br, 128), bn=min(bn, 128),
+                bm=min(bm, 8))
+    variants = ("resident",) if rotate else ("resident", "streamed")
+    for variant in variants:
+        def bytes_fn(bm, bn, bk, br, _res=(variant == "resident")):
+            return _fused_vmem_bytes(k, r, bm, bn, bk, br, _res)
+        fit = _shrink_to_fit(bytes_fn, dict(bm=bm, bn=bn, bk=bk, br=br),
+                             mins, budget)
+        if fit is not None:
+            return Plan("fused", fit["bm"], fit["bn"], fit["bk"], fit["br"],
+                        variant)
+    return None
+
+
+def _fit_chained(k: int, r: int, bm: int, bn: int, bk: int, br: int,
+                 rotate: bool, budget: int):
+    """Feasible chained-path plan under the prologue budget, or None."""
+    mins = dict(bk=min(bk, 128), br=min(br, 128), bm=min(bm, 8))
+
+    def bytes_fn(bm, bk, br):
+        return _prologue_vmem_bytes(k, r, bm, bk, br, rotate)
+
+    fit = _shrink_to_fit(bytes_fn, dict(bm=bm, bk=bk, br=br), mins, budget)
+    if fit is None:
+        return None
+    return Plan("chained", fit["bm"], bn, fit["bk"], fit["br"], None)
+
+
+def fused_variant(k: int, r: int, bm: int, bn: int, bk: int, br: int,
+                  rotate: bool) -> str:
+    """Prologue variant for FORCED-fused execution at fixed tiles: resident
+    when it fits the budget (or rotation requires it), else streamed."""
+    if rotate:
+        return "resident"
+    if _fused_vmem_bytes(k, r, bm, bn, bk, br, True) <= fused_vmem_budget():
+        return "resident"
+    return "streamed"
+
+
+def resolve_plan(m: int, k: int, n: int, r: int = 0, rotate: bool = False,
+                 regime: str = None) -> Plan:
+    """The executable plan for a (M, K, N, R) problem: the block-table plan
+    with per-slab VMEM feasibility applied — tiles shrink to fit the budget
+    first; the path demotes (fused → chained → unfused) only when no tiling
+    fits."""
+    path, bm, bn, bk, br = select_plan(m, k, n, r, regime=regime)
+    if path == "fused":
+        plan = _fit_fused(k, r, bm, bn, bk, br, rotate, fused_vmem_budget())
+        if plan is not None:
+            return plan
+        path = "chained"
+    if path == "chained":
+        plan = _fit_chained(k, r, bm, bn, bk, br, rotate,
+                            prologue_vmem_budget())
+        if plan is not None:
+            return plan
+    return Plan("unfused", bm, bn, bk, br, None)
 
 
 # ---------------------------------------------------------------------------
@@ -199,9 +416,11 @@ def fwht(x: jnp.ndarray, bm: int = 256):
 
 
 def fused_prologue(x: jnp.ndarray, v, spec: QuantSpec,
-                   rotate: bool = False, bm: int = 128):
+                   rotate: bool = False, bm: int = 128,
+                   bk: int = None, br: int = None):
     """Single-HBM-pass activation prologue: optional WHT rotation, per-token
     quantization, and the (x·V) projection, from one row-tile read of x.
+    V streams in (bk, br) tiles — it is never whole in VMEM.
 
     x: (M, K); v: (K, R) or None.  Returns (xq, sx, xv-or-None)."""
     assert spec.group_size is None, "kernel path: per-token scales only"
@@ -209,7 +428,7 @@ def fused_prologue(x: jnp.ndarray, v, spec: QuantSpec,
     q, s, xv = fused_prologue_kernel(
         xp, None if v is None else jnp.asarray(v, jnp.float32),
         bits=spec.bits, clip_ratio=spec.clip_ratio, rotate=rotate, bm=bm,
-        interpret=_interpret(),
+        bk=bk, br=br, interpret=_interpret(),
     )
     return q[:m], s[:m], None if xv is None else xv[:m]
 
@@ -219,10 +438,10 @@ def fused_prologue(x: jnp.ndarray, v, spec: QuantSpec,
 # ---------------------------------------------------------------------------
 
 
-def _pad_gemm_operands(xq, sx, wpacked, w_scale, u, xv, bm, bn, bk):
+def _pad_gemm_operands(xq, sx, wpacked, w_scale, u, xv, bm, bn, bk, br):
     """Zero-pad every GEMM operand to its block multiple.  Zero weight
-    nibbles/scales/U-rows contribute nothing, so padded K/N columns are exact;
-    padded M rows are sliced off the output."""
+    nibbles/scales/U-rows contribute nothing, so padded K/N/R columns are
+    exact; padded M rows are sliced off the output."""
     xqp, _ = _pad_to(xq, bm, 0)
     xqp, _ = _pad_to(xqp, bk, 1)
     sxp, _ = _pad_to(sx, bm, 0)
@@ -231,26 +450,33 @@ def _pad_gemm_operands(xq, sx, wpacked, w_scale, u, xv, bm, bn, bk):
     sw, _ = _pad_to(w_scale.reshape(1, -1), bn, 1)
     if u is not None:
         u, _ = _pad_to(jnp.asarray(u, jnp.float32), bn, 0)
+        u, _ = _pad_to(u, br, 1)  # R-tile multiple: same epilogue dot shape
         xv, _ = _pad_to(xv, bm, 0)
+        xv, _ = _pad_to(xv, br, 1)
     return xqp, sxp, wp, sw, u, xv
 
 
-def _project_tiles(xr, v, bm: int):
-    """(x·V) for the unfused fallback, computed per (bm, K) row tile with the
-    exact dot the in-kernel prologue issues — keeps the three paths bitwise
-    identical (a single whole-M dot may schedule its K reduction differently
-    from the kernels' per-tile dots)."""
+def _project_tiles(xr, v, bm: int, bk: int, br: int):
+    """(x·V) for the unfused fallback, computed per (bm, K) row tile with
+    EXACTLY the K-chunked/R-tiled accumulation the kernels issue
+    (rowops.project_rows_tiled) — keeps the three paths bitwise identical.
+    Returns the (M, r_pad) projection (padded R columns are exact zeros)."""
+    k = xr.shape[1]
+    k_pad = k + (-k) % bk
+    r = v.shape[1]
+    r_pad = r + (-r) % br
+    xrp = jnp.pad(xr.astype(jnp.float32), ((0, 0), (0, k_pad - k)))
+    vp = jnp.pad(jnp.asarray(v, jnp.float32),
+                 ((0, k_pad - k), (0, r_pad - r)))
     tiles = [
-        jax.lax.dot_general(
-            xr[t:t + bm].astype(jnp.float32), v,
-            (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32,
-        )
+        project_rows_tiled(xrp[t:t + bm], vp, bk, br)
         for t in range(0, xr.shape[0], bm)
     ]
     return tiles[0] if len(tiles) == 1 else jnp.concatenate(tiles, axis=0)
 
 
-def _forward_fused(xp, wpacked, w_scale, u, v, act_spec, rotate, bm, bn, bk):
+def _forward_fused(xp, wpacked, w_scale, u, v, act_spec, rotate,
+                   bm, bn, bk, br, variant):
     """Single-kernel path: pad the weight-side operands, hand the UNPADDED-K
     activations to kernels/fused_gemm.py (the in-kernel prologue must not see
     pad columns), emit the output straight from the one pallas call."""
@@ -264,7 +490,7 @@ def _forward_fused(xp, wpacked, w_scale, u, v, act_spec, rotate, bm, bn, bk):
     return fused_w4a4_lrc_kernel(
         xp, v, wp, sw, up,
         bits=act_spec.bits, clip_ratio=act_spec.clip_ratio, rotate=rotate,
-        bm=bm, bn=bn, bk=bk, interpret=_interpret(),
+        bm=bm, bn=bn, bk=bk, br=br, variant=variant, interpret=_interpret(),
     )
 
 
@@ -276,45 +502,47 @@ def w4a4_lrc_forward(
     v,  # (K, R) or None
     act_spec: QuantSpec,
     rotate: bool = False,
-    blocks=None,  # optional (bm, bn, bk) override; default: autotune table
+    blocks=None,  # optional (bm, bn, bk[, br]) override; default: plan table
     impl: str = "auto",  # auto | fused | chained | unfused
 ):
     """The full W4A4+LRC serving hot path.
 
-    ``impl="auto"`` follows the block-table plan with VMEM-feasibility
-    demotion: single-kernel fused (xq never touches HBM) when the working
-    set fits, else the two-kernel prologue → GEMM chain, else (V past the
-    prologue budget) the unfused three-pass chain.  Explicit ``impl`` values
-    force a path — "fused"/"chained" trust the caller on VMEM fit.
+    ``impl="auto"`` follows the block-table plan with per-slab VMEM
+    feasibility (:func:`resolve_plan`): the K-split fused kernel's tiles
+    shrink to fit the budget before the path ever demotes, so fused serves
+    every regime and rank unless nothing fits; then the two-kernel
+    prologue → GEMM chain (V streamed); then the unfused three-pass chain.
+    Explicit ``impl`` values force a path — "fused"/"chained" trust the
+    caller on VMEM fit.
 
     ``rotate`` applies the online Walsh-Hadamard rotation (K power of two)
     inside the prologue.  All operands are zero-padded to block multiples, so
     arbitrary M/K/N (odd MLP widths included) take the pallas path.  The
     three paths are bitwise identical in interpret mode (shared row bodies,
-    exact integer accumulation).
+    shared K-chunk/R-tile accumulation order, exact integer accumulation).
     """
     m0, k = x.shape
     n = wpacked.shape[1]
     r = 0 if v is None else v.shape[-1]
-    path, bm, bn, bk = select_plan(m0, k, n, r)
-    if blocks is not None:
-        bm, bn, bk = blocks
 
-    if impl != "auto":
-        if impl not in _KERNEL_PATHS:
-            raise ValueError(f"unknown impl {impl!r}; "
-                             f"expected auto or one of {_KERNEL_PATHS}")
-        path = impl
+    variant = None
+    if impl == "auto":
+        path, bm, bn, bk, br, variant = resolve_plan(m0, k, n, r,
+                                                     rotate=rotate)
+    elif impl not in _KERNEL_PATHS:
+        raise ValueError(f"unknown impl {impl!r}; "
+                         f"expected auto or one of {_KERNEL_PATHS}")
     else:
-        v_fits = r == 0 or (k * r * 4) <= _PROLOGUE_V_BYTES_MAX
-        k_pad = k + (-k) % bk
-        if path == "fused" and not (
-                v_fits
-                and _fused_vmem_bytes(bm, k, k_pad, bn, r)
-                <= _FUSED_VMEM_BYTES_MAX):
-            path = "chained"
-        if path == "chained" and not v_fits:
-            path = "unfused"
+        path = impl
+        _, bm, bn, bk, br = select_plan(m0, k, n, r)
+    if blocks is not None:
+        bm, bn, bk = blocks[:3]
+        if len(blocks) > 3:
+            br = blocks[3]
+        br = min(br, _round_pow2(max(r, 8)))
+        variant = None
+    if path == "fused" and variant is None:
+        variant = fused_variant(k, r, bm, bn, bk, br, rotate)
 
     if rotate:
         assert k & (k - 1) == 0, \
@@ -326,22 +554,23 @@ def w4a4_lrc_forward(
 
     if path == "fused":
         out = _forward_fused(xp, wpacked, w_scale, u if r else None,
-                             v if r else None, act_spec, rotate, bm, bn, bk)
+                             v if r else None, act_spec, rotate,
+                             bm, bn, bk, br, variant)
         return out[:m0, :n]
 
     if path == "chained":
         xq, sx, xv = fused_prologue_kernel(
             xp, jnp.asarray(v, jnp.float32) if r else None,
             bits=act_spec.bits, clip_ratio=act_spec.clip_ratio,
-            rotate=rotate, bm=bm, interpret=_interpret(),
+            rotate=rotate, bm=bm, bk=bk, br=br, interpret=_interpret(),
         )
-    else:  # unfused: three activation passes (V too large for VMEM residency)
+    else:  # unfused: three activation passes over the row tiles
         xr = fwht(xp, bm=bm) if rotate else xp
         xq, sx = act_quant(xr, act_spec, bm=bm)
-        xv = _project_tiles(xr, jnp.asarray(v, jnp.float32), bm) if r else None
+        xv = _project_tiles(xr, v, bm, bk, br) if r else None
 
     xqp, sxp, wp, sw, up, xvp = _pad_gemm_operands(
-        xq, sx, wpacked, w_scale, u if r else None, xv, bm, bn, bk)
+        xq, sx, wpacked, w_scale, u if r else None, xv, bm, bn, bk, br)
     out = w4a4_lowrank_matmul_kernel(
         xqp, sxp, wp, sw, xvp, up,
         bm=bm, bn=bn, bk=bk, interpret=_interpret(),
@@ -366,7 +595,7 @@ def w4a4_lowrank_matmul(
         m0, k = x.shape
         n = wpacked.shape[1]
         r = 0 if v is None else v.shape[-1]
-        dbm, dbn, dbk = select_blocks(m0, k, n, r)
+        dbm, dbn, dbk, _ = select_blocks(m0, k, n, r)
         blocks = (bm or dbm, bn or dbn, bk or dbk)
     return w4a4_lrc_forward(x, wpacked, w_scale, u, v, act_spec, blocks=blocks)
 

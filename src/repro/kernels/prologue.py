@@ -15,13 +15,24 @@ three on a row tile of ``x`` held in VMEM: the grid walks M tiles once, each
 tile is read from HBM a single time, and ``xq``/``sx``/``xv`` are emitted
 directly — no rotated-x or float intermediate ever returns to HBM.
 
-Semantics are bit-identical to the three-pass reference chain
-(`hadamard.fwht_kernel` → `actquant.act_quant_kernel` → ``x_rot @ V``) for
-float32 inputs: the butterfly, the amax guard, and the scale-then-round all
-reuse the same operation order.
+V streaming (K-chunked, R-tiled)
+--------------------------------
 
-V is kept whole in VMEM (R ≪ K); the ops-layer wrapper falls back to the
-unfused path when (K, R) would not fit.
+V is NOT held whole in VMEM: the grid is (M-tile, K-chunk, R-tile) and V
+arrives in (bk, br) tiles, so the resident V footprint is one tile instead
+of the full K×R×4 bytes — the 8 MB ceiling that used to demote rank ≥ 1024
+at large K to the unfused path is gone.  ``xv`` accumulates directly in its
+(bm, r_pad) output block (revisited across the K/R steps of one M tile) via
+the canonical ``rowops.project_chunk_rows`` partials in ascending-K order —
+the SAME dots in the SAME order the single-kernel fused path and the
+unfused ``project_rows_tiled`` issue, which is what keeps all three paths
+bitwise identical.  ``xq``/``sx`` are computed whole-row on the first
+(K-chunk 0, R-tile 0) visit — the x row slab is VMEM-resident anyway.
+
+Semantics are bit-identical to the three-pass reference chain
+(`hadamard.fwht_kernel` → `actquant.act_quant_kernel` → tiled ``x_rot @ V``)
+for float32 inputs: the butterfly, the amax guard, and the scale-then-round
+all reuse the same rowops bodies.
 """
 
 from __future__ import annotations
@@ -33,16 +44,36 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.rowops import prologue_rows
+from repro.kernels.rowops import (
+    default_proj_tiles,
+    fwht_rows,
+    project_chunk_rows,
+    prologue_rows,
+    scale_round_quantize,
+)
 
 
-def _kernel_lr(x_ref, v_ref, q_ref, s_ref, xv_ref, *,
-               qmax: int, clip_ratio: float, rotate: bool, d: int):
-    q, s, xv = prologue_rows(x_ref[...].astype(jnp.float32), v_ref[...],
-                             qmax, clip_ratio, rotate, d)
-    q_ref[...] = q
-    s_ref[...] = s
-    xv_ref[...] = xv
+def _kernel_lr(x_ref, v_ref, q_ref, s_ref, xv_ref, rot_ref, *,
+               qmax: int, clip_ratio: float, rotate: bool,
+               k: int, bk: int, br: int):
+    kk = pl.program_id(1)
+    rr = pl.program_id(2)
+
+    @pl.when((kk == 0) & (rr == 0))
+    def _quantize():
+        row = x_ref[...].astype(jnp.float32)
+        if rotate:
+            row = fwht_rows(row, k)
+            rot_ref[...] = row
+        q, s = scale_round_quantize(row, qmax, clip_ratio)
+        q_ref[...] = q
+        s_ref[...] = s
+
+    src = rot_ref if rotate else x_ref
+    chunk = src[:, pl.ds(kk * bk, bk)].astype(jnp.float32)
+    part = project_chunk_rows(chunk, v_ref[...])
+    prev = xv_ref[:, pl.ds(rr * br, br)]
+    xv_ref[:, pl.ds(rr * br, br)] = jnp.where(kk == 0, part, prev + part)
 
 
 def _kernel_nolr(x_ref, q_ref, s_ref, *,
@@ -55,7 +86,8 @@ def _kernel_nolr(x_ref, q_ref, s_ref, *,
 
 @functools.partial(
     jax.jit,
-    static_argnames=("bits", "clip_ratio", "rotate", "bm", "interpret"),
+    static_argnames=("bits", "clip_ratio", "rotate", "bm", "bk", "br",
+                     "interpret"),
 )
 def fused_prologue_kernel(
     x: jnp.ndarray,  # (M, K)
@@ -64,23 +96,26 @@ def fused_prologue_kernel(
     clip_ratio: float = 1.0,
     rotate: bool = False,
     bm: int = 128,
+    bk: int = None,  # V-stream K-chunk (defaults per default_proj_tiles)
+    br: int = None,  # V-stream R-tile
     interpret: bool = True,
 ):
     """One grid pass over row tiles: returns (xq int8, sx (M,1) f32[, xv f32]).
 
     ``rotate`` applies the normalized WHT over K (requires K a power of two)
     before quantization and projection, matching fwht_kernel → act_quant_kernel
-    → x_rot @ V run back-to-back.
+    → the tiled x_rot @ V run back-to-back.  With a low-rank V the grid is
+    (M-tile, K-chunk, R-tile) and V streams in (bk, br) tiles — it is never
+    whole in VMEM.
     """
     m, k = x.shape
     assert m % bm == 0, (m, bm)
     if rotate:
         assert k & (k - 1) == 0, f"online rotation needs power-of-two K, got {k}"
     qmax = 2 ** (bits - 1) - 1
-    grid = (m // bm,)
-    semantics = pltpu.TPUCompilerParams(dimension_semantics=("parallel",))
 
     if v is None:
+        grid = (m // bm,)
         q, s = pl.pallas_call(
             functools.partial(_kernel_nolr, qmax=qmax, clip_ratio=clip_ratio,
                               rotate=rotate, d=k),
@@ -94,31 +129,59 @@ def fused_prologue_kernel(
                 jax.ShapeDtypeStruct((m, k), jnp.int8),
                 jax.ShapeDtypeStruct((m, 1), jnp.float32),
             ],
-            compiler_params=semantics,
+            compiler_params=pltpu.TPUCompilerParams(
+                dimension_semantics=("parallel",)),
             interpret=interpret,
         )(x)
         return q, s, None
 
     r = v.shape[1]
+    bk, br = default_proj_tiles(k, r, bk, br)
+    k_pad = k + (-k) % bk
+    r_pad = r + (-r) % br
+    if rotate:
+        assert k_pad == k, (k, bk)  # pow2 K, pow2 bk ≤ K always divides
+    if k_pad > k:
+        x = jnp.pad(x, ((0, 0), (0, k_pad - k)))
+    vp = jnp.asarray(v, jnp.float32)
+    if (k_pad > k) or (r_pad > r):
+        vp = jnp.pad(vp, ((0, k_pad - k), (0, r_pad - r)))
+
+    grid = (m // bm, k_pad // bk, r_pad // br)
+    scratch = []
+    if rotate:
+        scratch.append(pltpu.VMEM((bm, k_pad), jnp.float32))  # rotated row
+
+    def kernel(x_ref, v_ref, q_ref, s_ref, xv_ref, *rest):
+        rot_ref = rest[0] if rotate else None
+        _kernel_lr(x_ref, v_ref, q_ref, s_ref, xv_ref, rot_ref,
+                   qmax=qmax, clip_ratio=clip_ratio, rotate=rotate,
+                   k=k, bk=bk, br=br)
+
     q, s, xv = pl.pallas_call(
-        functools.partial(_kernel_lr, qmax=qmax, clip_ratio=clip_ratio,
-                          rotate=rotate, d=k),
+        kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((bm, k), lambda i: (i, 0)),  # x row tile
-            pl.BlockSpec((k, r), lambda i: (0, 0)),  # V, whole, reused per tile
+            # x row slab: same block for every (kk, rr) visit of one M tile
+            pl.BlockSpec((bm, k_pad), lambda i, kk, rr: (i, 0)),
+            pl.BlockSpec((bk, br), lambda i, kk, rr: (kk, rr)),  # V tile
         ],
         out_specs=[
-            pl.BlockSpec((bm, k), lambda i: (i, 0)),
-            pl.BlockSpec((bm, 1), lambda i: (i, 0)),
-            pl.BlockSpec((bm, r), lambda i: (i, 0)),
+            pl.BlockSpec((bm, k_pad), lambda i, kk, rr: (i, 0)),
+            pl.BlockSpec((bm, 1), lambda i, kk, rr: (i, 0)),
+            # xv doubles as the accumulator: revisited across (kk, rr)
+            pl.BlockSpec((bm, r_pad), lambda i, kk, rr: (i, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((m, k), jnp.int8),
+            jax.ShapeDtypeStruct((m, k_pad), jnp.int8),
             jax.ShapeDtypeStruct((m, 1), jnp.float32),
-            jax.ShapeDtypeStruct((m, r), jnp.float32),
+            jax.ShapeDtypeStruct((m, r_pad), jnp.float32),
         ],
-        compiler_params=semantics,
+        scratch_shapes=scratch,
+        # M tiles are independent; the (kk, rr) visits of one M tile share
+        # the xv block residency and must stay sequential.
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary")),
         interpret=interpret,
-    )(x, v)
-    return q, s, xv
+    )(x, vp)
+    return q[:, :k], s, xv[:, :r]

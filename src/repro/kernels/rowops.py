@@ -5,14 +5,56 @@ The bitwise-parity contract between the single-kernel fused forward
 standalone hadamard / actquant kernels (tests/test_kernels_prologue.py and
 tests/test_kernels_fused.py acceptance) holds because all of them import
 THESE implementations — the butterfly order, the scale-then-round operation
-order, the prologue body and the int4 nibble layout live in exactly one
-place.
+order, the prologue body, the K-chunked/R-tiled projection accumulation and
+the int4 nibble layout live in exactly one place.
+
+K-split slab bodies
+-------------------
+
+The K-split fused grid streams the activation row in (bm, bk) slabs, so the
+whole-row bodies decompose into slab-shaped pieces with EXACTLY the same
+float ops:
+
+  * ``fwht_rows(x, d)`` ==(bitwise)== ``fwht_cross_rows`` applied to the
+    concatenation of per-chunk ``fwht_intra_rows``: butterflies at distance
+    h < bk never cross a bk-aligned chunk boundary, so the first log2(bk)
+    sweeps run per chunk; the remaining sweeps pair whole chunks; the
+    1/sqrt(d) normalization happens once at the end in both spellings.
+  * per-token amax is a max-reduction — chunk-wise ``jnp.maximum`` folding
+    is exactly the whole-row max (max is exact on floats).
+  * ``q = clip(round(x/s))`` is elementwise — chunk-wise application with
+    the whole-row scale is the whole-row quantization.
+  * the (x·V) projection is canonically a (bk, br)-tiled accumulation
+    (``project_rows_tiled`` / per-chunk ``project_chunk_rows`` summed in
+    ascending-K order) — all three kernel paths issue these same dots in
+    this same order, which is what keeps them bitwise identical.
 """
 
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+
+def round_pow2(m: int) -> int:
+    """Largest power of two ≤ max(m, 8) (block-size clamp helper)."""
+    p = 8
+    while p * 2 <= m:
+        p *= 2
+    return p
+
+
+def default_proj_tiles(k: int, r: int, bk=None, br=None):
+    """Default (bk, br) projection tiles: 512-capped powers of two clamped
+    to the problem.  THE one spelling of the default — the prologue and
+    fused kernels and the ops-layer plan table all derive their fallback
+    tiles from here, so direct kernel callers and the dispatched paths
+    agree on the (bk, br) accumulation order the bitwise contract needs."""
+    if bk is None:
+        bk = min(512, round_pow2(max(k, 8)))
+    if br is None:
+        br = min(512, round_pow2(max(r, 8)))
+    return bk, br
 
 
 def fwht_rows(y: jnp.ndarray, d: int) -> jnp.ndarray:
@@ -29,15 +71,97 @@ def fwht_rows(y: jnp.ndarray, d: int) -> jnp.ndarray:
     return y.reshape(bm, d) * (1.0 / (d**0.5))
 
 
-def scale_round_quantize(x: jnp.ndarray, qmax: int, clip_ratio: float):
-    """Paper §2 scale-then-round on the symmetric int grid: per-token amax
-    (zero-guarded) → s = c·amax/qmax → q = clip(round(x/s)).
-    Returns (q int8, s f32 (bm, 1))."""
-    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+def fwht_intra_rows(y: jnp.ndarray, bk: int) -> jnp.ndarray:
+    """UNNORMALIZED butterfly sweeps h = 1..bk/2 on one (bm, bk) K-chunk.
+
+    These are exactly the first log2(bk) sweeps of the whole-row transform:
+    for h < bk a butterfly pairs elements i and i+h, which live in the same
+    bk-aligned chunk, so the sweeps run chunk-local with the identical
+    (a+b, a-b) operand pairing."""
+    bm = y.shape[0]
+    h = 1
+    while h < bk:
+        y = y.reshape(bm, bk // (2 * h), 2, h)
+        a = y[:, :, 0, :]
+        b = y[:, :, 1, :]
+        y = jnp.stack([a + b, a - b], axis=2)
+        h *= 2
+    return y.reshape(bm, bk)
+
+
+def fwht_cross_rows(y: jnp.ndarray, d: int, bk: int) -> jnp.ndarray:
+    """Butterfly sweeps h = bk..d/2 across bk-chunks + the 1/sqrt(d)
+    normalization, on a (bm, d) row whose chunks already went through
+    :func:`fwht_intra_rows`.  ``fwht_cross_rows(intra-chunks) `` is bitwise
+    equal to ``fwht_rows`` on the raw row (same scalar pairings, same op
+    order, one trailing normalization multiply in both)."""
+    bm = y.shape[0]
+    n_c = d // bk
+    z = y.reshape(bm, n_c, bk)
+    g = 1
+    while g < n_c:
+        z = z.reshape(bm, n_c // (2 * g), 2, g, bk)
+        a = z[:, :, 0]
+        b = z[:, :, 1]
+        z = jnp.stack([a + b, a - b], axis=2)
+        g *= 2
+    return z.reshape(bm, d) * (1.0 / (d**0.5))
+
+
+def row_amax(x: jnp.ndarray) -> jnp.ndarray:
+    """Per-token |x| max of a (bm, d) tile -> (bm, 1).  Chunk-wise folding
+    with jnp.maximum reproduces the whole-row value exactly."""
+    return jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+
+
+def amax_to_scale(amax: jnp.ndarray, qmax: int, clip_ratio: float):
+    """Paper §2 scale: zero-guarded amax → s = c·amax/qmax."""
     amax = jnp.where(amax <= 0.0, 1.0, amax)
-    s = clip_ratio * amax / qmax
-    q = jnp.clip(jnp.round(x / s), -qmax - 1, qmax)
-    return q.astype(jnp.int8), s
+    return clip_ratio * amax / qmax
+
+
+def quantize_rows(x: jnp.ndarray, s: jnp.ndarray, qmax: int) -> jnp.ndarray:
+    """Elementwise q = clip(round(x/s)) on the symmetric int grid — safe to
+    apply per K-chunk once the whole-row scale is known."""
+    return jnp.clip(jnp.round(x / s), -qmax - 1, qmax).astype(jnp.int8)
+
+
+def scale_round_quantize(x: jnp.ndarray, qmax: int, clip_ratio: float):
+    """Whole-row amax → scale → round (the composition of the slab bodies).
+    Returns (q int8, s f32 (bm, 1))."""
+    s = amax_to_scale(row_amax(x), qmax, clip_ratio)
+    return quantize_rows(x, s, qmax), s
+
+
+def project_chunk_rows(x_chunk: jnp.ndarray, v_tile: jnp.ndarray):
+    """ONE (bm, bk) × (bk, br) projection partial — the canonical dot every
+    path issues per (K-chunk, R-tile).  f32 in, f32 out."""
+    return jax.lax.dot_general(
+        x_chunk, v_tile.astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def project_rows_tiled(x: jnp.ndarray, v: jnp.ndarray, bk: int, br: int):
+    """The canonical K-chunked, R-tiled (x·V): per R-tile, sum the per-chunk
+    dots in ascending-K order.  x: (bm, k_pad) f32, v: (k_pad, r_pad); both
+    padded to the tile multiples.  This is the jnp spelling of the exact
+    accumulation the kernels perform across grid steps (the unfused path
+    runs THIS; the prologue/fused kernels accumulate the same
+    ``project_chunk_rows`` partials in the same order)."""
+    k_pad = x.shape[1]
+    r_pad = v.shape[1]
+    assert k_pad % bk == 0 and r_pad % br == 0, (k_pad, r_pad, bk, br)
+    cols = []
+    for rr in range(r_pad // br):
+        acc = None
+        for kk in range(k_pad // bk):
+            part = project_chunk_rows(
+                x[:, kk * bk:(kk + 1) * bk],
+                v[kk * bk:(kk + 1) * bk, rr * br:(rr + 1) * br])
+            acc = part if acc is None else acc + part
+        cols.append(acc)
+    return cols[0] if len(cols) == 1 else jnp.concatenate(cols, axis=1)
 
 
 def prologue_rows(x, v, qmax: int, clip_ratio: float, rotate: bool, d: int):

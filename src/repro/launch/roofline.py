@@ -190,14 +190,21 @@ def prologue_activation_bytes(m: int, k: int, r: int = 0, *,
     path="chained" — kernels/prologue.py → kernels/w4a4.py: ONE read of x
     emits xq/sx/xv (the rotated copy never exists in HBM), but the GEMM
     kernel still reads the M×K xq (+ sx/xv) back — one full round-trip.
-    path="fused"   — kernels/fused_gemm.py single kernel: ONE read of x;
-    xq/sx/xv live and die in VMEM scratch.  The chained→fused delta is
-    exactly the eliminated M×K write+read (plus the sx/xv round-trip).
+    path="fused"   — kernels/fused_gemm.py single kernel, resident-prologue
+    variant: ONE read of x; xq/sx/xv live and die in VMEM scratch.  The
+    chained→fused delta is exactly the eliminated M×K write+read (plus the
+    sx/xv round-trip).
+    path="fused_stream" — the same single kernel with the streamed prologue
+    (no f32 row slab in VMEM; rotate=False only): the prologue sweep reads
+    the x chunks once for the amax fold and the first GEMM visit re-streams
+    them — TWO reads of x, still strictly below chained (the xq/sx/xv
+    round-trip never happens).
 
     ``fused`` is the legacy boolean spelling (True ≡ "chained", the PR 1
     fusion; False ≡ "unfused").  Weight-side bytes (V itself, the packed W)
     are identical in all layouts and excluded — this isolates exactly the
-    traffic fusion removes.
+    traffic fusion removes; K-chunk V re-reads live in the latency model
+    (benchmarks/latency_kernels._roofline_time).
     """
     if path is None:
         path = "chained" if fused else "unfused"
@@ -205,11 +212,13 @@ def prologue_activation_bytes(m: int, k: int, r: int = 0, *,
     out = m * k + 4 * m + (4 * m * r if r else 0)  # xq + sx (+ xv f32)
     if path == "fused":
         return a  # single kernel: x in, everything else VMEM-resident
+    if path == "fused_stream":
+        return 2 * a  # amax sweep + quantize/project re-stream of x
     if path == "chained":
         return a + 2 * out  # prologue writes xq/sx/xv; the GEMM reads them
     if path != "unfused":
         raise ValueError(f"unknown path {path!r}; "
-                         "expected fused | chained | unfused")
+                         "expected fused | fused_stream | chained | unfused")
     total = a + 2 * out  # quantizer pass + GEMM-side re-read
     if rotate:
         total += 2 * a  # WHT pass: read x, write the rotated copy to HBM

@@ -27,7 +27,14 @@ def main():
                     help="path to measured autotune winners "
                          "(results/block_table.json from "
                          "benchmarks/autotune_blocks.py) to overlay on the "
-                         "analytic kernel plan table")
+                         "analytic kernel plan table; may carry a 'vmem' "
+                         "entry overriding the VMEM budgets")
+    ap.add_argument("--vmem-budget", type=int, default=None,
+                    help="override the kernel VMEM working-set budgets "
+                         "(bytes) used by plan resolution — both the fused "
+                         "single-kernel budget and the chained prologue "
+                         "budget; applied after --block-table, so the CLI "
+                         "wins.  Use to probe real-TPU ceilings.")
     args = ap.parse_args()
 
     import jax
@@ -37,11 +44,16 @@ def main():
     from repro.models.config import reduced as reduce_cfg
     from repro.serve.engine import Request, ServeEngine
 
-    if args.block_table:
+    if args.block_table or args.vmem_budget is not None:
         from repro.kernels import ops
 
-        ops.load_block_table(args.block_table)
-        print(f"loaded kernel plan table from {args.block_table}")
+        if args.block_table:
+            ops.load_block_table(args.block_table)
+            print(f"loaded kernel plan table from {args.block_table}")
+        if args.vmem_budget is not None:
+            ops.set_vmem_budgets(fused=args.vmem_budget,
+                                 prologue=args.vmem_budget)
+            print(f"kernel VMEM budgets set to {args.vmem_budget} bytes")
 
     cfg = get_config(args.arch)
     if args.reduced:

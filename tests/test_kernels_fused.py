@@ -72,17 +72,37 @@ def test_fused_kernel_direct_block_aligned(rng):
                                rtol=1e-4, atol=1e-4)
 
 
-def test_fused_block_shape_invariance(rng):
-    """Integer accumulation is exact under any K split, so every tiling of
-    the fused kernel produces the same bits as the chain."""
-    m, k, n, r = 24, 128, 64, 8
-    spec, x, wp, s, u, v = _problem(rng, m, k, n, r)
+def test_fused_block_shape_invariance_rank0(rng):
+    """Integer accumulation is exact under any K split, so at rank 0 every
+    tiling of the fused kernel produces the same bits as the chain."""
+    m, k, n = 24, 128, 64
+    spec, x, wp, s, u, v = _problem(rng, m, k, n, 0)
     want = np.asarray(ops.w4a4_lrc_forward(x, wp, s, u, v, spec,
                                            impl="chained"))
     for blocks in [(8, 16, 32), (8, 64, 64), (16, 32, 128)]:
         got = np.asarray(ops.w4a4_lrc_forward(x, wp, s, u, v, spec,
                                               blocks=blocks, impl="fused"))
         np.testing.assert_array_equal(got, want)
+
+
+def test_fused_block_shape_parity_lowrank(rng):
+    """With a low-rank term the (bk, br)-chunked xv accumulation is part of
+    the canonical math, so bits are identical ACROSS PATHS at one tiling
+    (every tiling still agrees within f32 reassociation noise)."""
+    m, k, n, r = 24, 128, 64, 8
+    spec, x, wp, s, u, v = _problem(rng, m, k, n, r)
+    ref_out = None
+    for blocks in [(8, 16, 32, 8), (8, 64, 64, 8), (16, 32, 128, 8)]:
+        outs = [np.asarray(ops.w4a4_lrc_forward(x, wp, s, u, v, spec,
+                                                blocks=blocks, impl=impl))
+                for impl in ("fused", "chained", "unfused")]
+        np.testing.assert_array_equal(outs[0], outs[1])
+        np.testing.assert_array_equal(outs[0], outs[2])
+        if ref_out is None:
+            ref_out = outs[0]
+        else:
+            np.testing.assert_allclose(outs[0], ref_out,
+                                       rtol=1e-4, atol=1e-4)
 
 
 # ---------------------------------------------------------------------------
@@ -138,8 +158,9 @@ def test_select_plan_paths():
     assert path == "fused" and bm <= 16
     path2, *_ = ops.select_plan(256, 4096, 11008, 128)      # mixed
     assert path2 == "fused"
-    path3, *_ = ops.select_plan(2048, 4096, 11008, 128)     # prefill
-    assert path3 == "chained"
+    # prefill flipped to the single-kernel path with the K-split grid
+    path3, *_ = ops.select_plan(2048, 4096, 11008, 128)
+    assert path3 == "fused"
 
 
 def test_select_blocks_unknown_regime_raises():
@@ -154,13 +175,15 @@ def test_select_blocks_unknown_regime_raises():
 
 
 def test_load_block_table_roundtrip(tmp_path):
+    # no "br": pre-K-split tables stay loadable (br falls back to default)
     table = {"decode": {"path": "chained", "bm": 8, "bn": 128, "bk": 128,
                         "score_us": 1.0}}
     p = tmp_path / "block_table.json"
     p.write_text(json.dumps(table))
     ops.load_block_table(p)
-    path, bm, bn, bk = ops.select_plan(16, 4096, 11008, 128)
+    path, bm, bn, bk, br = ops.select_plan(16, 4096, 11008, 128)
     assert (path, bm, bn, bk) == ("chained", 8, 128, 128)
+    assert br == 128  # default 512 clamped to the rank's pow2
     # unlisted regimes keep the analytic defaults
     assert ops.select_plan(256, 4096, 11008, 128)[0] == "fused"
     ops.reset_block_table()

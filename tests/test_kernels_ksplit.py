@@ -1,0 +1,354 @@
+"""K-split, R-tiled fused grid (PR 3): the slab-shaped row bodies, the
+per-slab VMEM feasibility model (shrink-to-fit before demotion), the
+prologue-variant selection, the configurable VMEM budgets, the block-table
+validation on malformed/partial JSON, the graceful regression gate, and the
+acceptance shape — K×R×4 = 32 MB of V executing the fused path with
+bitwise cross-path parity.  All kernels run in pallas interpret mode."""
+
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from benchmarks.common import make_w4a4_problem as _problem
+from repro.kernels import ops
+from repro.kernels.fused_gemm import fused_w4a4_lrc_kernel
+from repro.kernels.rowops import (
+    fwht_cross_rows,
+    fwht_intra_rows,
+    fwht_rows,
+    project_rows_tiled,
+)
+
+
+@pytest.fixture(autouse=True)
+def _clean_block_table():
+    ops.reset_block_table()
+    yield
+    ops.reset_block_table()
+
+
+# ---------------------------------------------------------------------------
+# slab-shaped row bodies: the K-split decomposition is bitwise exact
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("d,bk", [(64, 64), (128, 32), (256, 64), (64, 8)])
+def test_fwht_intra_cross_bitwise_equals_whole_row(rng, d, bk):
+    """fwht_cross_rows ∘ per-chunk fwht_intra_rows is BITWISE the whole-row
+    transform: butterflies below bk never cross a chunk boundary, so the
+    sweep order and operand pairing are identical."""
+    x = jnp.asarray(rng.standard_normal((16, d)), jnp.float32)
+    want = np.asarray(fwht_rows(x, d))
+    chunks = [fwht_intra_rows(x[:, c * bk:(c + 1) * bk], bk)
+              for c in range(d // bk)]
+    got = np.asarray(fwht_cross_rows(jnp.concatenate(chunks, axis=1), d, bk))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_project_rows_tiled_matches_single_dot(rng):
+    """The canonical (bk, br)-tiled projection tracks the single whole-K dot
+    within f32 reassociation noise (bits legitimately differ)."""
+    x = jnp.asarray(rng.standard_normal((8, 256)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((256, 48)), jnp.float32)
+    got = np.asarray(project_rows_tiled(x, v, bk=64, br=16))
+    np.testing.assert_allclose(got, np.asarray(x @ v), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# K-split fused kernel: multi-chunk/multi-R-tile grids, prologue variants
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m,k,n,r,blocks", [
+    (16, 256, 128, 40, (16, 64, 64, 16)),   # n_k=4, n_r=3 (r_pad=48)
+    (24, 128, 96, 8, (8, 32, 32, 8)),       # ragged M, n_k=4
+    (16, 512, 64, 96, (16, 64, 128, 32)),   # n_k=4, n_r=3
+])
+@pytest.mark.parametrize("rotate", [False, True])
+def test_ksplit_cross_path_bitwise(rng, m, k, n, r, blocks, rotate):
+    """Multi-K-chunk, multi-R-tile tilings: all three paths + auto stay
+    bitwise identical (they share the chunked accumulation order)."""
+    if rotate and k & (k - 1):
+        pytest.skip("online rotation needs power-of-two K")
+    spec, x, wp, s, u, v = _problem(rng, m, k, n, r)
+    outs = {
+        impl: np.asarray(ops.w4a4_lrc_forward(x, wp, s, u, v, spec,
+                                              rotate=rotate, blocks=blocks,
+                                              impl=impl))
+        for impl in ("fused", "chained", "unfused")
+    }
+    np.testing.assert_array_equal(outs["fused"], outs["chained"])
+    np.testing.assert_array_equal(outs["fused"], outs["unfused"])
+
+
+def test_fused_prologue_variants_bitwise_identical(rng):
+    """The resident (f32 row slab) and streamed (x re-read) prologue
+    variants compute the same values chunk for chunk."""
+    m, k, n, r = 16, 256, 128, 40
+    spec, x, wp, s, u, v = _problem(rng, m, k, n, r)
+    outs = []
+    for variant in ("resident", "streamed"):
+        outs.append(np.asarray(fused_w4a4_lrc_kernel(
+            x, v, wp, s.reshape(1, -1), u, bits=4, clip_ratio=0.9,
+            rotate=False, bm=16, bn=64, bk=64, br=16, variant=variant,
+            interpret=True)))
+    np.testing.assert_array_equal(outs[0], outs[1])
+
+
+def test_fused_kernel_rejects_streamed_rotation(rng):
+    spec, x, wp, s, u, v = _problem(rng, 16, 64, 32, 8)
+    with pytest.raises(AssertionError, match="resident"):
+        fused_w4a4_lrc_kernel(x, v, wp, s.reshape(1, -1), u,
+                              rotate=True, bm=16, bn=32, bk=64, br=8,
+                              variant="streamed", interpret=True)
+
+
+# ---------------------------------------------------------------------------
+# per-slab feasibility: shrink-to-fit, variant pick, demotion ladder,
+# and the acceptance shape (no demotion at K×R×4 = 32 MB)
+# ---------------------------------------------------------------------------
+
+
+def test_resolve_plan_acceptance_shape_stays_fused():
+    """K=8192, R=1024: V alone is 32 MB — 4× the old whole-VMEM ceiling —
+    and every M regime still resolves to the fused path."""
+    assert 8192 * 1024 * 4 > ops._PROLOGUE_V_BYTES_MAX
+    for m in (16, 256, 2048):
+        plan = ops.resolve_plan(m, 8192, 256, 1024, rotate=True)
+        assert plan.path == "fused", (m, plan)
+        assert plan.variant == "resident"
+        assert ops._fused_vmem_bytes(8192, 1024, plan.bm, plan.bn, plan.bk,
+                                     plan.br, True) <= ops.fused_vmem_budget()
+
+
+def test_resolve_plan_shrinks_tiles_before_demoting(monkeypatch):
+    """A budget too small for the table tiles but big enough for smaller
+    ones keeps the fused path with shrunk tiles."""
+    full = ops.resolve_plan(2048, 8192, 11008, 1024, rotate=True)
+    assert full.path == "fused"
+    tight = ops._fused_vmem_bytes(8192, 1024, full.bm, full.bn, full.bk,
+                                  full.br, True) - 1
+    monkeypatch.setattr(ops, "_FUSED_VMEM_BYTES_MAX", tight)
+    shrunk = ops.resolve_plan(2048, 8192, 11008, 1024, rotate=True)
+    assert shrunk.path == "fused"
+    assert (shrunk.bm, shrunk.bn, shrunk.bk, shrunk.br) != \
+        (full.bm, full.bn, full.bk, full.br)
+    assert ops._fused_vmem_bytes(8192, 1024, shrunk.bm, shrunk.bn,
+                                 shrunk.bk, shrunk.br, True) <= tight
+
+
+def test_resolve_plan_streamed_variant_drops_row_slab(monkeypatch):
+    """rotate=False: when the resident f32 row slab cannot fit at any
+    tiling, the streamed variant keeps the path fused."""
+    resident_floor = ops._fused_vmem_bytes(8192, 0, 8, 128, 128, 128, True)
+    streamed_floor = ops._fused_vmem_bytes(8192, 0, 8, 128, 128, 128, False)
+    assert streamed_floor < resident_floor
+    monkeypatch.setattr(ops, "_FUSED_VMEM_BYTES_MAX", resident_floor - 1)
+    plan = ops.resolve_plan(2048, 8192, 11008, 0, rotate=False)
+    assert plan.path == "fused" and plan.variant == "streamed"
+    # rotation pins the resident slab -> that budget demotes to chained
+    plan_rot = ops.resolve_plan(2048, 8192, 11008, 0, rotate=True)
+    assert plan_rot.path == "chained"
+
+
+def test_resolve_plan_demotion_ladder(monkeypatch):
+    monkeypatch.setattr(ops, "_FUSED_VMEM_BYTES_MAX", 0)
+    plan = ops.resolve_plan(16, 4096, 11008, 128, rotate=True)
+    assert plan.path == "chained"
+    monkeypatch.setattr(ops, "_PROLOGUE_V_BYTES_MAX", 0)
+    plan = ops.resolve_plan(16, 4096, 11008, 128, rotate=True)
+    assert plan.path == "unfused"
+
+
+def test_auto_dispatch_shrunk_plan_executes(rng, monkeypatch):
+    """End to end: a tight budget shrinks the auto plan's tiles and the
+    kernel still runs (results match the default-plan bits only within
+    tolerance — a different bk legitimately reorders the xv accumulation)."""
+    spec, x, wp, s, u, v = _problem(rng, 16, 256, 128, 40)
+    want = np.asarray(ops.w4a4_lrc_forward(x, wp, s, u, v, spec,
+                                           rotate=True))
+    need = ops._fused_vmem_bytes(
+        256, 40, *ops.resolve_plan(16, 256, 128, 40, rotate=True)[1:5], True)
+    monkeypatch.setattr(ops, "_FUSED_VMEM_BYTES_MAX", need - 1)
+    plan = ops.resolve_plan(16, 256, 128, 40, rotate=True)
+    assert plan.path == "fused"
+    got = np.asarray(ops.w4a4_lrc_forward(x, wp, s, u, v, spec, rotate=True))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_big_v_executes_fused_with_parity(rng):
+    """Interpret-sized spelling of the CI acceptance run (which executes the
+    full K=8192 shape): a rank-1024 V at the old budget boundary resolves
+    to the fused path and all paths agree bitwise."""
+    m, k, n, r = 8, 2048, 64, 1024
+    plan = ops.resolve_plan(m, k, n, r, rotate=True)
+    assert plan.path == "fused" and plan.variant == "resident"
+    spec, x, wp, s, u, v = _problem(rng, m, k, n, r)
+    outs = {
+        impl: np.asarray(ops.w4a4_lrc_forward(x, wp, s, u, v, spec,
+                                              rotate=True, impl=impl))
+        for impl in ("fused", "chained", "unfused", "auto")
+    }
+    np.testing.assert_array_equal(outs["fused"], outs["chained"])
+    np.testing.assert_array_equal(outs["fused"], outs["unfused"])
+    np.testing.assert_array_equal(outs["fused"], outs["auto"])
+
+
+# ---------------------------------------------------------------------------
+# configurable VMEM budgets (set_vmem_budgets / block-table "vmem" entry)
+# ---------------------------------------------------------------------------
+
+
+def test_set_vmem_budgets_and_reset():
+    default = ops.fused_vmem_budget()
+    ops.set_vmem_budgets(fused=1234567, prologue=7654321)
+    assert ops.fused_vmem_budget() == 1234567
+    assert ops.prologue_vmem_budget() == 7654321
+    ops.reset_block_table()
+    assert ops.fused_vmem_budget() == default
+    with pytest.raises(ValueError, match="budget"):
+        ops.set_vmem_budgets(fused=-1)
+    with pytest.raises(ValueError, match="budget"):
+        ops.set_vmem_budgets(prologue="8MB")
+
+
+def test_load_block_table_vmem_entry(tmp_path):
+    p = tmp_path / "table.json"
+    p.write_text(json.dumps({
+        "decode": {"path": "fused", "bm": 16, "bn": 256, "bk": 256,
+                   "br": 256},
+        "vmem": {"fused_bytes_max": 4 * 1024 * 1024,
+                 "prologue_bytes_max": 2 * 1024 * 1024},
+    }))
+    ops.load_block_table(p)
+    assert ops.fused_vmem_budget() == 4 * 1024 * 1024
+    assert ops.prologue_vmem_budget() == 2 * 1024 * 1024
+    # the tighter budget flows into plan resolution
+    plan = ops.resolve_plan(16, 8192, 11008, 1024, rotate=True)
+    assert ops._fused_vmem_bytes(8192, 1024, plan.bm, plan.bn, plan.bk,
+                                 plan.br, True) <= 4 * 1024 * 1024 \
+        or plan.path != "fused"
+    ops.reset_block_table()
+    assert ops.fused_vmem_budget() == ops._FUSED_VMEM_BYTES_MAX
+
+
+@pytest.mark.parametrize("table,msg", [
+    ({"vmem": {"fused_bytes_max": "12MB"}}, "positive int"),
+    ({"vmem": {"hbm_bytes_max": 1}}, "unknown vmem budget"),
+    ({"vmem": [1, 2]}, "must be an object"),
+    ({"decode": {"path": "fused", "bm": 16.5, "bn": 256, "bk": 256}},
+     "positive integer"),
+    ({"decode": {"path": "fused", "bm": "16", "bn": 256, "bk": 256}},
+     "positive integer"),
+    ({"decode": {"path": "fused", "bm": 16, "bn": 256, "bk": 256,
+                 "br": 0}}, "positive integer"),
+    ({"decode": {"path": "fused", "bm": 16, "bn": 256, "bk": 256,
+                 "br": True}}, "positive integer"),
+    ({"decode": [16, 256, 256]}, "must map to an object"),
+])
+def test_load_block_table_malformed_values(tmp_path, table, msg):
+    p = tmp_path / "bad.json"
+    p.write_text(json.dumps(table))
+    with pytest.raises(ValueError, match=msg):
+        ops.load_block_table(p)
+    # a rejected table must leave neither plan nor budget state behind
+    assert ops.select_plan(16, 4096, 11008, 128)[0] == "fused"
+    assert ops.fused_vmem_budget() == ops._FUSED_VMEM_BYTES_MAX
+
+
+@pytest.mark.parametrize("text,msg", [
+    ('{"decode": {"path": "fused", "bm": 16', "not valid JSON"),  # truncated
+    ("decode: fused", "not valid JSON"),
+    ('["decode"]', "must be a JSON object"),
+])
+def test_load_block_table_partial_json(tmp_path, text, msg):
+    p = tmp_path / "partial.json"
+    p.write_text(text)
+    with pytest.raises(ValueError, match=msg):
+        ops.load_block_table(p)
+    assert ops.select_plan(16, 4096, 11008, 128)[0] == "fused"
+
+
+# ---------------------------------------------------------------------------
+# roofline byte model: fused_stream + the prefill crossover (acceptance)
+# ---------------------------------------------------------------------------
+
+
+def test_byte_model_fused_stream():
+    from repro.launch.roofline import prologue_activation_bytes
+
+    for m, k, r in [(16, 4096, 128), (2048, 8192, 1024)]:
+        a = m * k * 2
+        fu = prologue_activation_bytes(m, k, r, rotate=True, path="fused")
+        fs = prologue_activation_bytes(m, k, r, rotate=True,
+                                       path="fused_stream")
+        ch = prologue_activation_bytes(m, k, r, rotate=True, path="chained")
+        assert fu == a and fs == 2 * a
+        assert fu < fs < ch  # even the extra x read beats the xq round-trip
+
+
+def test_byte_model_fused_leq_chained_at_prefill_acceptance_shape():
+    """Acceptance: at the K=8192, R=1024 prefill shape the fused path's
+    activation bytes are ≤ chained (strictly below, by the eliminated
+    M×K xq + sx/xv round-trip)."""
+    from repro.launch.roofline import prologue_activation_bytes
+
+    m, k, r = 2048, 8192, 1024
+    fu = prologue_activation_bytes(m, k, r, rotate=True, path="fused")
+    ch = prologue_activation_bytes(m, k, r, rotate=True, path="chained")
+    assert fu <= ch
+    assert ch - fu == 2 * (m * k + 4 * m + 4 * m * r)
+
+
+def test_roofline_time_fused_never_worse_than_chained():
+    from benchmarks.latency_kernels import _roofline_time
+
+    for m in (16, 256, 2048):
+        for k, n in [(4096, 11008), (8192, 28672)]:
+            for r in (0, 128, 1024):
+                t_fu = _roofline_time(m, k, n, r, "fused")
+                t_ch = _roofline_time(m, k, n, r, "chained")
+                assert t_fu <= t_ch, (m, k, n, r)
+
+
+# ---------------------------------------------------------------------------
+# regression gate: graceful failure on stale baselines (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_check_regression_missing_column_fails_gracefully(tmp_path):
+    """A committed baseline that predates a new guarded column fails with a
+    clear regenerate message — not a KeyError."""
+    from benchmarks.check_regression import check
+    from benchmarks.latency_kernels import HEADER, analytic_rows
+
+    rows = analytic_rows(ms=[16], sizes=[(4096, 11008)], ranks=[0, 128])
+    drop = HEADER.index("us_fused_stream")
+    old_header = [h for i, h in enumerate(HEADER) if i != drop]
+    old_rows = [[x for i, x in enumerate(r) if i != drop] for r in rows]
+    stale = tmp_path / "stale_columns.json"
+    stale.write_text(json.dumps(dict(header=old_header, rows=old_rows)))
+    failures = check(stale, 0.05)
+    assert failures and any("us_fused_stream" in f for f in failures)
+    assert any("regenerate" in f for f in failures)
+
+
+def test_check_regression_short_rows_fail_gracefully(tmp_path):
+    from benchmarks.check_regression import check
+    from benchmarks.latency_kernels import HEADER
+
+    bad = tmp_path / "short.json"
+    bad.write_text(json.dumps(dict(header=HEADER, rows=[["M16_11008x4096"]])))
+    failures = check(bad, 0.05)
+    assert failures and any("shorter" in f for f in failures)
+
+
+def test_check_regression_unreadable_baseline(tmp_path):
+    from benchmarks.check_regression import check
+
+    bad = tmp_path / "truncated.json"
+    bad.write_text('{"header": [')
+    failures = check(bad, 0.05)
+    assert failures and any("unreadable" in f for f in failures)

@@ -155,15 +155,15 @@ def test_w4a4_lrc_forward_explicit_blocks(rng):
 
 def test_select_blocks_regimes():
     """The autotune table keys on the serving regime and clamps to dims."""
-    bm, bn, bk = ops.select_blocks(16, 4096, 11008, 128)   # decode
-    assert bm <= 16 and bn >= 128
-    bm2, _, _ = ops.select_blocks(256, 4096, 11008, 128)   # mixed
+    bm, bn, bk, br = ops.select_blocks(16, 4096, 11008, 128)   # decode
+    assert bm <= 16 and bn >= 128 and br <= 128
+    bm2, _, _, _ = ops.select_blocks(256, 4096, 11008, 128)   # mixed
     assert bm2 == 128
-    bm3, _, _ = ops.select_blocks(2048, 4096, 11008, 128)  # prefill
+    bm3, _, _, _ = ops.select_blocks(2048, 4096, 11008, 128)  # prefill
     assert bm3 == 256
     # tiny problems clamp every block below the table entry
-    bm4, bn4, bk4 = ops.select_blocks(8, 64, 32, 0)
-    assert bm4 <= 8 and bn4 <= 32 and bk4 <= 64
+    bm4, bn4, bk4, br4 = ops.select_blocks(8, 64, 32, 0)
+    assert bm4 <= 8 and bn4 <= 32 and bk4 <= 64 and br4 <= 8
 
 
 def test_qlinear_pallas_impl_matches_int8_odd_shapes(rng):
