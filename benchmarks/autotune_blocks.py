@@ -4,10 +4,14 @@ For each serving regime (decode / mixed / prefill) this harness evaluates
 candidate execution plans — kernel path (fused single-kernel vs. the
 prologue → GEMM chain) × (BM, BN, BK, BR) tiles — at a representative
 (M, K, N, R) shape, scores them, and persists the winners to
-``results/block_table.json``, which ``repro.kernels.ops.load_block_table``
-overlays onto the analytic defaults (``launch/serve.py --block-table``).
-BK is the K-chunk of the K-split fused grid (and the chained prologue's V
-stream), BR the R-tile of the streamed low-rank factor.
+``results/block_table.json``, which ``KernelContext.from_json`` overlays
+onto the analytic defaults (``launch/serve.py --block-table``).  BK is the
+K-chunk of the K-split fused grid (and the chained prologue's V stream),
+BR the R-tile of the streamed low-rank factor.
+
+The sweep runs under an explicit ``KernelContext`` built from the CLI flags
+(no process-global kernel state is touched), so feasibility is judged
+against exactly the budgets that will be persisted.
 
 Two scoring modes:
 
@@ -17,7 +21,7 @@ Two scoring modes:
                NOT committed.  Combine with ``--vmem-budget`` (or a "vmem"
                entry written into the table) to probe real-hardware VMEM
                ceilings.
-  (default)    analytic: the v5e roofline byte/FLOP model plus the ops-layer
+  (default)    analytic: the v5e roofline byte/FLOP model plus the
                per-slab VMEM feasibility check (serving rotates, which pins
                the RESIDENT prologue variant, so fused candidates are
                checked against the resident footprint) — deterministic,
@@ -38,6 +42,8 @@ from pathlib import Path
 import numpy as np
 
 from benchmarks.latency_kernels import _roofline_time
+from repro.kernels.context import (KernelContext, fused_vmem_bytes,
+                                   prologue_vmem_bytes, vmem_budget_arg)
 
 RESULTS = Path(__file__).resolve().parents[1] / "results"
 
@@ -65,28 +71,26 @@ def _candidates(regime, smoke=False):
         yield dict(path=path, bm=bm, bn=bn, bk=bk, br=br)
 
 
-def _analytic_score(regime, cand):
+def _analytic_score(regime, cand, ctx: KernelContext):
     """v5e roofline latency of the candidate; infeasible plans score inf.
     Serving applies the online rotation, so feasibility is checked with
     rotate=True (the stricter case — it pins the resident prologue)."""
-    from repro.kernels import ops
-
     m, k, n, r = REGIME_SHAPES[regime]
     br = min(cand["br"], r) if r else cand["br"]
     path = cand["path"]
     if path == "fused":
-        if ops._fused_vmem_bytes(k, r, cand["bm"], cand["bn"], cand["bk"],
-                                 br, True) > ops.fused_vmem_budget():
+        if fused_vmem_bytes(k, r, cand["bm"], cand["bn"], cand["bk"],
+                            br, True) > ctx.fused_vmem_bytes:
             return (float("inf"), float("inf"))
     else:
-        if ops._prologue_vmem_bytes(k, r, cand["bm"], cand["bk"], br,
-                                    True) > ops.prologue_vmem_budget():
+        if prologue_vmem_bytes(k, r, cand["bm"], cand["bk"], br,
+                               True) > ctx.prologue_vmem_bytes:
             return (float("inf"), float("inf"))
     # the roofline is tile-agnostic beyond bm (V/U re-reads per M-tile);
     # break byte-model ties toward plans whose tiles divide the problem
     # evenly (fewer ragged edge tiles), then toward LARGER tiles (fewer grid
     # steps — less pipeline/loop overhead, bigger MXU ops)
-    t = _roofline_time(m, k, n, r, path, bm=cand["bm"])
+    t = _roofline_time(m, k, n, r, path, bm=cand["bm"], ctx=ctx)
     waste = sum(((-d) % b) / d
                 for d, b in ((m, cand["bm"]), (n, cand["bn"]),
                              (k, cand["bk"])))
@@ -94,7 +98,8 @@ def _analytic_score(regime, cand):
     return (t * (1.0 + 0.1 * waste), steps)
 
 
-def _measure_score(regime, cand, reps=3, scale_down=True):
+def _measure_score(regime, cand, ctx: KernelContext, reps=3,
+                   scale_down=True):
     """Wall-clock the actual kernel path.  On CPU the shapes are scaled down
     so the interpreter finishes; only TPU numbers are table-worthy."""
     import jax
@@ -112,7 +117,8 @@ def _measure_score(regime, cand, reps=3, scale_down=True):
 
     def f():
         return ops.w4a4_lrc_forward(x, wp, s, u, v, spec,
-                                    blocks=blocks, impl=cand["path"])
+                                    blocks=blocks, impl=cand["path"],
+                                    ctx=ctx)
 
     try:
         f().block_until_ready()  # compile
@@ -125,14 +131,17 @@ def _measure_score(regime, cand, reps=3, scale_down=True):
     return ((time.time() - t0) / reps, 0)
 
 
-def autotune_sweep(measure: bool = False, smoke: bool = False) -> dict:
-    """Sweep all candidates per regime; return {regime: winning plan}."""
+def autotune_sweep(measure: bool = False, smoke: bool = False,
+                   ctx: KernelContext = None) -> dict:
+    """Sweep all candidates per regime under ``ctx`` (None -> analytic
+    defaults); return {regime: winning plan}."""
+    ctx = ctx or KernelContext()
     winners = {}
     score = _measure_score if measure else _analytic_score
     for regime in REGIME_SHAPES:
         best, best_t = None, (float("inf"), float("inf"))
         for cand in _candidates(regime, smoke=smoke):
-            t = score(regime, cand)
+            t = score(regime, cand, ctx)
             if t < best_t:
                 best, best_t = dict(cand), t
         best["score_us"] = round(best_t[0] * 1e6, 2) \
@@ -150,23 +159,23 @@ def main(argv=None) -> int:
                          "roofline score (use on real TPU)")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny candidate grid (CI sanity)")
-    ap.add_argument("--vmem-budget", type=int, default=None,
+    ap.add_argument("--vmem-budget", type=vmem_budget_arg, default=None,
                     help="override the fused/prologue VMEM working-set "
-                         "budgets (bytes) for the sweep — probe real-TPU "
-                         "ceilings instead of the analytic defaults")
+                         "budgets (positive bytes) for the sweep — probe "
+                         "real-TPU ceilings instead of the analytic "
+                         "defaults")
     ap.add_argument("--out", default=str(RESULTS / "block_table.json"))
     args = ap.parse_args(argv)
 
-    from repro.kernels import ops
-
+    ctx = KernelContext()
     if args.vmem_budget is not None:
-        ops.set_vmem_budgets(fused=args.vmem_budget,
-                             prologue=args.vmem_budget)
-    winners = autotune_sweep(measure=args.measure, smoke=args.smoke)
+        ctx = ctx.with_vmem_budgets(fused=args.vmem_budget,
+                                    prologue=args.vmem_budget)
+    winners = autotune_sweep(measure=args.measure, smoke=args.smoke, ctx=ctx)
     if args.vmem_budget is not None:
         # persist the probed budgets with the winners they were swept
-        # under, so load_block_table replays them at serve time instead of
-        # re-shrinking the plans against the default budgets
+        # under, so KernelContext.from_json replays them at serve time
+        # instead of re-shrinking the plans against the default budgets
         winners["vmem"] = dict(fused_bytes_max=args.vmem_budget,
                                prologue_bytes_max=args.vmem_budget)
     out = Path(args.out)
@@ -174,10 +183,9 @@ def main(argv=None) -> int:
     out.write_text(json.dumps(winners, indent=2) + "\n")
     print(f"wrote {out}")
 
-    # round-trip through the loader so a malformed table fails HERE, not at
-    # serve time
-    ops.load_block_table(out)
-    ops.reset_block_table()
+    # round-trip through the context loader so a malformed table fails
+    # HERE, not at serve time (builds a throwaway context; no global state)
+    KernelContext.from_json(out)
     return 0
 
 

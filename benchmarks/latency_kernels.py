@@ -62,17 +62,18 @@ HEADER = [
 ]
 
 
-def _roofline_time(m, k, n, r, path: str, bm: int = None):
+def _roofline_time(m, k, n, r, path: str, bm: int = None, ctx=None):
     """Bytes + flops → v5e time bound for the W4A4(+LR) layer on one path.
 
     The K-split grid streams the f32 U/V factors from HBM once per M-tile
     (they are no longer VMEM-resident across the whole problem), so the
     factor traffic scales with ceil(m/bm) — ``bm`` defaults to the plan
-    table's M tile for the regime."""
+    table's M tile for the regime (from ``ctx``; None -> the analytic
+    defaults)."""
     if bm is None:
-        from repro.kernels.ops import select_blocks
+        from repro.kernels.context import KernelContext
 
-        bm = select_blocks(m, k, n, r)[0]
+        bm = (ctx or KernelContext()).select_plan(m, k, n, r).bm
     n_m = -(-m // bm)
     bytes_w = k * n / 2 + 4 * n  # packed int4 + scales
     bytes_x = m * k * 2  # bf16 activations read
@@ -131,15 +132,18 @@ def analytic_rows(ms=MS, sizes=SIZES, ranks=RANKS):
     return rows
 
 
-def smoke_rows():
+def smoke_rows(ctx=None):
     """Run the three kernel paths for real (pallas interpret mode): small
     decode/mixed shapes plus the rank-1024 large-K no-demotion shape.
     Cross-path bitwise parity + wall-clock; the big shape additionally
     asserts that auto dispatch resolves to the fused path (the old whole-V
-    VMEM ceiling would have demoted it to unfused)."""
+    VMEM ceiling would have demoted it to unfused).  ``ctx`` is the
+    KernelContext to run under (None -> analytic defaults)."""
     from benchmarks.common import make_w4a4_problem
     from repro.kernels import ops
+    from repro.kernels.context import KernelContext
 
+    ctx = ctx or KernelContext()
     rng = np.random.default_rng(0)
     rows = []
     # (m, k, n, r, rotate) — decode and mixed regime shapes, odd N included,
@@ -153,16 +157,17 @@ def smoke_rows():
         (16, 8192, 256, 1024, True),  # previously demoted to unfused
     ]
     for m, k, n, r, rot in shapes:
-        big = k * r * 4 > ops._PROLOGUE_V_BYTES_MAX
+        big = k * r * 4 > ctx.prologue_vmem_bytes
         if big:
-            plan = ops.resolve_plan(m, k, n, r, rotate=rot)
+            plan = ctx.resolve_plan(m, k, n, r, rotate=rot)
             assert plan.path == "fused", \
                 f"K-split regression: {(m, k, n, r)} resolved to {plan}"
         spec, x, wp, s, u, v = make_w4a4_problem(rng, m, k, n, r)
         outs, times = {}, {}
         for impl in ("unfused", "chained", "fused", "auto"):
             f = lambda: ops.w4a4_lrc_forward(x, wp, s, u, v, spec,
-                                             rotate=rot, impl=impl)
+                                             rotate=rot, impl=impl,
+                                             ctx=ctx)
             f().block_until_ready()  # compile
             t0 = time.time()
             out = f().block_until_ready()
@@ -191,9 +196,9 @@ def smoke_rows():
     return rows
 
 
-def run(smoke: bool = False):
+def run(smoke: bool = False, ctx=None):
     if smoke:
-        rows = smoke_rows()
+        rows = smoke_rows(ctx=ctx)
         record("latency_kernels_smoke", rows, HEADER)
         return rows
 
@@ -230,10 +235,19 @@ def run(smoke: bool = False):
 
 
 if __name__ == "__main__":
+    from repro.kernels.context import context_from_flags, vmem_budget_arg
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="run the actual kernels in interpret mode (small "
                          "decode/mixed shapes + the rank-1024 large-K "
                          "no-demotion shape; CI bench-smoke job)")
+    ap.add_argument("--block-table", default=None,
+                    help="block-table JSON to build the KernelContext the "
+                         "smoke runs under (default: analytic defaults)")
+    ap.add_argument("--vmem-budget", type=vmem_budget_arg, default=None,
+                    help="override both VMEM working-set budgets (positive "
+                         "bytes) in the smoke's KernelContext")
     args = ap.parse_args()
-    run(smoke=args.smoke)
+    run(smoke=args.smoke,
+        ctx=context_from_flags(args.block_table, args.vmem_budget))

@@ -26,10 +26,16 @@ entry point:
 
 Execution plans (kernel path + BM/BN/BK/BR tiles) come from a small
 autotune table keyed on the (M, K, N, R) serving regime — decode / mixed /
-prefill (`ops.select_plan`); measured winners from
-benchmarks/autotune_blocks.py can overlay it via
-`ops.load_block_table(results/block_table.json)`, which may also carry
-VMEM-budget overrides (`ops.set_vmem_budgets`).  All GEMM operands are
+prefill — held in an immutable `context.KernelContext` (block table, VMEM
+budgets, default impl, interpret flag, per-layer plan overrides) threaded
+through every entry point as `ctx=`; measured winners from
+benchmarks/autotune_blocks.py load via
+`KernelContext.from_json(results/block_table.json)`, which may also carry
+VMEM-budget overrides (a "vmem" entry) and per-layer plan overrides (a
+"layers" entry).  Inspect resolution with `ctx.explain(m, k, n, r)`.  The
+old global setters (`ops.load_block_table` / `ops.set_vmem_budgets`) are
+one-release deprecation shims onto the process-default context.  All GEMM
+operands are
 zero-padded to block multiples so odd MLP widths take the pallas path;
 grids carry Mosaic ``dimension_semantics`` annotations.  All three paths
 are bitwise identical in interpret mode: they share the row-tile bodies in
@@ -42,8 +48,11 @@ and integer accumulation is exact under any K split.
   actquant.py — standalone per-token int4/int8 activation quantizer
   hadamard.py — standalone blocked Walsh-Hadamard transform (QuaRot R3/R4)
   rowops.py   — shared row-tile bodies (butterfly, quantize, prologue, unpack)
-  ops.py      — jit'd wrappers (padding, plan table, path dispatch)
+  context.py  — KernelContext: immutable execution config (plan table, VMEM
+                budgets, per-layer overrides) + plan resolution/explain
+  ops.py      — jit'd wrappers (padding, ctx-based dispatch, shims)
   ref.py      — pure-jnp oracles for every kernel
 """
 
-from repro.kernels import ops, ref
+from repro.kernels import context, ops, ref
+from repro.kernels.context import KernelContext, Plan

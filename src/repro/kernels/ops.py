@@ -3,13 +3,22 @@
 Responsibilities: shape padding to block multiples (weights, scales and the
 low-rank factors are zero-padded, so odd MLP widths never crash the pallas
 path), execution-plan selection per serving regime (decode / mixed /
-prefill) — kernel path AND (BM, BN, BK, BR) tiles, overridable from a
-measured ``results/block_table.json`` via :func:`load_block_table` —,
-per-slab VMEM feasibility (tiles shrink to fit the budget before the path
-ever demotes), interpret-mode selection (interpret=True on CPU — validates
-the kernel bodies; compiled Mosaic on real TPU), and the end-to-end entry
+prefill) — kernel path AND (BM, BN, BK, BR) tiles —, per-slab VMEM
+feasibility (tiles shrink to fit the budget before the path ever demotes),
+interpret-mode selection (interpret=True on CPU — validates the kernel
+bodies; compiled Mosaic on real TPU), and the end-to-end entry
 ``w4a4_lrc_forward`` used by ``QLinear(impl="pallas"/"fused")`` and the
 serving engine.
+
+ALL execution config lives in an explicit, immutable
+:class:`~repro.kernels.context.KernelContext` (block table, VMEM budgets,
+default impl, interpret flag, per-layer plan overrides) threaded through
+every entry point as ``ctx=``.  ``ctx=None`` falls back to the
+process-default context (:func:`default_context`), which is itself an
+immutable value — two engines holding different contexts never race each
+other.  Build contexts with ``KernelContext()``,
+``KernelContext.from_json("results/block_table.json")`` and the
+``with_*`` builders; introspect plan resolution with ``ctx.explain(...)``.
 
 Three kernel paths, strongest fusion first:
 
@@ -31,72 +40,169 @@ All three are bitwise identical in interpret mode: they share the row bodies
 in kernels/rowops.py (including the canonical K-chunked/R-tiled projection
 accumulation order) and integer accumulation is exact under any K split.
 
-VMEM budgets default to the module constants below; override them at
-runtime via :func:`set_vmem_budgets`, a ``"vmem"`` entry in the block-table
-JSON, or the serve CLI's ``--vmem-budget`` flag (so autotune on real TPUs
-can probe them).
+DEPRECATED (one release, warn on use): the old module-global mutators
+:func:`load_block_table` and :func:`set_vmem_budgets` now shim onto the
+process-default context.  Migrate to ``KernelContext.from_json(...)`` /
+``ctx.with_vmem_budgets(...)`` passed explicitly.
 """
 
 from __future__ import annotations
 
 import json
-from typing import NamedTuple, Optional
+import warnings
 from pathlib import Path
+from typing import Optional
 
-import jax
 import jax.numpy as jnp
 
 from repro.core.quantizers import QuantSpec
 from repro.kernels.actquant import act_quant_kernel
+from repro.kernels.context import (
+    DEFAULT_BLOCK_TABLE,
+    FUSED_VMEM_BYTES_MAX,
+    KERNEL_PATHS,
+    PROLOGUE_V_BYTES_MAX,
+    KernelContext,
+    Plan,
+    fused_vmem_bytes as _fused_vmem_bytes,
+    gemm_regime,
+    prologue_vmem_bytes as _prologue_vmem_bytes,
+)
 from repro.kernels.fused_gemm import fused_w4a4_lrc_kernel
 from repro.kernels.hadamard import fwht_kernel
 from repro.kernels.prologue import fused_prologue_kernel
-from repro.kernels.rowops import (default_proj_tiles, project_rows_tiled,
+from repro.kernels.rowops import (project_rows_tiled,
                                   round_pow2 as _round_pow2)
 from repro.kernels.w4a4 import w4a4_lowrank_matmul_kernel
 from repro.kernels.flash_attn import flash_attention_kernel
 
-# Default working-set budget of the two-kernel chain's prologue (x row slab
-# + rotated-row scratch + xq/sx/xv outputs + double-buffered V tiles).
-# Historically this was the ceiling on a WHOLE-VMEM V; V now streams in
-# (bk, br) tiles, so the budget gates the row slab instead and the 8 MB
-# figure keeps the same "three quarters of a useful VMEM half" intent.
-_PROLOGUE_V_BYTES_MAX = 8 * 1024 * 1024
+__all__ = [
+    "KernelContext", "Plan", "gemm_regime", "default_context",
+    "set_default_context", "select_plan", "select_blocks", "resolve_plan",
+    "fused_variant", "fused_vmem_budget", "prologue_vmem_budget",
+    "w4a4_lrc_forward", "w4a4_lowrank_matmul", "act_quant", "fwht",
+    "fused_prologue", "flash_attention",
+    # process-default reset (NOT deprecated: alias of
+    # set_default_context(None), used by tests and legacy scripts)
+    "reset_block_table",
+    # deprecated shims (one release)
+    "load_block_table", "set_vmem_budgets",
+]
 
-# Default working-set ceiling for the single-kernel fused path (resident
-# scratch + double-buffered streamed blocks).  ~¾ of a v5e core's 16 MB
-# VMEM, leaving room for Mosaic's pipelining overheads.  Tiles shrink to
-# fit this before the path demotes (see _fit_fused).
-_FUSED_VMEM_BYTES_MAX = 12 * 1024 * 1024
+# Back-compat aliases for the analytic default constants (immutable).
+_FUSED_VMEM_BYTES_MAX = FUSED_VMEM_BYTES_MAX
+_PROLOGUE_V_BYTES_MAX = PROLOGUE_V_BYTES_MAX
+_KERNEL_PATHS = KERNEL_PATHS
 
-# Runtime overrides for the two budgets (set_vmem_budgets / block-table
-# "vmem" entry / serve --vmem-budget).  Empty -> the module constants above
-# (which tests may monkeypatch directly).
-_VMEM_OVERRIDES: dict = {}
+# ---------------------------------------------------------------------------
+# process-default context (the ONLY module state; an immutable value swapped
+# atomically — the deprecation shims below and set_default_context are the
+# only writers, every reader goes through default_context())
+# ---------------------------------------------------------------------------
+
+_DEFAULT_CONTEXT: Optional[KernelContext] = None
+
+
+def default_context() -> KernelContext:
+    """The process-default :class:`KernelContext`, used whenever an entry
+    point is called with ``ctx=None``.  Prefer constructing and passing an
+    explicit context; this exists so zero-config callers keep working."""
+    global _DEFAULT_CONTEXT
+    if _DEFAULT_CONTEXT is None:
+        _DEFAULT_CONTEXT = KernelContext()
+    return _DEFAULT_CONTEXT
+
+
+def set_default_context(ctx: Optional[KernelContext]) -> KernelContext:
+    """Swap the process-default context (``None`` resets to the analytic
+    defaults).  Returns the PREVIOUS default so callers can restore it."""
+    global _DEFAULT_CONTEXT
+    prev = default_context()
+    if ctx is not None and not isinstance(ctx, KernelContext):
+        raise TypeError(f"expected a KernelContext or None, got "
+                        f"{type(ctx).__name__}")
+    _DEFAULT_CONTEXT = ctx
+    return prev
+
+
+def _ctx(ctx: Optional[KernelContext]) -> KernelContext:
+    return default_context() if ctx is None else ctx
+
+
+# ---------------------------------------------------------------------------
+# deprecated global-mutator shims (one release; migrate to KernelContext)
+# ---------------------------------------------------------------------------
+
+
+def _deprecated(old: str, new: str):
+    warnings.warn(
+        f"repro.kernels.ops.{old} is deprecated and will be removed next "
+        f"release; {new}", DeprecationWarning, stacklevel=3)
+
+
+def load_block_table(path) -> dict:
+    """DEPRECATED shim: overlay a measured block table onto the
+    process-default context.  Use ``KernelContext.from_json(path)`` and
+    pass the context explicitly instead.  Malformed tables raise ValueError
+    and leave no partial state behind; returns the parsed table.
+
+    Only the fields the old loader owned change: the regime table is
+    replaced, the budgets update PER KEY present in the file's ``"vmem"``
+    entry (set_vmem_budgets(None)-style: a missing key keeps the current
+    override), file ``"layers"`` overrides merge over existing ones, and
+    the default impl / interpret flag of the current context survive."""
+    _deprecated("load_block_table()",
+                "build a KernelContext.from_json(path) and pass it via "
+                "ctx= instead")
+    try:
+        raw = json.loads(Path(path).read_text())
+    except json.JSONDecodeError as e:
+        raise ValueError(f"block table {path} is not valid JSON: {e}") from e
+    except OSError as e:
+        raise ValueError(f"cannot read block table {path}: {e}") from e
+    cur = default_context()
+    # validates everything; raises before any state is swapped
+    ctx = KernelContext.from_dict(raw, where=f"block table {path}",
+                                  impl=cur.impl, interpret=cur.interpret)
+    vmem = raw.get("vmem", {})
+    ctx = ctx.with_vmem_budgets(
+        fused=vmem.get("fused_bytes_max", cur.fused_vmem_bytes),
+        prologue=vmem.get("prologue_bytes_max", cur.prologue_vmem_bytes))
+    ctx = ctx.with_overrides(
+        overrides={**cur.layer_overrides(), **ctx.layer_overrides()})
+    set_default_context(ctx)
+    return raw
 
 
 def set_vmem_budgets(fused: int = None, prologue: int = None):
-    """Override the VMEM working-set budgets (bytes) used by plan
-    resolution.  ``None`` leaves a budget at its current default."""
-    for key, val in (("fused", fused), ("prologue", prologue)):
-        if val is None:
-            continue
-        if not isinstance(val, int) or isinstance(val, bool) or val < 0:
-            raise ValueError(f"{key} VMEM budget must be a non-negative "
-                             f"int of bytes, got {val!r}")
-        _VMEM_OVERRIDES[key] = val
+    """DEPRECATED shim: override the VMEM working-set budgets (bytes) on
+    the process-default context.  Use ``ctx.with_vmem_budgets(...)`` and
+    pass the context explicitly instead."""
+    _deprecated("set_vmem_budgets()",
+                "use ctx.with_vmem_budgets(fused=..., prologue=...) and "
+                "pass the context via ctx= instead")
+    set_default_context(
+        default_context().with_vmem_budgets(fused=fused, prologue=prologue))
 
 
-def fused_vmem_budget() -> int:
-    return _VMEM_OVERRIDES.get("fused", _FUSED_VMEM_BYTES_MAX)
+def reset_block_table():
+    """Reset the process-default context to the analytic defaults.  Alias
+    of ``set_default_context(None)`` — note this resets the WHOLE default
+    context (block table, budgets, impl, interpret, layer overrides), a
+    superset of what the pre-KernelContext version cleared."""
+    set_default_context(None)
 
 
-def prologue_vmem_budget() -> int:
-    return _VMEM_OVERRIDES.get("prologue", _PROLOGUE_V_BYTES_MAX)
+def fused_vmem_budget(ctx: KernelContext = None) -> int:
+    return _ctx(ctx).fused_vmem_bytes
 
 
-def _interpret() -> bool:
-    return jax.default_backend() == "cpu"
+def prologue_vmem_budget(ctx: KernelContext = None) -> int:
+    return _ctx(ctx).prologue_vmem_bytes
+
+
+def _interpret(ctx: KernelContext = None) -> bool:
+    return _ctx(ctx).interpret_mode()
 
 
 def _pad_to(x, mult, axis):
@@ -110,288 +216,42 @@ def _pad_to(x, mult, axis):
 
 
 # ---------------------------------------------------------------------------
-# execution-plan autotune table (kernel path + block sizes)
-# ---------------------------------------------------------------------------
-
-# Regime-keyed execution plans: the kernel path plus (BM, BN, BK, BR) tiles.
-# decode  (M ≤ 32):  single-kernel fused — the decode hot path is
-#                    activation+weight-HBM-bound; tiny M tile, wide N×K
-#                    tiles stream the weight matrix.
-# mixed   (M ≤ 512): single-kernel fused, balanced tiles.
-# prefill (M > 512): single-kernel fused as well since the K-split grid —
-#                    the (BM, K) f32 row slab that used to crowd VMEM now
-#                    either fits (resident) or is traded for one extra x
-#                    read (streamed); the GEMM is MXU-bound at these M, and
-#                    fused ≤ chained on activation bytes at every M.
-_BLOCK_TABLE = {
-    "decode": dict(path="fused", bm=16, bn=256, bk=512, br=512),
-    "mixed": dict(path="fused", bm=128, bn=128, bk=256, br=512),
-    "prefill": dict(path="fused", bm=256, bn=256, bk=256, br=512),
-}
-
-_KERNEL_PATHS = ("fused", "chained", "unfused")
-
-# Measured winners loaded from results/block_table.json (autotune sweep);
-# overlays the analytic defaults above.  Populated by load_block_table().
-_MEASURED_TABLE: dict = {}
-
-_TILE_DIMS_REQUIRED = ("bm", "bn", "bk")
-_TILE_DIMS_ALL = ("bm", "bn", "bk", "br")
-_VMEM_KEYS = ("fused_bytes_max", "prologue_bytes_max")
-
-
-def _validate_entry(regime: str, entry, path) -> None:
-    if not isinstance(entry, dict):
-        raise ValueError(f"regime {regime!r} in block table {path} must map "
-                         f"to an object, got {type(entry).__name__}")
-    if entry.get("path") not in _KERNEL_PATHS:
-        raise ValueError(
-            f"unknown kernel path {entry.get('path')!r} for regime "
-            f"{regime!r}; expected one of {_KERNEL_PATHS}")
-    missing = set(_TILE_DIMS_REQUIRED) - set(entry)
-    if missing:
-        raise ValueError(f"regime {regime!r} missing keys {missing}")
-    for dim in _TILE_DIMS_ALL:
-        if dim not in entry:
-            continue  # br is optional (pre-K-split tables)
-        val = entry[dim]
-        if not isinstance(val, int) or isinstance(val, bool) or val <= 0:
-            raise ValueError(
-                f"regime {regime!r} tile dim {dim!r} must be a positive "
-                f"integer, got {val!r}")
-
-
-def load_block_table(path) -> dict:
-    """Overlay measured autotune winners (benchmarks/autotune_blocks.py →
-    results/block_table.json) onto the analytic block table.  Each entry is
-    {"regime": {"path": ..., "bm": ..., "bn": ..., "bk": ..., "br": ...}}
-    (``br`` optional — pre-K-split tables stay loadable).  A reserved
-    top-level ``"vmem"`` entry {"fused_bytes_max": ..,
-    "prologue_bytes_max": ..} overrides the VMEM budgets.  Malformed tables
-    raise ValueError and leave no partial state behind."""
-    try:
-        table = json.loads(Path(path).read_text())
-    except json.JSONDecodeError as e:
-        raise ValueError(f"block table {path} is not valid JSON: {e}") from e
-    if not isinstance(table, dict):
-        raise ValueError(f"block table {path} must be a JSON object, got "
-                         f"{type(table).__name__}")
-    vmem = table.get("vmem", {})
-    if not isinstance(vmem, dict):
-        raise ValueError(f"'vmem' entry in block table {path} must be an "
-                         f"object, got {type(vmem).__name__}")
-    unknown = set(vmem) - set(_VMEM_KEYS)
-    if unknown:
-        raise ValueError(f"unknown vmem budget keys {sorted(unknown)} in "
-                         f"block table {path}; expected {_VMEM_KEYS}")
-    for key, val in vmem.items():
-        if not isinstance(val, int) or isinstance(val, bool) or val <= 0:
-            raise ValueError(f"vmem budget {key!r} must be a positive int "
-                             f"of bytes, got {val!r}")
-    for regime, entry in table.items():
-        if regime == "vmem":
-            continue
-        if regime not in _BLOCK_TABLE:
-            raise ValueError(
-                f"unknown regime {regime!r} in block table {path}; "
-                f"expected one of {sorted(_BLOCK_TABLE)}")
-        _validate_entry(regime, entry, path)
-    _MEASURED_TABLE.clear()
-    _MEASURED_TABLE.update({k: v for k, v in table.items() if k != "vmem"})
-    set_vmem_budgets(fused=vmem.get("fused_bytes_max"),
-                     prologue=vmem.get("prologue_bytes_max"))
-    return table
-
-
-def reset_block_table():
-    """Drop any loaded measured winners and VMEM-budget overrides; back to
-    the analytic defaults."""
-    _MEASURED_TABLE.clear()
-    _VMEM_OVERRIDES.clear()
-
-
-def gemm_regime(m: int) -> str:
-    if m <= 32:
-        return "decode"
-    if m <= 512:
-        return "mixed"
-    return "prefill"
-
-
-def select_plan(m: int, k: int, n: int, r: int = 0, regime: str = None):
-    """Table execution plan (path, BM, BN, BK, BR) for a (M, K, N, R)
-    problem — no VMEM feasibility applied (see :func:`resolve_plan`).
-
-    ``regime`` overrides the M-derived serving regime; unknown strings raise.
-    Blocks are clamped to the actual dims; large ranks shrink BN so the U
-    tile + f32 accumulator stay within VMEM."""
-    if regime is None:
-        regime = gemm_regime(m)
-    elif regime not in _BLOCK_TABLE:
-        raise ValueError(f"unknown regime {regime!r}; "
-                         f"expected one of {sorted(_BLOCK_TABLE)}")
-    entry = _MEASURED_TABLE.get(regime, _BLOCK_TABLE[regime])
-    bm = min(entry["bm"], _round_pow2(max(m, 8)))
-    bn = min(entry["bn"], _round_pow2(max(n, 8)))
-    bk = min(entry["bk"], _round_pow2(max(k, 8)))
-    if "br" in entry:
-        br = min(entry["br"], _round_pow2(max(r, 8)))
-    else:  # pre-K-split tables: the shared kernel default
-        br = default_proj_tiles(k, r)[1]
-    if r >= 512:
-        bn = min(bn, 128)
-    return entry["path"], bm, bn, bk, br
-
-
-def select_blocks(m: int, k: int, n: int, r: int = 0, regime: str = None):
-    """(BM, BN, BK, BR) for a (M, K, N, R) problem (see :func:`select_plan`).
-    Unknown ``regime`` strings raise ValueError."""
-    return select_plan(m, k, n, r, regime=regime)[1:]
-
-
-# ---------------------------------------------------------------------------
-# per-slab VMEM feasibility: shrink tiles to fit, demote only when nothing
-# fits
+# execution-plan selection / resolution (thin wrappers over the context)
 # ---------------------------------------------------------------------------
 
 
-class Plan(NamedTuple):
-    """A resolved execution plan: kernel path, tile dims, and (fused only)
-    the prologue variant ("resident" | "streamed")."""
-    path: str
-    bm: int
-    bn: int
-    bk: int
-    br: int
-    variant: Optional[str] = None
+def select_plan(m: int, k: int, n: int, r: int = 0, regime: str = None,
+                ctx: KernelContext = None, layer: str = None) -> Plan:
+    """Table execution :class:`Plan` for a (M, K, N, R) problem — per-layer
+    override merged over the regime entry, no VMEM feasibility applied (see
+    :func:`resolve_plan`).  ``regime`` overrides the M-derived serving
+    regime; unknown strings raise."""
+    return _ctx(ctx).select_plan(m, k, n, r, regime=regime, layer=layer)
 
 
-def _fused_vmem_bytes(k: int, r: int, bm: int, bn: int, bk: int, br: int,
-                      resident: bool) -> int:
-    """Worst-case VMEM working set of the K-split fused kernel: resident
-    scratch plus double-buffered streamed blocks."""
-    k_pad = k + (-k) % bk
-    r_pad = (r + (-r) % br) if r else 0
-    res = (
-        bm * k_pad          # xq int8 residency
-        + bm * 4            # sx
-        + bm * bn * 4       # int32 GEMM accumulator
-    )
-    if r:
-        res += bm * r_pad * 4  # xv accumulator
-    if resident:
-        res += bm * k_pad * 4  # f32 (rotated) row slab
-    stream = (
-        bm * bk * 4         # x chunk (f32 upper bound)
-        + (bk // 2) * bn    # packed-weight chunk
-        + bn * 4            # sw
-        + bm * bn * 4       # out tile
-    )
-    if r:
-        stream += bk * br * 4 + bn * r_pad * 4  # V tile + U slab
-    return res + 2 * stream
-
-
-def _prologue_vmem_bytes(k: int, r: int, bm: int, bk: int, br: int,
-                         rotate: bool) -> int:
-    """Working set of the standalone (chained-path) prologue kernel: the x
-    row slab, the rotated-row scratch, the xq/sx/xv outputs and the
-    double-buffered streamed V tiles."""
-    k_pad = k + (-k) % bk if r else k
-    r_pad = (r + (-r) % br) if r else 0
-    b = bm * k_pad * 4 + bm * k_pad + bm * 4  # x slab + q out + s out
-    if rotate:
-        b += bm * k_pad * 4  # rotated-row scratch
-    if r:
-        b += bm * r_pad * 4 + 2 * (bk * br * 4)  # xv out + V tiles
-    return b
-
-
-def _shrink_to_fit(bytes_fn, tiles: dict, mins: dict, budget: int):
-    """Greedily halve tile dims (largest byte saving first, deterministic
-    tie-break in ``mins`` key order) until ``bytes_fn(**tiles)`` fits
-    ``budget``.  Returns the fitted tiles dict or None."""
-    tiles = dict(tiles)
-    while bytes_fn(**tiles) > budget:
-        best = None
-        for dim in mins:
-            if tiles[dim] // 2 < mins[dim]:
-                continue
-            cand = dict(tiles)
-            cand[dim] //= 2
-            got = bytes_fn(**cand)
-            if best is None or got < best[0]:
-                best = (got, dim)
-        if best is None:
-            return None
-        tiles[best[1]] //= 2
-    return tiles
-
-
-def _fit_fused(k: int, r: int, bm: int, bn: int, bk: int, br: int,
-               rotate: bool, budget: int):
-    """Feasible (bm, bn, bk, br, variant) for the fused kernel under
-    ``budget``, shrinking tiles as needed; None when nothing fits.  The
-    resident prologue is preferred (one x read); the streamed variant
-    (rotate=False only) trades an extra x read for dropping the f32 row
-    slab."""
-    mins = dict(bk=min(bk, 128), br=min(br, 128), bn=min(bn, 128),
-                bm=min(bm, 8))
-    variants = ("resident",) if rotate else ("resident", "streamed")
-    for variant in variants:
-        def bytes_fn(bm, bn, bk, br, _res=(variant == "resident")):
-            return _fused_vmem_bytes(k, r, bm, bn, bk, br, _res)
-        fit = _shrink_to_fit(bytes_fn, dict(bm=bm, bn=bn, bk=bk, br=br),
-                             mins, budget)
-        if fit is not None:
-            return Plan("fused", fit["bm"], fit["bn"], fit["bk"], fit["br"],
-                        variant)
-    return None
-
-
-def _fit_chained(k: int, r: int, bm: int, bn: int, bk: int, br: int,
-                 rotate: bool, budget: int):
-    """Feasible chained-path plan under the prologue budget, or None."""
-    mins = dict(bk=min(bk, 128), br=min(br, 128), bm=min(bm, 8))
-
-    def bytes_fn(bm, bk, br):
-        return _prologue_vmem_bytes(k, r, bm, bk, br, rotate)
-
-    fit = _shrink_to_fit(bytes_fn, dict(bm=bm, bk=bk, br=br), mins, budget)
-    if fit is None:
-        return None
-    return Plan("chained", fit["bm"], bn, fit["bk"], fit["br"], None)
-
-
-def fused_variant(k: int, r: int, bm: int, bn: int, bk: int, br: int,
-                  rotate: bool) -> str:
-    """Prologue variant for FORCED-fused execution at fixed tiles: resident
-    when it fits the budget (or rotation requires it), else streamed."""
-    if rotate:
-        return "resident"
-    if _fused_vmem_bytes(k, r, bm, bn, bk, br, True) <= fused_vmem_budget():
-        return "resident"
-    return "streamed"
+def select_blocks(m: int, k: int, n: int, r: int = 0, regime: str = None,
+                  ctx: KernelContext = None, layer: str = None) -> Plan:
+    """:class:`Plan` for a (M, K, N, R) problem (alias of
+    :func:`select_plan`; read the tiles off ``.bm/.bn/.bk/.br``)."""
+    return select_plan(m, k, n, r, regime=regime, ctx=ctx, layer=layer)
 
 
 def resolve_plan(m: int, k: int, n: int, r: int = 0, rotate: bool = False,
-                 regime: str = None) -> Plan:
-    """The executable plan for a (M, K, N, R) problem: the block-table plan
-    with per-slab VMEM feasibility applied — tiles shrink to fit the budget
-    first; the path demotes (fused → chained → unfused) only when no tiling
-    fits."""
-    path, bm, bn, bk, br = select_plan(m, k, n, r, regime=regime)
-    if path == "fused":
-        plan = _fit_fused(k, r, bm, bn, bk, br, rotate, fused_vmem_budget())
-        if plan is not None:
-            return plan
-        path = "chained"
-    if path == "chained":
-        plan = _fit_chained(k, r, bm, bn, bk, br, rotate,
-                            prologue_vmem_budget())
-        if plan is not None:
-            return plan
-    return Plan("unfused", bm, bn, bk, br, None)
+                 regime: str = None, ctx: KernelContext = None,
+                 layer: str = None) -> Plan:
+    """The executable :class:`Plan` for a (M, K, N, R) problem: the
+    block-table plan with per-slab VMEM feasibility applied — tiles shrink
+    to fit the budget first; the path demotes (fused → chained → unfused)
+    only when no tiling fits."""
+    return _ctx(ctx).resolve_plan(m, k, n, r, rotate=rotate, regime=regime,
+                                  layer=layer)
+
+
+def fused_variant(k: int, r: int, bm: int, bn: int, bk: int, br: int,
+                  rotate: bool, ctx: KernelContext = None) -> str:
+    """Prologue variant for FORCED-fused execution at fixed tiles: resident
+    when it fits the budget (or rotation requires it), else streamed."""
+    return _ctx(ctx).fused_variant(k, r, bm, bn, bk, br, rotate)
 
 
 # ---------------------------------------------------------------------------
@@ -399,25 +259,27 @@ def resolve_plan(m: int, k: int, n: int, r: int = 0, rotate: bool = False,
 # ---------------------------------------------------------------------------
 
 
-def act_quant(x: jnp.ndarray, spec: QuantSpec, bm: int = 128):
+def act_quant(x: jnp.ndarray, spec: QuantSpec, bm: int = 128,
+              ctx: KernelContext = None):
     """Per-token activation quantization. x: (M, K) -> (q int8, s (M,1))."""
     assert spec.group_size is None, "kernel path: per-token scales only"
     xp, m = _pad_to(x, bm, 0)
     q, s = act_quant_kernel(
         xp, bits=spec.bits, clip_ratio=spec.clip_ratio, bm=bm,
-        interpret=_interpret(),
+        interpret=_interpret(ctx),
     )
     return q[:m], s[:m]
 
 
-def fwht(x: jnp.ndarray, bm: int = 256):
+def fwht(x: jnp.ndarray, bm: int = 256, ctx: KernelContext = None):
     xp, m = _pad_to(x, bm, 0)
-    return fwht_kernel(xp, bm=bm, interpret=_interpret())[:m]
+    return fwht_kernel(xp, bm=bm, interpret=_interpret(ctx))[:m]
 
 
 def fused_prologue(x: jnp.ndarray, v, spec: QuantSpec,
                    rotate: bool = False, bm: int = 128,
-                   bk: int = None, br: int = None):
+                   bk: int = None, br: int = None,
+                   ctx: KernelContext = None):
     """Single-HBM-pass activation prologue: optional WHT rotation, per-token
     quantization, and the (x·V) projection, from one row-tile read of x.
     V streams in (bk, br) tiles — it is never whole in VMEM.
@@ -428,7 +290,7 @@ def fused_prologue(x: jnp.ndarray, v, spec: QuantSpec,
     q, s, xv = fused_prologue_kernel(
         xp, None if v is None else jnp.asarray(v, jnp.float32),
         bits=spec.bits, clip_ratio=spec.clip_ratio, rotate=rotate, bm=bm,
-        bk=bk, br=br, interpret=_interpret(),
+        bk=bk, br=br, interpret=_interpret(ctx),
     )
     return q[:m], s[:m], None if xv is None else xv[:m]
 
@@ -476,7 +338,7 @@ def _project_tiles(xr, v, bm: int, bk: int, br: int):
 
 
 def _forward_fused(xp, wpacked, w_scale, u, v, act_spec, rotate,
-                   bm, bn, bk, br, variant):
+                   bm, bn, bk, br, variant, interpret):
     """Single-kernel path: pad the weight-side operands, hand the UNPADDED-K
     activations to kernels/fused_gemm.py (the in-kernel prologue must not see
     pad columns), emit the output straight from the one pallas call."""
@@ -490,7 +352,7 @@ def _forward_fused(xp, wpacked, w_scale, u, v, act_spec, rotate,
     return fused_w4a4_lrc_kernel(
         xp, v, wp, sw, up,
         bits=act_spec.bits, clip_ratio=act_spec.clip_ratio, rotate=rotate,
-        bm=bm, bn=bn, bk=bk, br=br, variant=variant, interpret=_interpret(),
+        bm=bm, bn=bn, bk=bk, br=br, variant=variant, interpret=interpret,
     )
 
 
@@ -503,38 +365,47 @@ def w4a4_lrc_forward(
     act_spec: QuantSpec,
     rotate: bool = False,
     blocks=None,  # optional (bm, bn, bk[, br]) override; default: plan table
-    impl: str = "auto",  # auto | fused | chained | unfused
+    impl: str = None,  # None -> ctx.impl; auto | fused | chained | unfused
+    ctx: KernelContext = None,  # None -> the process-default context
+    layer: str = None,  # per-layer override key into ctx.overrides
 ):
     """The full W4A4+LRC serving hot path.
 
-    ``impl="auto"`` follows the block-table plan with per-slab VMEM
-    feasibility (:func:`resolve_plan`): the K-split fused kernel's tiles
-    shrink to fit the budget before the path ever demotes, so fused serves
-    every regime and rank unless nothing fits; then the two-kernel
-    prologue → GEMM chain (V streamed); then the unfused three-pass chain.
-    Explicit ``impl`` values force a path — "fused"/"chained" trust the
-    caller on VMEM fit.
+    Execution config comes from ``ctx`` (a :class:`KernelContext`; ``None``
+    falls back to the process default).  ``impl=None`` defers to
+    ``ctx.impl`` (usually ``"auto"``): the block-table plan — with any
+    per-layer override for ``layer`` — plus per-slab VMEM feasibility
+    (:func:`resolve_plan`): the K-split fused kernel's tiles shrink to fit
+    the budget before the path ever demotes, so fused serves every regime
+    and rank unless nothing fits; then the two-kernel prologue → GEMM chain
+    (V streamed); then the unfused three-pass chain.  Explicit ``impl``
+    values force a path — "fused"/"chained" trust the caller on VMEM fit.
 
     ``rotate`` applies the online Walsh-Hadamard rotation (K power of two)
     inside the prologue.  All operands are zero-padded to block multiples, so
     arbitrary M/K/N (odd MLP widths included) take the pallas path.  The
     three paths are bitwise identical in interpret mode (shared row bodies,
-    shared K-chunk/R-tile accumulation order, exact integer accumulation).
+    shared K-chunk/R-tile accumulation order, exact integer accumulation) —
+    under ANY context, since the context only picks the tiling.
     """
+    ctx = _ctx(ctx)
     m0, k = x.shape
     n = wpacked.shape[1]
     r = 0 if v is None else v.shape[-1]
 
+    if impl is None:
+        impl = ctx.impl
     variant = None
     if impl == "auto":
-        path, bm, bn, bk, br, variant = resolve_plan(m0, k, n, r,
-                                                     rotate=rotate)
-    elif impl not in _KERNEL_PATHS:
+        path, bm, bn, bk, br, variant = ctx.resolve_plan(
+            m0, k, n, r, rotate=rotate, layer=layer)
+    elif impl not in KERNEL_PATHS:
         raise ValueError(f"unknown impl {impl!r}; "
-                         f"expected auto or one of {_KERNEL_PATHS}")
+                         f"expected auto or one of {KERNEL_PATHS}")
     else:
         path = impl
-        _, bm, bn, bk, br = select_plan(m0, k, n, r)
+        _, bm, bn, bk, br, variant = ctx.select_plan(m0, k, n, r,
+                                                     layer=layer)
     if blocks is not None:
         bm, bn, bk = blocks[:3]
         if len(blocks) > 3:
@@ -542,12 +413,15 @@ def w4a4_lrc_forward(
         br = min(br, _round_pow2(max(r, 8)))
         variant = None
     if path == "fused" and variant is None:
-        variant = fused_variant(k, r, bm, bn, bk, br, rotate)
+        variant = ctx.fused_variant(k, r, bm, bn, bk, br, rotate)
 
     if rotate:
         assert k & (k - 1) == 0, \
             f"online rotation needs power-of-two K, got {k}"
+        if variant == "streamed":
+            variant = "resident"  # rotation needs the f32 row slab
     assert act_spec.group_size is None, "kernel path: per-token scales only"
+    interpret = ctx.interpret_mode()
     # run the prologue on the M-padded activations directly — its outputs
     # stay bm-aligned so the GEMM padding below never re-pads axis 0
     xp, _ = _pad_to(x, bm, 0)
@@ -555,25 +429,25 @@ def w4a4_lrc_forward(
     if path == "fused":
         out = _forward_fused(xp, wpacked, w_scale, u if r else None,
                              v if r else None, act_spec, rotate,
-                             bm, bn, bk, br, variant)
+                             bm, bn, bk, br, variant, interpret)
         return out[:m0, :n]
 
     if path == "chained":
         xq, sx, xv = fused_prologue_kernel(
             xp, jnp.asarray(v, jnp.float32) if r else None,
             bits=act_spec.bits, clip_ratio=act_spec.clip_ratio,
-            rotate=rotate, bm=bm, bk=bk, br=br, interpret=_interpret(),
+            rotate=rotate, bm=bm, bk=bk, br=br, interpret=interpret,
         )
     else:  # unfused: three activation passes over the row tiles
-        xr = fwht(xp, bm=bm) if rotate else xp
-        xq, sx = act_quant(xr, act_spec, bm=bm)
+        xr = fwht(xp, bm=bm, ctx=ctx) if rotate else xp
+        xq, sx = act_quant(xr, act_spec, bm=bm, ctx=ctx)
         xv = _project_tiles(xr, v, bm, bk, br) if r else None
 
     xqp, sxp, wp, sw, up, xvp = _pad_gemm_operands(
         xq, sx, wpacked, w_scale, u if r else None, xv, bm, bn, bk, br)
     out = w4a4_lowrank_matmul_kernel(
         xqp, sxp, wp, sw, xvp, up,
-        bm=bm, bn=bn, bk=bk, interpret=_interpret(),
+        bm=bm, bn=bn, bk=bk, interpret=interpret,
     )
     return out[:m0, :n]
 
@@ -588,6 +462,7 @@ def w4a4_lowrank_matmul(
     bm: int = None,
     bn: int = None,
     bk: int = None,
+    ctx: KernelContext = None,
 ):
     """Back-compat alias for :func:`w4a4_lrc_forward` (no online rotation)."""
     blocks = None
@@ -595,13 +470,15 @@ def w4a4_lowrank_matmul(
         m0, k = x.shape
         n = wpacked.shape[1]
         r = 0 if v is None else v.shape[-1]
-        dbm, dbn, dbk, _ = select_blocks(m0, k, n, r)
-        blocks = (bm or dbm, bn or dbn, bk or dbk)
-    return w4a4_lrc_forward(x, wpacked, w_scale, u, v, act_spec, blocks=blocks)
+        d = select_blocks(m0, k, n, r, ctx=ctx)
+        blocks = (bm or d.bm, bn or d.bn, bk or d.bk)
+    return w4a4_lrc_forward(x, wpacked, w_scale, u, v, act_spec,
+                            blocks=blocks, ctx=ctx)
 
 
 def flash_attention(q, k, v, scale: float, causal: bool = True,
-                    bq: int = 128, bkv: int = 128):
+                    bq: int = 128, bkv: int = 128,
+                    ctx: KernelContext = None):
     """GQA flash attention. q: (B, Sq, H, D); k/v: (B, Skv, KH, D[v]).
     Folds batch×head, repeats KV heads across their query group."""
     b, sq, h, d = q.shape
@@ -613,5 +490,5 @@ def flash_attention(q, k, v, scale: float, causal: bool = True,
     bq = min(bq, sq)
     bkv = min(bkv, k.shape[1])
     out = flash_attention_kernel(qf, kf, vf, scale, causal=causal,
-                                 bq=bq, bkv=bkv, interpret=_interpret())
+                                 bq=bq, bkv=bkv, interpret=_interpret(ctx))
     return out.reshape(b, h, sq, -1).transpose(0, 2, 1, 3)

@@ -239,3 +239,62 @@ def model_flops(cfg, shape) -> float:
         return 2.0 * n_eff * d
     # decode: one token per sequence
     return 2.0 * n_eff * shape.global_batch
+
+
+def main(argv=None) -> int:
+    """Plan-introspection CLI: build a KernelContext from the same flags the
+    serving launcher takes and print ``ctx.explain`` (resolved kernel path,
+    tiles, prologue variant and VMEM fit per regime) plus the roofline
+    latency of each path for one (M, K, N, R) layer shape.
+
+        PYTHONPATH=src python -m repro.launch.roofline \\
+            --shape 16 4096 11008 128 --rotate \\
+            [--block-table results/block_table.json] [--vmem-budget BYTES]
+    """
+    import argparse
+
+    from repro.kernels.context import (KernelContext, context_from_flags,
+                                       vmem_budget_arg)
+
+    ap = argparse.ArgumentParser(description=main.__doc__)
+    ap.add_argument("--shape", nargs=4, type=int, required=True,
+                    metavar=("M", "K", "N", "R"),
+                    help="the (M, K, N, R) layer problem to explain")
+    ap.add_argument("--rotate", action="store_true",
+                    help="resolve with the online rotation (pins the "
+                         "resident prologue variant)")
+    ap.add_argument("--layer", default=None,
+                    help="layer name for per-layer override lookup in the "
+                         "context's 'layers' table")
+    ap.add_argument("--block-table", default=None,
+                    help="block-table JSON (regime plans + optional 'vmem' "
+                         "budgets + 'layers' overrides) to build the "
+                         "context from")
+    ap.add_argument("--vmem-budget", type=vmem_budget_arg, default=None,
+                    help="override both VMEM working-set budgets (positive "
+                         "bytes); applied after --block-table")
+    ap.add_argument("--impl", default=None,
+                    choices=("auto", "fused", "chained", "unfused"),
+                    help="default kernel path recorded on the context")
+    args = ap.parse_args(argv)
+
+    ctx = context_from_flags(args.block_table, args.vmem_budget,
+                             args.impl) or KernelContext()
+
+    m, k, n, r = args.shape
+    print(ctx.explain(m, k, n, r, rotate=args.rotate, layer=args.layer))
+
+    try:  # benchmarks/ lives at the repo root, not under src/
+        from benchmarks.latency_kernels import _roofline_time
+    except ImportError:
+        return 0
+
+    print("roofline latency (v5e byte/FLOP model):")
+    for path in ("fused", "fused_stream", "chained", "unfused"):
+        t = _roofline_time(m, k, n, r, path, ctx=ctx)
+        print(f"  {path:12s} {t * 1e6:9.1f} us")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,14 +1,30 @@
 """Serving launcher: batched requests through a (quantized) model.
 
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m \
-        [--quantize] [--requests 8] [--new-tokens 16]
+        [--quantize] [--requests 8] [--new-tokens 16] \
+        [--block-table results/block_table.json] [--vmem-budget BYTES]
+
+The kernel execution config (--block-table / --vmem-budget / --impl) is
+assembled into one immutable ``KernelContext`` handed to the engine — no
+process-global kernel state is mutated, so several launchers/engines can
+coexist with different plan tables.
 """
 
 import argparse
 import time
 
 
+def build_context(block_table=None, vmem_budget=None):
+    """CLI flags -> KernelContext (None when no flag was given); the shared
+    mapping lives in repro.kernels.context.context_from_flags."""
+    from repro.kernels.context import context_from_flags
+
+    return context_from_flags(block_table, vmem_budget)
+
+
 def main():
+    from repro.kernels.context import vmem_budget_arg
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-135m")
     ap.add_argument("--reduced", action="store_true", default=True)
@@ -27,14 +43,15 @@ def main():
                     help="path to measured autotune winners "
                          "(results/block_table.json from "
                          "benchmarks/autotune_blocks.py) to overlay on the "
-                         "analytic kernel plan table; may carry a 'vmem' "
-                         "entry overriding the VMEM budgets")
-    ap.add_argument("--vmem-budget", type=int, default=None,
+                         "analytic kernel plan table; may carry 'vmem' "
+                         "(budget overrides) and 'layers' (per-layer plan "
+                         "overrides) entries")
+    ap.add_argument("--vmem-budget", type=vmem_budget_arg, default=None,
                     help="override the kernel VMEM working-set budgets "
-                         "(bytes) used by plan resolution — both the fused "
-                         "single-kernel budget and the chained prologue "
-                         "budget; applied after --block-table, so the CLI "
-                         "wins.  Use to probe real-TPU ceilings.")
+                         "(positive bytes) used by plan resolution — both "
+                         "the fused single-kernel budget and the chained "
+                         "prologue budget; applied after --block-table, so "
+                         "the CLI wins.  Use to probe real-TPU ceilings.")
     args = ap.parse_args()
 
     import jax
@@ -44,16 +61,11 @@ def main():
     from repro.models.config import reduced as reduce_cfg
     from repro.serve.engine import Request, ServeEngine
 
-    if args.block_table or args.vmem_budget is not None:
-        from repro.kernels import ops
-
-        if args.block_table:
-            ops.load_block_table(args.block_table)
-            print(f"loaded kernel plan table from {args.block_table}")
-        if args.vmem_budget is not None:
-            ops.set_vmem_budgets(fused=args.vmem_budget,
-                                 prologue=args.vmem_budget)
-            print(f"kernel VMEM budgets set to {args.vmem_budget} bytes")
+    ctx = build_context(args.block_table, args.vmem_budget)
+    if args.block_table:
+        print(f"loaded kernel plan table from {args.block_table}")
+    if args.vmem_budget is not None:
+        print(f"kernel VMEM budgets set to {args.vmem_budget} bytes")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -73,7 +85,7 @@ def main():
         print("serving the W4A4+LRC quantized model")
 
     eng = ServeEngine(cfg, params, batch_slots=args.slots, max_seq=args.max_seq,
-                      kernel_impl=args.impl)
+                      kernel_impl=args.impl, ctx=ctx)
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         eng.submit(Request(

@@ -63,8 +63,11 @@ def collect_stats(acts, spec_a: QuantSpec, pre_rot: bool = False):
     return finalize_stats(st)
 
 
-def solve_site(w, stats, policy: QuantPolicy, pre_rot: bool = False) -> QLinear:
-    """w: model-layout (d_in, d_out).  Solves Ŵ, (U, V) per the policy."""
+def solve_site(w, stats, policy: QuantPolicy, pre_rot: bool = False,
+               name: str = None) -> QLinear:
+    """w: model-layout (d_in, d_out).  Solves Ŵ, (U, V) per the policy.
+    ``name`` tags the QLinear (static metadata) so per-layer plan overrides
+    in a KernelContext can target it by layer name."""
     w_paper = jnp.asarray(w, jnp.float64).T  # (d_out, d_in)
     spec_w = QuantSpec(bits=policy.bits)
     k = policy.rank(w.shape[0], w.shape[1])
@@ -90,6 +93,7 @@ def solve_site(w, stats, policy: QuantPolicy, pre_rot: bool = False) -> QLinear:
         act_group=policy.act_group,
         clip_ratio=policy.clip_ratio,
         impl=policy.impl,
+        name=name,
     )
 
 
@@ -111,7 +115,8 @@ def _dense_layer_walk(cfg, lp, x, positions, mask, policy):
     st = collect_stats(h, spec_a)
     qattn = {}
     for name in ("wq", "wk", "wv"):
-        qattn[name] = solve_site(lp["attn"][name], st, policy)
+        qattn[name] = solve_site(lp["attn"][name], st, policy,
+                                 name=f"attn/{name}")
 
     # attention with the QUANTIZED projections (deployment-faithful stream)
     b, s, _ = x.shape
@@ -125,20 +130,20 @@ def _dense_layer_walk(cfg, lp, x, positions, mask, policy):
     pre_o = attention(q, k, v, mask, 1.0 / (hd**0.5)).reshape(b, s, hh * hd)
 
     st_o = collect_stats(pre_o, spec_a)
-    qattn["wo"] = solve_site(lp["attn"]["wo"], st_o, policy)
+    qattn["wo"] = solve_site(lp["attn"]["wo"], st_o, policy, name="attn/wo")
     x = x + apply_linear(qattn["wo"], pre_o)
 
     h2 = rms_norm(x, lp["mlp_norm"], cfg.norm_eps)
     st2 = collect_stats(h2, spec_a)
     qmlp = {
-        "wg": solve_site(lp["mlp"]["wg"], st2, policy),
-        "wu": solve_site(lp["mlp"]["wu"], st2, policy),
+        "wg": solve_site(lp["mlp"]["wg"], st2, policy, name="mlp/wg"),
+        "wu": solve_site(lp["mlp"]["wu"], st2, policy, name="mlp/wu"),
     }
     g = apply_linear(qmlp["wg"], h2)
     u = apply_linear(qmlp["wu"], h2)
     hidden = (jax.nn.silu(g) if cfg.act == "silu" else jax.nn.gelu(g, approximate=True)) * u
     st3 = collect_stats(hidden, spec_a)
-    qmlp["wd"] = solve_site(lp["mlp"]["wd"], st3, policy)
+    qmlp["wd"] = solve_site(lp["mlp"]["wd"], st3, policy, name="mlp/wd")
     x = x + apply_linear(qmlp["wd"], hidden)
 
     qlp = dict(lp)

@@ -22,10 +22,13 @@ Weight layout in models is (d_in, d_out) with ``y = x @ w``; the LRC solver's
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import TYPE_CHECKING, Optional
 
 import jax
 import jax.numpy as jnp
+
+if TYPE_CHECKING:  # import-light: the kernel stack loads lazily at apply
+    from repro.kernels.context import KernelContext
 
 from repro.core.quantizers import (
     QuantSpec,
@@ -55,6 +58,15 @@ class QLinear:
     act_group: Optional[int] = _static(default=None)
     clip_ratio: float = _static(default=1.0)
     impl: str = _static(default="int8")  # sim | int8 | pallas | fused
+    # Kernel execution config: an immutable (hashable) KernelContext rides
+    # as pytree-static metadata, so two models in one process can hold
+    # different block tables / VMEM budgets without racing any global.
+    # None -> the process-default context (repro.kernels.ops.default_context).
+    ctx: Optional["KernelContext"] = _static(default=None)
+    # Layer name (e.g. the param-tree path) keying per-layer plan overrides
+    # in ctx.overrides; None disables name-based lookup (shape-based
+    # (K, N, R) overrides still apply).
+    name: Optional[str] = _static(default=None)
 
     @property
     def d_in(self) -> int:
@@ -82,6 +94,8 @@ def make_qlinear(
     clip_ratio: float = 1.0,
     impl: str = "sim",
     lr_dtype=jnp.bfloat16,
+    ctx: Optional["KernelContext"] = None,
+    name: Optional[str] = None,
 ) -> QLinear:
     q_in_out = jnp.asarray(q_out_in, jnp.int8).T  # (d_in, d_out)
     packed = pack_int4(q_in_out.T).T  # pack along d_in
@@ -94,6 +108,8 @@ def make_qlinear(
         act_group=act_group,
         clip_ratio=clip_ratio,
         impl=impl,
+        ctx=ctx,
+        name=name,
     )
 
 
@@ -141,10 +157,13 @@ def _apply_int8(q: QLinear, x: jnp.ndarray) -> jnp.ndarray:
 
 
 def _apply_pallas(q: QLinear, x: jnp.ndarray,
-                  kernel_impl: str = "auto") -> jnp.ndarray:
-    """Pallas kernel paths: ``auto`` follows the plan table (single-kernel
-    fused forward where the working set fits VMEM, prologue → GEMM chain
-    otherwise); ``fused`` pins the single-kernel path.
+                  kernel_impl: Optional[str] = None) -> jnp.ndarray:
+    """Pallas kernel paths.  Execution config comes from the layer's
+    KernelContext (``q.ctx``; None -> the process default) with any
+    per-layer plan override keyed by ``q.name`` or the layer's (K, N, R)
+    shape.  ``kernel_impl=None`` defers to ``ctx.impl`` (usually "auto":
+    the plan table with VMEM feasibility); ``"fused"`` pins the
+    single-kernel path.
 
     Precision note: the kernels compute the (xV)Uᵀ correction in f32 VMEM
     from the (bf16-stored) factors, so outputs differ from the int8 path —
@@ -156,7 +175,7 @@ def _apply_pallas(q: QLinear, x: jnp.ndarray,
     x2 = x.reshape(-1, x.shape[-1])
     y = ops.w4a4_lrc_forward(
         x2, q.qweight, q.w_scale, q.u, q.v, act_spec=q.act_spec,
-        impl=kernel_impl,
+        impl=kernel_impl, ctx=q.ctx, layer=q.name,
     )
     return y.reshape(*lead, q.d_out).astype(x.dtype)
 
@@ -171,7 +190,7 @@ def qlinear_apply(q: QLinear, x: jnp.ndarray) -> jnp.ndarray:
             # the fused kernels emit per-token scales only; group-wise
             # calibrated layers (paper Table 2) run the int8 grouped GEMM
             return _apply_int8(q, x)
-        return _apply_pallas(q, x, "auto" if q.impl == "pallas" else "fused")
+        return _apply_pallas(q, x, None if q.impl == "pallas" else "fused")
     raise ValueError(f"unknown impl {q.impl!r}")
 
 
@@ -182,15 +201,36 @@ def apply_linear(w, x: jnp.ndarray) -> jnp.ndarray:
     return x @ w.astype(x.dtype)
 
 
-def retag_qlinear_impl(params, impl: str):
+RETAG_IMPLS = ("sim", "int8", "pallas", "fused", "auto")
+
+
+def retag_qlinear_impl(params, impl: Optional[str],
+                       ctx: Optional["KernelContext"] = None):
     """Switch every QLinear leaf in a param tree to another execution path
     (e.g. the serving engine retags to "pallas" so decode runs the fused
-    kernels).  Non-QLinear leaves pass through unchanged."""
-    assert impl in ("sim", "int8", "pallas", "fused"), impl
+    kernels) and/or attach a :class:`KernelContext`.  Non-QLinear leaves
+    pass through unchanged.
+
+    ``impl`` must be one of ``sim | int8 | pallas | fused | auto``, or None
+    to leave every leaf's impl untouched (ctx-only attach) — typos raise
+    ValueError instead of silently tagging an unusable impl.  ``"auto"``
+    resolves at retag time: "pallas" when a compiled backend is attached,
+    otherwise each leaf keeps its calibrated impl (the pallas interpreter
+    would only slow CPU reference semantics down).  ``ctx`` is attached to
+    every leaf when given (None leaves contexts unchanged)."""
+    if impl is not None and impl not in RETAG_IMPLS:
+        raise ValueError(f"unknown impl {impl!r}; "
+                         f"expected one of {RETAG_IMPLS}")
+    resolved = impl
+    if impl == "auto":
+        resolved = "pallas" if jax.default_backend() != "cpu" else None
 
     def _retag(leaf):
         if isinstance(leaf, QLinear):
-            return dataclasses.replace(leaf, impl=impl)
+            changes = {} if resolved is None else {"impl": resolved}
+            if ctx is not None:
+                changes["ctx"] = ctx
+            return dataclasses.replace(leaf, **changes) if changes else leaf
         return leaf
 
     return jax.tree.map(_retag, params,

@@ -37,6 +37,7 @@ def quantize_shell(params, policy: QuantPolicy):
             act_group=policy.act_group,
             clip_ratio=policy.clip_ratio,
             impl=policy.impl,
+            name=ps,  # per-layer KernelContext overrides key on this
         )
 
     return jax.tree_util.tree_map_with_path(convert, params)

@@ -40,7 +40,7 @@ class Request:
 class ServeEngine:
     def __init__(self, cfg, params, batch_slots: int = 4, max_seq: int = 256,
                  eos_id: Optional[int] = None, seed: int = 0,
-                 kernel_impl: Optional[str] = "auto"):
+                 kernel_impl: Optional[str] = "auto", ctx=None):
         assert cfg.family in ("dense", "vlm", "ssm", "hybrid", "moe"), cfg.family
         # Decode runs W4A4+LRC through the pallas kernels (single-kernel
         # fused forward at decode/mixed shapes, prologue→GEMM chain past the
@@ -48,12 +48,19 @@ class ServeEngine:
         # the calibrated impl on CPU where the pallas interpreter would only
         # slow the reference semantics down.  Pass an explicit impl
         # ("fused"/"pallas"/"int8"/"sim") to force a path.
-        if kernel_impl == "auto":
-            kernel_impl = "pallas" if jax.default_backend() != "cpu" else None
-        if kernel_impl is not None:
+        #
+        # ``ctx`` is this engine's KernelContext (block table, VMEM budgets,
+        # default kernel path, per-layer plan overrides).  It is attached to
+        # every QLinear leaf as pytree-static metadata, so two engines in
+        # one process can serve under DIFFERENT plan tables/budgets without
+        # touching any global; None uses the process-default context.
+        # kernel_impl=None attaches the ctx WITHOUT touching the calibrated
+        # impls.
+        if kernel_impl is not None or ctx is not None:
             from repro.quant.qlinear import retag_qlinear_impl
 
-            params = retag_qlinear_impl(params, kernel_impl)
+            params = retag_qlinear_impl(params, kernel_impl, ctx=ctx)
+        self.ctx = ctx
         self.cfg = cfg
         self.params = params
         self.b = batch_slots

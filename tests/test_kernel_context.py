@@ -1,0 +1,507 @@
+"""The KernelContext execution-config API (PR 4 acceptance):
+
+  * two contexts with different block tables AND VMEM budgets resolve
+    DIFFERENT plans for the same shape in one process — no globals race;
+  * all three kernel paths stay bitwise identical under any context at a
+    fixed tiling;
+  * from_json round-trips: malformed tables, partial entries, the reserved
+    "vmem" key, the "layers" override table, and override precedence
+    (override > table > defaults);
+  * hashability / pytree-static QLinear metadata;
+  * --vmem-budget CLI validation in serve.py and autotune_blocks.py;
+  * the deprecation shims warn and the new API path never touches them.
+"""
+
+import dataclasses
+import json
+import subprocess
+import sys
+import warnings
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from benchmarks.common import make_w4a4_problem as _problem
+from repro.kernels import ops
+from repro.kernels.context import (KernelContext, Plan, gemm_regime,
+                                   vmem_budget_arg)
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+# ---------------------------------------------------------------------------
+# value semantics: construction, builders, hashability
+# ---------------------------------------------------------------------------
+
+
+def test_default_context_is_value_equal_and_hashable():
+    a = KernelContext()
+    b = KernelContext.default()
+    assert a == b and hash(a) == hash(b)
+    assert a.table() == b.table()
+    c = a.with_vmem_budgets(fused=1 << 20)
+    assert c != a and a.fused_vmem_bytes != c.fused_vmem_bytes
+    # builders never mutate the receiver
+    assert a == KernelContext()
+    d = {a: "x", c: "y"}  # usable as dict keys / static jit args
+    assert d[KernelContext()] == "x"
+
+
+def test_with_builders_validate():
+    ctx = KernelContext()
+    assert ctx.with_impl("fused").impl == "fused"
+    assert ctx.with_interpret(True).interpret_mode() is True
+    assert ctx.with_interpret(False).interpret_mode() is False
+    with pytest.raises(ValueError, match="unknown impl"):
+        ctx.with_impl("warp")
+    with pytest.raises(ValueError, match="unknown regime"):
+        ctx.with_block_table({"decoed": dict(path="fused", bm=8, bn=128,
+                                             bk=128)})
+    with pytest.raises(ValueError, match="override key"):
+        ctx.with_layer_overrides({1.5: {"bm": 8}})
+    with pytest.raises(ValueError, match="unknown plan keys"):
+        ctx.with_layer_overrides({"l": {"bq": 8}})
+    with pytest.raises(ValueError, match="is empty"):
+        ctx.with_layer_overrides({"l": {}})
+
+
+def test_two_contexts_resolve_differently_in_one_process():
+    """THE acceptance property: different block tables + budgets in one
+    process resolve different plans for the same (M, K, N, R), with no
+    global state involved."""
+    m, k, n, r = 16, 4096, 11008, 128
+    a = KernelContext()
+    b = (KernelContext()
+         .with_block_table({"decode": dict(path="chained", bm=8, bn=128,
+                                           bk=128, br=128)})
+         .with_vmem_budgets(fused=1 << 20, prologue=1 << 20))
+    pa = a.resolve_plan(m, k, n, r, rotate=True)
+    pb = b.resolve_plan(m, k, n, r, rotate=True)
+    assert pa.path == "fused"
+    assert pb.path == "chained"
+    assert pa != pb
+    # interleaved resolution (as two engines would) stays stable
+    assert a.resolve_plan(m, k, n, r, rotate=True) == pa
+    assert b.resolve_plan(m, k, n, r, rotate=True) == pb
+    # and the module-level entry points honor ctx= identically
+    assert ops.resolve_plan(m, k, n, r, rotate=True, ctx=a) == pa
+    assert ops.resolve_plan(m, k, n, r, rotate=True, ctx=b) == pb
+
+
+def test_select_plan_returns_plan_namedtuple():
+    p = ops.select_plan(16, 4096, 11008, 128)
+    assert isinstance(p, Plan)
+    assert p.path == "fused" and p.bm <= 16
+    assert ops.select_blocks(16, 4096, 11008, 128) == p
+    assert gemm_regime(16) == "decode"
+
+
+# ---------------------------------------------------------------------------
+# bitwise parity under any context at a fixed tiling (acceptance)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("ctxkw", [
+    {},
+    {"fused_vmem_bytes": 1 << 20, "prologue_vmem_bytes": 1 << 20},
+    {"block_table": {"decode": dict(path="chained", bm=8, bn=32, bk=64,
+                                    br=8)}},
+])
+def test_paths_bitwise_identical_under_any_context(rng, ctxkw):
+    """The context only picks the tiling; at a FIXED tiling the three paths
+    are bitwise identical whatever context they run under."""
+    m, k, n, r = 16, 128, 64, 8
+    spec, x, wp, s, u, v = _problem(rng, m, k, n, r)
+    ctx = KernelContext(**ctxkw)
+    blocks = (8, 32, 64, 8)
+    outs = [np.asarray(ops.w4a4_lrc_forward(x, wp, s, u, v, spec,
+                                            rotate=True, blocks=blocks,
+                                            impl=impl, ctx=ctx))
+            for impl in ("fused", "chained", "unfused")]
+    np.testing.assert_array_equal(outs[0], outs[1])
+    np.testing.assert_array_equal(outs[0], outs[2])
+    # and identical to the default-context bits at the same tiling
+    base = np.asarray(ops.w4a4_lrc_forward(x, wp, s, u, v, spec,
+                                           rotate=True, blocks=blocks,
+                                           impl="fused"))
+    np.testing.assert_array_equal(outs[0], base)
+
+
+def test_ctx_impl_sets_default_path(rng):
+    """ctx.impl is the default when the caller passes impl=None."""
+    spec, x, wp, s, u, v = _problem(rng, 8, 64, 32, 0)
+    want = np.asarray(ops.w4a4_lrc_forward(x, wp, s, u, v, spec,
+                                           impl="unfused"))
+    got = np.asarray(ops.w4a4_lrc_forward(
+        x, wp, s, u, v, spec, ctx=KernelContext().with_impl("unfused")))
+    np.testing.assert_array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# from_json round-trip: vmem, layers, partial entries, precedence
+# ---------------------------------------------------------------------------
+
+
+def test_from_json_full_roundtrip(tmp_path):
+    table = {
+        "decode": dict(path="chained", bm=8, bn=128, bk=128, br=128,
+                       score_us=12.3),  # extra autotune keys are dropped
+        "vmem": dict(fused_bytes_max=4 << 20, prologue_bytes_max=2 << 20),
+        "layers": {
+            "mlp/wd": dict(path="fused", bm=8),
+            "4096x11008r128": dict(bn=128),
+        },
+    }
+    p = tmp_path / "t.json"
+    p.write_text(json.dumps(table))
+    ctx = KernelContext.from_json(p)
+    assert ctx.fused_vmem_bytes == 4 << 20
+    assert ctx.prologue_vmem_bytes == 2 << 20
+    assert ctx.table_entry("decode")["path"] == "chained"
+    assert "score_us" not in ctx.table_entry("decode")
+    # unlisted regimes keep the analytic defaults
+    assert ctx.table_entry("mixed") == KernelContext().table_entry("mixed")
+    assert ctx.layer_overrides()["mlp/wd"] == dict(path="fused", bm=8)
+    # re-serialize what from_json read back in -> equal context
+    assert KernelContext.from_json(p) == ctx
+    # extra changes kwargs apply on top
+    assert KernelContext.from_json(p, impl="chained").impl == "chained"
+
+
+def test_from_json_committed_table_loads():
+    ctx = KernelContext.from_json(REPO / "results" / "block_table.json")
+    for regime in ("decode", "mixed", "prefill"):
+        assert ctx.table_entry(regime)["path"] == "fused"
+
+
+@pytest.mark.parametrize("table,msg", [
+    ({"vmem": {"fused_bytes_max": 0}}, "positive int"),
+    ({"vmem": {"hbm_bytes_max": 1}}, "unknown vmem budget"),
+    ({"layers": [1]}, "'layers' entry"),
+    ({"layers": {"l": {"bm": "8"}}}, "positive integer"),
+    ({"layers": {"l": {"path": "warp"}}}, "unknown kernel path"),
+    ({"layers": {"l": {"variant": "laminar"}}}, "unknown prologue variant"),
+    ({"layers": {"l": {}}}, "is empty"),
+    ({"decode": {"path": "fused", "bm": 8}}, "missing keys"),  # partial
+    ({"decode": {"path": "fused", "bm": 8, "bn": 128, "bk": 128,
+                 "variant": "steamed"}}, "unknown prologue variant"),
+])
+def test_from_json_malformed(tmp_path, table, msg):
+    p = tmp_path / "bad.json"
+    p.write_text(json.dumps(table))
+    with pytest.raises(ValueError, match=msg):
+        KernelContext.from_json(p)
+
+
+def test_from_json_missing_file():
+    with pytest.raises(ValueError, match="cannot read block table"):
+        KernelContext.from_json("/nonexistent/block_table.json")
+
+
+def test_layer_override_precedence():
+    """override > table > defaults, keyed by name, shape triple, or the
+    'KxNrR' string spelling; unknown layers fall back to the table."""
+    base = KernelContext().with_block_table(
+        {"decode": dict(path="chained", bm=16, bn=256, bk=256, br=128)})
+    ctx = base.with_layer_overrides({
+        "mlp/wd": dict(path="fused", bm=8),
+        (4096, 11008, 128): dict(bn=128),
+    })
+    # name override wins over the table entry; unset keys inherit from it
+    p = ctx.select_plan(16, 4096, 11008, 128, layer="mlp/wd")
+    assert (p.path, p.bm, p.bn) == ("fused", 8, 256)
+    # shape override applies when no name matches
+    p = ctx.select_plan(16, 4096, 11008, 128, layer="attn/wq")
+    assert (p.path, p.bn) == ("chained", 128)
+    p = ctx.select_plan(16, 4096, 11008, 128)  # no layer given: shape only
+    assert p.bn == 128
+    # neither name nor shape: pure table
+    p = ctx.select_plan(16, 512, 512, 0, layer="nope")
+    assert (p.path, p.bm) == ("chained", 16)
+    # name lookup beats shape lookup
+    p2 = ctx.select_plan(16, 4096, 11008, 128, layer="mlp/wd")
+    assert p2.path == "fused"
+    # string spelling of the shape key round-trips through JSON
+    ctx2 = base.with_layer_overrides({"4096x11008r128": dict(bn=128)})
+    assert ctx2.select_plan(16, 4096, 11008, 128).bn == 128
+
+
+def test_variant_pin_constrains_but_never_bypasses_feasibility():
+    """A table/override variant pin restricts the variant search; tiles
+    still shrink to fit the budget and rotation still forces resident."""
+    from repro.kernels.context import fused_vmem_bytes
+
+    big = dict(path="fused", bm=256, bn=256, bk=512, br=512,
+               variant="resident")
+    k, r = 8192, 1024
+    ctx = (KernelContext()
+           .with_block_table({"decode": big})
+           .with_vmem_budgets(fused=3 << 20))
+    sel = ctx.select_plan(16, k, 11008, r)
+    assert fused_vmem_bytes(k, r, sel.bm, sel.bn, sel.bk, sel.br, True) \
+        > ctx.fused_vmem_bytes  # selected tiles are infeasible as-is
+    plan = ctx.resolve_plan(16, k, 11008, r, rotate=True)
+    assert (plan.bm, plan.bn, plan.bk, plan.br) != \
+        (sel.bm, sel.bn, sel.bk, sel.br)  # shrink-to-fit ran despite the pin
+    assert plan.path == "fused" and plan.variant == "resident"
+    assert fused_vmem_bytes(k, r, plan.bm, plan.bn, plan.bk, plan.br,
+                            True) <= ctx.fused_vmem_bytes
+    # a streamed pin under rotation falls back to the resident slab
+    ctx2 = ctx.with_layer_overrides({"l": dict(variant="streamed")})
+    p2 = ctx2.resolve_plan(16, k, 11008, r, rotate=True, layer="l")
+    assert p2.variant == "resident"
+    # without rotation the pin holds (and still fits)
+    p3 = ctx2.resolve_plan(16, k, 11008, r, rotate=False, layer="l")
+    assert p3.path == "fused" and p3.variant == "streamed"
+    # an unfittable pin demotes instead of launching an infeasible kernel
+    tiny = ctx2.with_vmem_budgets(fused=0)
+    assert tiny.resolve_plan(16, k, 11008, r, layer="l").path != "fused"
+
+
+def test_layer_override_flows_through_resolve_and_forward(rng):
+    """A per-layer chained pin actually changes execution (still bitwise
+    identical output) through w4a4_lrc_forward's layer=."""
+    m, k, n, r = 16, 128, 64, 8
+    ctx = KernelContext().with_layer_overrides(
+        {"mlp/wd": dict(path="chained")})
+    assert ctx.resolve_plan(m, k, n, r, layer="mlp/wd").path == "chained"
+    assert ctx.resolve_plan(m, k, n, r).path == "fused"
+    spec, x, wp, s, u, v = _problem(rng, m, k, n, r)
+    a = np.asarray(ops.w4a4_lrc_forward(x, wp, s, u, v, spec, ctx=ctx,
+                                        layer="mlp/wd"))
+    b = np.asarray(ops.w4a4_lrc_forward(x, wp, s, u, v, spec, ctx=ctx))
+    np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# explain(): plan introspection
+# ---------------------------------------------------------------------------
+
+
+def test_explain_reports_all_regimes():
+    ctx = KernelContext()
+    report = ctx.explain(16, 4096, 11008, 128, rotate=True)
+    for needle in ("decode", "mixed", "prefill", "fused", "variant=resident",
+                   "fits", "12.0 MiB", "*[decode"):
+        assert needle in report, needle
+
+
+def test_explain_shows_override_and_demotion():
+    ctx = (KernelContext()
+           .with_vmem_budgets(fused=0, prologue=0)
+           .with_layer_overrides({"mlp/wd": dict(bm=8)}))
+    report = ctx.explain(16, 4096, 11008, 128, rotate=True, layer="mlp/wd")
+    assert "layer override" in report
+    assert "unfused" in report  # zero budgets demote everything
+    assert "layer='mlp/wd'" in report
+
+
+# ---------------------------------------------------------------------------
+# QLinear carries the context as pytree-static metadata
+# ---------------------------------------------------------------------------
+
+
+def test_qlinear_ctx_is_static_and_respected(rng):
+    from repro.quant.qlinear import make_qlinear, qlinear_apply
+
+    d_in, d_out, r = 64, 32, 8
+    q = jnp.asarray(rng.integers(-8, 8, (d_out, d_in)), jnp.int8)
+    s = jnp.asarray(rng.uniform(0.01, 0.1, (d_out, 1)), jnp.float32)
+    u = jnp.asarray(rng.standard_normal((d_out, r)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((d_in, r)), jnp.float32)
+    ctx_a = KernelContext()
+    ctx_b = KernelContext().with_vmem_budgets(fused=0)  # pins chained
+    qa = make_qlinear(q, s, u, v, impl="pallas", lr_dtype=jnp.float32,
+                      ctx=ctx_a, name="mlp/wd")
+    qb = dataclasses.replace(qa, ctx=ctx_b)
+    # static metadata: flatten/unflatten round-trips the ctx
+    leaves, treedef = jax.tree_util.tree_flatten(qa)
+    assert jax.tree_util.tree_unflatten(treedef, leaves).ctx == ctx_a
+    # both contexts execute (different plans) and agree bitwise
+    x = jnp.asarray(rng.standard_normal((8, d_in)), jnp.float32)
+    ya = np.asarray(qlinear_apply(qa, x))
+    yb = np.asarray(qlinear_apply(qb, x))
+    np.testing.assert_array_equal(ya, yb)
+    # jit with the QLinear as a pytree arg: ctx rides as static metadata
+    f = jax.jit(qlinear_apply)
+    np.testing.assert_array_equal(np.asarray(f(qa, x)), ya)
+    np.testing.assert_array_equal(np.asarray(f(qb, x)), yb)
+
+
+def test_retag_attaches_ctx_and_validates():
+    from repro.quant.qlinear import make_qlinear, retag_qlinear_impl
+
+    q = jnp.asarray(np.zeros((16, 32)), jnp.int8)
+    s = jnp.ones((16, 1), jnp.float32)
+    tree = {"a": make_qlinear(q, s, impl="sim"), "w": jnp.ones((2, 2))}
+    ctx = KernelContext().with_impl("chained")
+    out = retag_qlinear_impl(tree, "fused", ctx=ctx)
+    assert out["a"].impl == "fused" and out["a"].ctx == ctx
+    # "auto" on CPU keeps the calibrated impl but still attaches the ctx
+    out = retag_qlinear_impl(tree, "auto", ctx=ctx)
+    assert out["a"].impl == "sim" and out["a"].ctx == ctx
+    # impl=None: ctx-only attach, calibrated impls untouched on ANY backend
+    out = retag_qlinear_impl(tree, None, ctx=ctx)
+    assert out["a"].impl == "sim" and out["a"].ctx == ctx
+    for bad in ("warp", "fussed", "PALLAS", ""):
+        with pytest.raises(ValueError, match="unknown impl"):
+            retag_qlinear_impl(tree, bad)
+
+
+def test_serve_engine_accepts_ctx(rng):
+    """Two engines with different contexts coexist; decode produces tokens
+    under both and no process-global kernel state changes."""
+    from repro.configs import get_config
+    from repro.models import model as model_lib
+    from repro.models.config import reduced
+    from repro.serve.engine import Request, ServeEngine
+
+    cfg = reduced(get_config("smollm-135m"))
+    params = model_lib.init_params(cfg, jax.random.PRNGKey(0))
+    before = ops.default_context()
+    ctx_a = KernelContext()
+    ctx_b = KernelContext().with_vmem_budgets(fused=1 << 20)
+    engines = [ServeEngine(cfg, params, batch_slots=1, max_seq=32,
+                           kernel_impl=None, ctx=c) for c in (ctx_a, ctx_b)]
+    outs = []
+    for eng in engines:
+        eng.submit(Request(rid=0, prompt=np.arange(4, dtype=np.int32),
+                           max_new_tokens=2))
+        done = eng.run(max_steps=8)
+        outs.append(done[0].out_tokens)
+    assert outs[0] == outs[1] and len(outs[0]) >= 2
+    assert ops.default_context() == before
+
+
+# ---------------------------------------------------------------------------
+# CLI: --vmem-budget validation (serve.py + autotune_blocks.py)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bad", ["-1", "0", "12MB", "1.5", ""])
+def test_vmem_budget_arg_rejects(bad):
+    import argparse
+
+    with pytest.raises(argparse.ArgumentTypeError,
+                       match="positive integer number of bytes"):
+        vmem_budget_arg(bad)
+    assert vmem_budget_arg("4096") == 4096
+
+
+@pytest.mark.parametrize("module", ["repro.launch.serve",
+                                    "benchmarks.autotune_blocks"])
+def test_cli_rejects_bad_vmem_budget(module):
+    """Both CLIs exit with a clear argparse error on a non-positive or
+    non-integer --vmem-budget, before any model/sweep work starts."""
+    import os
+
+    env = dict(os.environ)
+    env["PYTHONPATH"] = f"{REPO / 'src'}" + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    env["JAX_PLATFORMS"] = "cpu"
+    for bad in ("-5", "huge"):
+        proc = subprocess.run(
+            [sys.executable, "-m", module, "--vmem-budget", bad],
+            capture_output=True, text=True, timeout=120, cwd=REPO, env=env,
+        )
+        assert proc.returncode == 2, proc.stderr
+        assert "positive integer number of bytes" in proc.stderr
+
+
+def test_serve_build_context_maps_flags(tmp_path):
+    from repro.launch.serve import build_context
+
+    assert build_context(None, None) is None
+    ctx = build_context(None, 4096)
+    assert ctx.fused_vmem_bytes == 4096 and ctx.prologue_vmem_bytes == 4096
+    p = tmp_path / "t.json"
+    p.write_text(json.dumps({
+        "decode": dict(path="chained", bm=8, bn=128, bk=128, br=128),
+        "vmem": dict(fused_bytes_max=123, prologue_bytes_max=456),
+    }))
+    ctx = build_context(str(p), None)
+    assert ctx.table_entry("decode")["path"] == "chained"
+    assert ctx.fused_vmem_bytes == 123
+    # the CLI budget wins over the table's vmem entry
+    ctx = build_context(str(p), 789)
+    assert ctx.fused_vmem_bytes == 789 and ctx.prologue_vmem_bytes == 789
+    # the shared helper also maps --impl (roofline CLI)
+    from repro.kernels.context import context_from_flags
+
+    assert context_from_flags() is None
+    assert context_from_flags(impl="chained").impl == "chained"
+
+
+# ---------------------------------------------------------------------------
+# deprecation shims + state isolation
+# ---------------------------------------------------------------------------
+
+
+def test_shims_warn_but_new_api_is_silent(tmp_path):
+    p = tmp_path / "t.json"
+    p.write_text(json.dumps(
+        {"decode": dict(path="chained", bm=8, bn=128, bk=128, br=128)}))
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        # the NEW api path must never trip the shims
+        ctx = KernelContext.from_json(p)
+        ctx.resolve_plan(16, 4096, 11008, 128, rotate=True)
+        ops.resolve_plan(16, 4096, 11008, 128, ctx=ctx)
+        ops.set_default_context(None)
+    with pytest.deprecated_call(match="load_block_table"):
+        got = ops.load_block_table(p)
+    assert got["decode"]["path"] == "chained"
+    assert ops.select_plan(16, 4096, 11008, 128).path == "chained"
+    with pytest.deprecated_call(match="set_vmem_budgets"):
+        ops.set_vmem_budgets(fused=777)
+    # a table without "vmem" keeps previously-set budgets (old semantics)
+    with pytest.deprecated_call(match="load_block_table"):
+        ops.load_block_table(p)
+    assert ops.fused_vmem_budget() == 777
+    # ... per KEY: a partial "vmem" entry must not reset the other budget
+    with pytest.deprecated_call(match="set_vmem_budgets"):
+        ops.set_vmem_budgets(prologue=123456)
+    p2 = p.parent / "t2.json"
+    p2.write_text(json.dumps({"vmem": dict(fused_bytes_max=999)}))
+    with pytest.deprecated_call(match="load_block_table"):
+        ops.load_block_table(p2)
+    assert ops.fused_vmem_budget() == 999
+    assert ops.prologue_vmem_budget() == 123456
+    ops.reset_block_table()
+    assert ops.select_plan(16, 4096, 11008, 128).path == "fused"
+
+
+def test_load_block_table_shim_preserves_other_context_fields(tmp_path):
+    """The shim only owns the fields the old loader owned: impl, interpret
+    and existing layer overrides on the process default survive a load
+    (file 'layers' merge over them)."""
+    ops.set_default_context(
+        KernelContext()
+        .with_impl("fused")
+        .with_layer_overrides({"mlp/wd": dict(bm=8), "attn/wq": dict(bm=16)}))
+    p = tmp_path / "t.json"
+    p.write_text(json.dumps({
+        "decode": dict(path="chained", bm=8, bn=128, bk=128, br=128),
+        "layers": {"mlp/wd": dict(bm=32)},
+    }))
+    with pytest.deprecated_call(match="load_block_table"):
+        ops.load_block_table(p)
+    got = ops.default_context()
+    assert got.impl == "fused"
+    assert got.table_entry("decode")["path"] == "chained"
+    assert got.layer_overrides()["mlp/wd"] == dict(bm=32)  # file wins
+    assert got.layer_overrides()["attn/wq"] == dict(bm=16)  # survives
+
+
+def test_default_context_snapshot_restored_between_tests_a():
+    """Paired with ..._b below: mutate the default context here; the
+    autouse conftest fixture must restore it before the next test."""
+    ops.set_default_context(KernelContext().with_vmem_budgets(fused=1))
+    assert ops.fused_vmem_budget() == 1
+
+
+def test_default_context_snapshot_restored_between_tests_b():
+    assert ops.fused_vmem_budget() == ops._FUSED_VMEM_BYTES_MAX

@@ -13,14 +13,11 @@ import pytest
 
 from benchmarks.common import make_w4a4_problem as _problem
 from repro.kernels import ops, ref
+from repro.kernels.context import KernelContext
 from repro.kernels.fused_gemm import fused_w4a4_lrc_kernel
 
-
-@pytest.fixture(autouse=True)
-def _clean_block_table():
-    ops.reset_block_table()
-    yield
-    ops.reset_block_table()
+# (per-test isolation of the process-default KernelContext comes from the
+# autouse _kernel_state_guard fixture in conftest.py)
 
 
 
@@ -132,13 +129,15 @@ def test_v_bytes_boundary_bitwise_identical(rng, r):
     np.testing.assert_array_equal(outs["fused"], outs["auto"])
 
 
-def test_fused_vmem_gate_demotes_to_chain(rng, monkeypatch):
-    """With the fused working-set budget forced to zero, auto dispatch takes
-    the two-kernel chain — and the bits cannot change."""
+def test_fused_vmem_gate_demotes_to_chain(rng):
+    """With the fused working-set budget forced to zero (via an explicit
+    context — no global is touched), auto dispatch takes the two-kernel
+    chain — and the bits cannot change."""
     spec, x, wp, s, u, v = _problem(rng, 16, 128, 64, 8)
     want = np.asarray(ops.w4a4_lrc_forward(x, wp, s, u, v, spec))
-    monkeypatch.setattr(ops, "_FUSED_VMEM_BYTES_MAX", 0)
-    got = np.asarray(ops.w4a4_lrc_forward(x, wp, s, u, v, spec))
+    tight = KernelContext().with_vmem_budgets(fused=0)
+    assert tight.resolve_plan(16, 128, 64, 8).path == "chained"
+    got = np.asarray(ops.w4a4_lrc_forward(x, wp, s, u, v, spec, ctx=tight))
     np.testing.assert_array_equal(got, want)
 
 
@@ -174,20 +173,20 @@ def test_select_blocks_unknown_regime_raises():
         ops.select_blocks(16, 4096, 11008, 0)
 
 
-def test_load_block_table_roundtrip(tmp_path):
+def test_block_table_from_json_roundtrip(tmp_path):
     # no "br": pre-K-split tables stay loadable (br falls back to default)
     table = {"decode": {"path": "chained", "bm": 8, "bn": 128, "bk": 128,
                         "score_us": 1.0}}
     p = tmp_path / "block_table.json"
     p.write_text(json.dumps(table))
-    ops.load_block_table(p)
-    path, bm, bn, bk, br = ops.select_plan(16, 4096, 11008, 128)
-    assert (path, bm, bn, bk) == ("chained", 8, 128, 128)
-    assert br == 128  # default 512 clamped to the rank's pow2
+    ctx = KernelContext.from_json(p)
+    plan = ctx.select_plan(16, 4096, 11008, 128)
+    assert (plan.path, plan.bm, plan.bn, plan.bk) == ("chained", 8, 128, 128)
+    assert plan.br == 128  # default 512 clamped to the rank's pow2
     # unlisted regimes keep the analytic defaults
-    assert ops.select_plan(256, 4096, 11008, 128)[0] == "fused"
-    ops.reset_block_table()
-    assert ops.select_plan(16, 4096, 11008, 128)[0] == "fused"
+    assert ctx.select_plan(256, 4096, 11008, 128).path == "fused"
+    # the context is a value: the process default never saw the table
+    assert ops.select_plan(16, 4096, 11008, 128).path == "fused"
 
 
 @pytest.mark.parametrize("table,msg", [
@@ -197,13 +196,16 @@ def test_load_block_table_roundtrip(tmp_path):
      "unknown kernel path"),
     ({"decode": {"path": "fused", "bm": 8}}, "missing keys"),
 ])
-def test_load_block_table_rejects_malformed(tmp_path, table, msg):
+def test_block_table_rejects_malformed(tmp_path, table, msg):
     p = tmp_path / "bad.json"
     p.write_text(json.dumps(table))
     with pytest.raises(ValueError, match=msg):
+        KernelContext.from_json(p)
+    # the deprecated shim rejects identically and leaves no partial state
+    with pytest.raises(ValueError, match=msg), \
+            pytest.deprecated_call(match="load_block_table"):
         ops.load_block_table(p)
-    # a rejected table must not leave partial state behind
-    assert ops.select_plan(16, 4096, 11008, 128)[0] == "fused"
+    assert ops.select_plan(16, 4096, 11008, 128).path == "fused"
 
 
 def test_autotune_sweep_analytic(tmp_path):
@@ -216,7 +218,7 @@ def test_autotune_sweep_analytic(tmp_path):
     assert winners["decode"]["path"] == "fused"
     p = tmp_path / "table.json"
     p.write_text(json.dumps(winners))
-    ops.load_block_table(p)
+    KernelContext.from_json(p)
 
 
 # ---------------------------------------------------------------------------
@@ -250,8 +252,10 @@ def test_retag_to_fused(rng):
     s = jnp.ones((16, 1), jnp.float32)
     tree = {"a": make_qlinear(q, s, impl="sim")}
     assert retag_qlinear_impl(tree, "fused")["a"].impl == "fused"
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError, match="unknown impl"):
         retag_qlinear_impl(tree, "warp")
+    with pytest.raises(ValueError, match="unknown impl"):
+        retag_qlinear_impl(tree, "pallsa")  # typo must not tag silently
 
 
 def test_qlinear_fused_groupwise_falls_back_to_int8(rng):

@@ -13,6 +13,7 @@ import pytest
 
 from benchmarks.common import make_w4a4_problem as _problem
 from repro.kernels import ops
+from repro.kernels.context import KernelContext
 from repro.kernels.fused_gemm import fused_w4a4_lrc_kernel
 from repro.kernels.rowops import (
     fwht_cross_rows,
@@ -21,12 +22,8 @@ from repro.kernels.rowops import (
     project_rows_tiled,
 )
 
-
-@pytest.fixture(autouse=True)
-def _clean_block_table():
-    ops.reset_block_table()
-    yield
-    ops.reset_block_table()
+# (per-test isolation of the process-default KernelContext comes from the
+# autouse _kernel_state_guard fixture in conftest.py)
 
 
 # ---------------------------------------------------------------------------
@@ -123,15 +120,15 @@ def test_resolve_plan_acceptance_shape_stays_fused():
                                      plan.br, True) <= ops.fused_vmem_budget()
 
 
-def test_resolve_plan_shrinks_tiles_before_demoting(monkeypatch):
+def test_resolve_plan_shrinks_tiles_before_demoting():
     """A budget too small for the table tiles but big enough for smaller
     ones keeps the fused path with shrunk tiles."""
     full = ops.resolve_plan(2048, 8192, 11008, 1024, rotate=True)
     assert full.path == "fused"
     tight = ops._fused_vmem_bytes(8192, 1024, full.bm, full.bn, full.bk,
                                   full.br, True) - 1
-    monkeypatch.setattr(ops, "_FUSED_VMEM_BYTES_MAX", tight)
-    shrunk = ops.resolve_plan(2048, 8192, 11008, 1024, rotate=True)
+    ctx = KernelContext().with_vmem_budgets(fused=tight)
+    shrunk = ops.resolve_plan(2048, 8192, 11008, 1024, rotate=True, ctx=ctx)
     assert shrunk.path == "fused"
     assert (shrunk.bm, shrunk.bn, shrunk.bk, shrunk.br) != \
         (full.bm, full.bn, full.bk, full.br)
@@ -139,42 +136,43 @@ def test_resolve_plan_shrinks_tiles_before_demoting(monkeypatch):
                                  shrunk.bk, shrunk.br, True) <= tight
 
 
-def test_resolve_plan_streamed_variant_drops_row_slab(monkeypatch):
+def test_resolve_plan_streamed_variant_drops_row_slab():
     """rotate=False: when the resident f32 row slab cannot fit at any
     tiling, the streamed variant keeps the path fused."""
     resident_floor = ops._fused_vmem_bytes(8192, 0, 8, 128, 128, 128, True)
     streamed_floor = ops._fused_vmem_bytes(8192, 0, 8, 128, 128, 128, False)
     assert streamed_floor < resident_floor
-    monkeypatch.setattr(ops, "_FUSED_VMEM_BYTES_MAX", resident_floor - 1)
-    plan = ops.resolve_plan(2048, 8192, 11008, 0, rotate=False)
+    ctx = KernelContext().with_vmem_budgets(fused=resident_floor - 1)
+    plan = ctx.resolve_plan(2048, 8192, 11008, 0, rotate=False)
     assert plan.path == "fused" and plan.variant == "streamed"
     # rotation pins the resident slab -> that budget demotes to chained
-    plan_rot = ops.resolve_plan(2048, 8192, 11008, 0, rotate=True)
+    plan_rot = ctx.resolve_plan(2048, 8192, 11008, 0, rotate=True)
     assert plan_rot.path == "chained"
 
 
-def test_resolve_plan_demotion_ladder(monkeypatch):
-    monkeypatch.setattr(ops, "_FUSED_VMEM_BYTES_MAX", 0)
-    plan = ops.resolve_plan(16, 4096, 11008, 128, rotate=True)
+def test_resolve_plan_demotion_ladder():
+    ctx = KernelContext().with_vmem_budgets(fused=0)
+    plan = ctx.resolve_plan(16, 4096, 11008, 128, rotate=True)
     assert plan.path == "chained"
-    monkeypatch.setattr(ops, "_PROLOGUE_V_BYTES_MAX", 0)
-    plan = ops.resolve_plan(16, 4096, 11008, 128, rotate=True)
+    ctx = ctx.with_vmem_budgets(prologue=0)
+    plan = ctx.resolve_plan(16, 4096, 11008, 128, rotate=True)
     assert plan.path == "unfused"
 
 
-def test_auto_dispatch_shrunk_plan_executes(rng, monkeypatch):
+def test_auto_dispatch_shrunk_plan_executes(rng):
     """End to end: a tight budget shrinks the auto plan's tiles and the
     kernel still runs (results match the default-plan bits only within
     tolerance — a different bk legitimately reorders the xv accumulation)."""
     spec, x, wp, s, u, v = _problem(rng, 16, 256, 128, 40)
     want = np.asarray(ops.w4a4_lrc_forward(x, wp, s, u, v, spec,
                                            rotate=True))
-    need = ops._fused_vmem_bytes(
-        256, 40, *ops.resolve_plan(16, 256, 128, 40, rotate=True)[1:5], True)
-    monkeypatch.setattr(ops, "_FUSED_VMEM_BYTES_MAX", need - 1)
-    plan = ops.resolve_plan(16, 256, 128, 40, rotate=True)
+    d = ops.resolve_plan(16, 256, 128, 40, rotate=True)
+    need = ops._fused_vmem_bytes(256, 40, d.bm, d.bn, d.bk, d.br, True)
+    ctx = KernelContext().with_vmem_budgets(fused=need - 1)
+    plan = ctx.resolve_plan(16, 256, 128, 40, rotate=True)
     assert plan.path == "fused"
-    got = np.asarray(ops.w4a4_lrc_forward(x, wp, s, u, v, spec, rotate=True))
+    got = np.asarray(ops.w4a4_lrc_forward(x, wp, s, u, v, spec, rotate=True,
+                                          ctx=ctx))
     np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
 
 
@@ -197,24 +195,39 @@ def test_big_v_executes_fused_with_parity(rng):
 
 
 # ---------------------------------------------------------------------------
-# configurable VMEM budgets (set_vmem_budgets / block-table "vmem" entry)
+# configurable VMEM budgets (ctx.with_vmem_budgets / block-table "vmem"
+# entry) + the deprecated global-setter shims
 # ---------------------------------------------------------------------------
 
 
-def test_set_vmem_budgets_and_reset():
+def test_vmem_budget_builders_and_validation():
+    ctx = KernelContext().with_vmem_budgets(fused=1234567, prologue=7654321)
+    assert ctx.fused_vmem_bytes == 1234567
+    assert ctx.prologue_vmem_bytes == 7654321
+    # None leaves a budget untouched
+    assert ctx.with_vmem_budgets(fused=99).prologue_vmem_bytes == 7654321
+    with pytest.raises(ValueError, match="budget"):
+        KernelContext().with_vmem_budgets(fused=-1)
+    with pytest.raises(ValueError, match="budget"):
+        KernelContext().with_vmem_budgets(prologue="8MB")
+
+
+def test_set_vmem_budgets_shim_warns_and_resets():
+    """The deprecated global setter still works (one release) but warns,
+    and routes through the process-default context."""
     default = ops.fused_vmem_budget()
-    ops.set_vmem_budgets(fused=1234567, prologue=7654321)
+    with pytest.deprecated_call(match="set_vmem_budgets"):
+        ops.set_vmem_budgets(fused=1234567, prologue=7654321)
     assert ops.fused_vmem_budget() == 1234567
     assert ops.prologue_vmem_budget() == 7654321
     ops.reset_block_table()
     assert ops.fused_vmem_budget() == default
-    with pytest.raises(ValueError, match="budget"):
+    with pytest.raises(ValueError, match="budget"), \
+            pytest.deprecated_call(match="set_vmem_budgets"):
         ops.set_vmem_budgets(fused=-1)
-    with pytest.raises(ValueError, match="budget"):
-        ops.set_vmem_budgets(prologue="8MB")
 
 
-def test_load_block_table_vmem_entry(tmp_path):
+def test_block_table_vmem_entry(tmp_path):
     p = tmp_path / "table.json"
     p.write_text(json.dumps({
         "decode": {"path": "fused", "bm": 16, "bn": 256, "bk": 256,
@@ -222,14 +235,18 @@ def test_load_block_table_vmem_entry(tmp_path):
         "vmem": {"fused_bytes_max": 4 * 1024 * 1024,
                  "prologue_bytes_max": 2 * 1024 * 1024},
     }))
-    ops.load_block_table(p)
-    assert ops.fused_vmem_budget() == 4 * 1024 * 1024
-    assert ops.prologue_vmem_budget() == 2 * 1024 * 1024
+    ctx = KernelContext.from_json(p)
+    assert ctx.fused_vmem_bytes == 4 * 1024 * 1024
+    assert ctx.prologue_vmem_bytes == 2 * 1024 * 1024
     # the tighter budget flows into plan resolution
-    plan = ops.resolve_plan(16, 8192, 11008, 1024, rotate=True)
+    plan = ctx.resolve_plan(16, 8192, 11008, 1024, rotate=True)
     assert ops._fused_vmem_bytes(8192, 1024, plan.bm, plan.bn, plan.bk,
                                  plan.br, True) <= 4 * 1024 * 1024 \
         or plan.path != "fused"
+    # the deprecated loader shim lands the same budgets on the default ctx
+    with pytest.deprecated_call(match="load_block_table"):
+        ops.load_block_table(p)
+    assert ops.fused_vmem_budget() == 4 * 1024 * 1024
     ops.reset_block_table()
     assert ops.fused_vmem_budget() == ops._FUSED_VMEM_BYTES_MAX
 
@@ -248,13 +265,16 @@ def test_load_block_table_vmem_entry(tmp_path):
                  "br": True}}, "positive integer"),
     ({"decode": [16, 256, 256]}, "must map to an object"),
 ])
-def test_load_block_table_malformed_values(tmp_path, table, msg):
+def test_block_table_malformed_values(tmp_path, table, msg):
     p = tmp_path / "bad.json"
     p.write_text(json.dumps(table))
     with pytest.raises(ValueError, match=msg):
+        KernelContext.from_json(p)
+    # the shim rejects identically and leaves neither plan nor budget state
+    with pytest.raises(ValueError, match=msg), \
+            pytest.deprecated_call(match="load_block_table"):
         ops.load_block_table(p)
-    # a rejected table must leave neither plan nor budget state behind
-    assert ops.select_plan(16, 4096, 11008, 128)[0] == "fused"
+    assert ops.select_plan(16, 4096, 11008, 128).path == "fused"
     assert ops.fused_vmem_budget() == ops._FUSED_VMEM_BYTES_MAX
 
 
@@ -263,12 +283,12 @@ def test_load_block_table_malformed_values(tmp_path, table, msg):
     ("decode: fused", "not valid JSON"),
     ('["decode"]', "must be a JSON object"),
 ])
-def test_load_block_table_partial_json(tmp_path, text, msg):
+def test_block_table_partial_json(tmp_path, text, msg):
     p = tmp_path / "partial.json"
     p.write_text(text)
     with pytest.raises(ValueError, match=msg):
-        ops.load_block_table(p)
-    assert ops.select_plan(16, 4096, 11008, 128)[0] == "fused"
+        KernelContext.from_json(p)
+    assert ops.select_plan(16, 4096, 11008, 128).path == "fused"
 
 
 # ---------------------------------------------------------------------------

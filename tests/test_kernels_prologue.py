@@ -154,16 +154,15 @@ def test_w4a4_lrc_forward_explicit_blocks(rng):
 
 
 def test_select_blocks_regimes():
-    """The autotune table keys on the serving regime and clamps to dims."""
-    bm, bn, bk, br = ops.select_blocks(16, 4096, 11008, 128)   # decode
-    assert bm <= 16 and bn >= 128 and br <= 128
-    bm2, _, _, _ = ops.select_blocks(256, 4096, 11008, 128)   # mixed
-    assert bm2 == 128
-    bm3, _, _, _ = ops.select_blocks(2048, 4096, 11008, 128)  # prefill
-    assert bm3 == 256
+    """The autotune table keys on the serving regime and clamps to dims.
+    select_blocks returns the full Plan NamedTuple (read .bm/.bn/.bk/.br)."""
+    p = ops.select_blocks(16, 4096, 11008, 128)   # decode
+    assert p.bm <= 16 and p.bn >= 128 and p.br <= 128
+    assert ops.select_blocks(256, 4096, 11008, 128).bm == 128   # mixed
+    assert ops.select_blocks(2048, 4096, 11008, 128).bm == 256  # prefill
     # tiny problems clamp every block below the table entry
-    bm4, bn4, bk4, br4 = ops.select_blocks(8, 64, 32, 0)
-    assert bm4 <= 8 and bn4 <= 32 and bk4 <= 64 and br4 <= 8
+    p4 = ops.select_blocks(8, 64, 32, 0)
+    assert p4.bm <= 8 and p4.bn <= 32 and p4.bk <= 64 and p4.br <= 8
 
 
 def test_qlinear_pallas_impl_matches_int8_odd_shapes(rng):
@@ -211,9 +210,10 @@ def test_retag_qlinear_impl(rng):
     np.testing.assert_array_equal(np.asarray(out["b"]["w"]), np.ones((4, 4)))
 
 
-def test_w4a4_lrc_forward_large_r_fallback(rng, monkeypatch):
-    """When V exceeds the prologue's VMEM budget the wrapper silently takes
-    the unfused three-pass chain — results must be identical."""
+def test_w4a4_lrc_forward_large_r_fallback(rng):
+    """When nothing fits the VMEM budgets (forced via an explicit context)
+    the wrapper silently takes the unfused three-pass chain — results must
+    be identical."""
     m, k, n, r = 16, 64, 32, 8
     spec = QuantSpec(bits=4, clip_ratio=0.9)
     x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
@@ -222,8 +222,10 @@ def test_w4a4_lrc_forward_large_r_fallback(rng, monkeypatch):
     u = jnp.asarray(rng.standard_normal((n, r)), jnp.float32)
     v = jnp.asarray(rng.standard_normal((k, r)), jnp.float32)
     want = ops.w4a4_lrc_forward(x, pack_int4(q).T, s, u, v, spec, rotate=True)
-    monkeypatch.setattr(ops, "_PROLOGUE_V_BYTES_MAX", 1)
-    got = ops.w4a4_lrc_forward(x, pack_int4(q).T, s, u, v, spec, rotate=True)
+    tiny = ops.KernelContext().with_vmem_budgets(fused=0, prologue=1)
+    assert tiny.resolve_plan(m, k, n, r, rotate=True).path == "unfused"
+    got = ops.w4a4_lrc_forward(x, pack_int4(q).T, s, u, v, spec, rotate=True,
+                               ctx=tiny)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=1e-5, atol=1e-5)
 
