@@ -29,6 +29,13 @@ Two scoring modes:
 
     PYTHONPATH=src python -m benchmarks.autotune_blocks [--measure]
         [--out results/block_table.json] [--smoke] [--vmem-budget BYTES]
+        [--layers CONFIG]
+
+``--layers <config>`` additionally sweeps the config's ACTUAL per-layer
+(K, N, R) shapes (attention + MLP projections at the paper's rank
+fraction) and emits a ``"layers"`` override table keyed by the
+calibration walker's layer names — the per-layer plan overrides
+``KernelContext`` resolves ahead of the regime entries.
 """
 
 from __future__ import annotations
@@ -71,11 +78,11 @@ def _candidates(regime, smoke=False):
         yield dict(path=path, bm=bm, bn=bn, bk=bk, br=br)
 
 
-def _analytic_score(regime, cand, ctx: KernelContext):
-    """v5e roofline latency of the candidate; infeasible plans score inf.
-    Serving applies the online rotation, so feasibility is checked with
-    rotate=True (the stricter case — it pins the resident prologue)."""
-    m, k, n, r = REGIME_SHAPES[regime]
+def _analytic_score_shape(m, k, n, r, cand, ctx: KernelContext):
+    """v5e roofline latency of the candidate at one (M, K, N, R) shape;
+    infeasible plans score inf.  Serving applies the online rotation, so
+    feasibility is checked with rotate=True (the stricter case — it pins
+    the resident prologue)."""
     br = min(cand["br"], r) if r else cand["br"]
     path = cand["path"]
     if path == "fused":
@@ -96,6 +103,12 @@ def _analytic_score(regime, cand, ctx: KernelContext):
                              (k, cand["bk"])))
     steps = (-(-m // cand["bm"]) * -(-n // cand["bn"]) * -(-k // cand["bk"]))
     return (t * (1.0 + 0.1 * waste), steps)
+
+
+def _analytic_score(regime, cand, ctx: KernelContext):
+    """:func:`_analytic_score_shape` at the regime's representative shape."""
+    m, k, n, r = REGIME_SHAPES[regime]
+    return _analytic_score_shape(m, k, n, r, cand, ctx)
 
 
 def _measure_score(regime, cand, ctx: KernelContext, reps=3,
@@ -131,6 +144,68 @@ def _measure_score(regime, cand, ctx: KernelContext, reps=3,
     return ((time.time() - t0) / reps, 0)
 
 
+def layer_shapes(cfg, rank_frac: float = 0.10) -> dict:
+    """{layer name: (K, N, R)} for a model config's quantized projections.
+    Names use the calibration walker's layer tags ("attn/wq", "mlp/wd", …),
+    so an emitted "layers" override table keys directly onto the
+    ``QLinear.name`` metadata the walker attaches.  R follows the paper's
+    headline rank fraction (rank = round(rank_frac · min(K, N)))."""
+    if cfg.family not in ("dense", "vlm"):
+        raise ValueError(
+            f"per-layer autotune supports dense/vlm configs; "
+            f"{cfg.name!r} is family {cfg.family!r}")
+
+    from repro.quant.policy import QuantPolicy
+
+    # THE rank heuristic — reuse the policy's so the swept (K, N, R) set
+    # always matches the shapes calibration actually solves
+    rank = QuantPolicy(rank_frac=rank_frac).rank
+
+    d, hd = cfg.d_model, cfg.head_dim
+    dims = {
+        "attn/wq": (d, cfg.n_heads * hd),
+        "attn/wk": (d, cfg.n_kv_heads * hd),
+        "attn/wv": (d, cfg.n_kv_heads * hd),
+        "attn/wo": (cfg.n_heads * hd, d),
+        "mlp/wg": (d, cfg.d_ff),
+        "mlp/wu": (d, cfg.d_ff),
+        "mlp/wd": (cfg.d_ff, d),
+    }
+    return {name: (k, n, rank(k, n)) for name, (k, n) in dims.items()}
+
+
+def autotune_layers(config_name: str, smoke: bool = False,
+                    ctx: KernelContext = None, rank_frac: float = 0.10,
+                    m: int = 16) -> dict:
+    """Sweep candidates at each of a model config's ACTUAL (K, N, R) layer
+    shapes (decode M — the serving hot path) and return a per-layer
+    "layers" override table: {layer name: winning plan}.  Unlike the three
+    regime entries, these winners see the layer's true aspect ratio and
+    rank, so e.g. the narrow wd projection can pick different tiles than
+    the wide wg/wu pair."""
+    from repro.configs import get_config
+
+    cfg = get_config(config_name)
+    ctx = ctx or KernelContext()
+    overrides = {}
+    for name, (k, n, r) in layer_shapes(cfg, rank_frac).items():
+        best, best_t = None, (float("inf"), float("inf"))
+        for cand in _candidates("decode", smoke=smoke):
+            t = _analytic_score_shape(m, k, n, r, cand, ctx)
+            if t < best_t:
+                best, best_t = dict(cand), t
+        if best is None:
+            # no candidate fits the budget — emit NO override (the layer
+            # falls back to the regime entry + resolve_plan's shrink/demote)
+            # rather than a None entry from_json would reject
+            print(f"[layer {name}] (K, N, R)=({k}, {n}, {r}) no feasible "
+                  f"candidate under the sweep budgets; skipped")
+            continue
+        overrides[name] = best  # plan keys only: loadable as an override
+        print(f"[layer {name}] (K, N, R)=({k}, {n}, {r}) winner: {best}")
+    return overrides
+
+
 def autotune_sweep(measure: bool = False, smoke: bool = False,
                    ctx: KernelContext = None) -> dict:
     """Sweep all candidates per regime under ``ctx`` (None -> analytic
@@ -144,6 +219,13 @@ def autotune_sweep(measure: bool = False, smoke: bool = False,
             t = score(regime, cand, ctx)
             if t < best_t:
                 best, best_t = dict(cand), t
+        if best is None:
+            # every candidate infeasible under the sweep budgets: emit NO
+            # entry (from_json then keeps the analytic default for the
+            # regime) instead of a None the loader would reject
+            print(f"[{regime}] no feasible candidate under the sweep "
+                  f"budgets; regime left to the analytic default")
+            continue
         best["score_us"] = round(best_t[0] * 1e6, 2) \
             if best_t[0] != float("inf") else None
         best["shape_mknr"] = list(REGIME_SHAPES[regime])
@@ -164,6 +246,11 @@ def main(argv=None) -> int:
                          "budgets (positive bytes) for the sweep — probe "
                          "real-TPU ceilings instead of the analytic "
                          "defaults")
+    ap.add_argument("--layers", default=None, metavar="CONFIG",
+                    help="also emit a per-layer 'layers' override table for "
+                         "this model config's actual (K, N, R) set (keys = "
+                         "the calibration walker's layer names, e.g. "
+                         "attn/wq), loadable via KernelContext.from_json")
     ap.add_argument("--out", default=str(RESULTS / "block_table.json"))
     args = ap.parse_args(argv)
 
@@ -172,6 +259,9 @@ def main(argv=None) -> int:
         ctx = ctx.with_vmem_budgets(fused=args.vmem_budget,
                                     prologue=args.vmem_budget)
     winners = autotune_sweep(measure=args.measure, smoke=args.smoke, ctx=ctx)
+    if args.layers is not None:
+        winners["layers"] = autotune_layers(args.layers, smoke=args.smoke,
+                                            ctx=ctx)
     if args.vmem_budget is not None:
         # persist the probed budgets with the winners they were swept
         # under, so KernelContext.from_json replays them at serve time

@@ -110,12 +110,13 @@ def quantize(cfg, params, policy, calib):
     return quantize_model(cfg, params, calib, policy, rotate=True)
 
 
-def make_w4a4_problem(rng, m: int, k: int, n: int, r: int):
+def make_w4a4_problem(rng, m: int, k: int, n: int, r: int, act_group=None):
     """Random (spec, x, wpacked, w_scale, u, v) W4A4+LRC problem in the
     layout ops.w4a4_lrc_forward expects — ONE definition shared by the
     bench smoke, the autotune measure mode, and the kernel parity tests, so
-    they all exercise the same problem family."""
-    spec = QuantSpec(bits=4, clip_ratio=0.9)
+    they all exercise the same problem family.  ``act_group`` puts the
+    activation quantizer on per-group scales (paper Table 2)."""
+    spec = QuantSpec(bits=4, clip_ratio=0.9, group_size=act_group)
     x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
     q = jnp.asarray(rng.integers(-8, 8, (n, k)), jnp.int8)
     s = jnp.asarray(rng.uniform(0.01, 0.2, (n,)), jnp.float32)

@@ -19,9 +19,11 @@ extra latency (unfused second pass).  No TPU is attached here, so we report:
 ``--smoke`` swaps the analytic sweep for an actual-kernel run: the three
 paths execute in pallas interpret mode at small decode/mixed shapes PLUS one
 rank-1024, large-K shape (K×R×4 = 32 MB — far past the old 8 MB whole-VMEM
-V ceiling) that must resolve to the fused path with no demotion, with
-bitwise cross-path parity checked and wall-clock recorded — the CI
-bench-smoke job runs this and uploads results/latency_kernels_smoke.json.
+V ceiling) that must resolve to the fused path with no demotion, AND one
+g=128 group-wise-scale shape that must also resolve fused (grouped layers
+used to demote to the jnp int8 GEMM), with bitwise cross-path parity
+checked and wall-clock recorded — the CI bench-smoke job runs this and
+uploads results/latency_kernels_smoke.json.
 """
 
 from __future__ import annotations
@@ -34,7 +36,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import record
-from repro.launch.roofline import HBM_BW, PEAK_FLOPS, prologue_activation_bytes
+from repro.launch.roofline import (HBM_BW, PEAK_FLOPS,
+                                   prologue_activation_bytes,
+                                   prologue_intermediate_bytes)
 
 # (d_in, d_out) from the Llama family, as in paper Tables 6-8
 SIZES = [(4096, 11008), (5120, 13824), (8192, 28672)]
@@ -59,17 +63,27 @@ HEADER = [
     # rotated rows below these columns are the what-if figure of serving
     # the same shape unrotated — not an attainable plan for that row.
     "us_fused_stream", "act_prologue_kb_fused_stream",
+    # Group-wise activation scales (paper Table 2, g=128): the (M, K/128)
+    # scale plane rides the chained path's HBM round-trip, so its byte and
+    # latency figures grow with K/g; the fused path keeps the plane in
+    # VMEM (bytes unchanged), making these the columns where granularity
+    # costs show.  Guarded by check_regression like every us_/act_ column.
+    "us_chained_g128", "act_prologue_kb_chained_g128",
 ]
 
+GROUP_COLUMN_G = 128  # the paper's headline group size for the _g128 columns
 
-def _roofline_time(m, k, n, r, path: str, bm: int = None, ctx=None):
+
+def _roofline_time(m, k, n, r, path: str, bm: int = None, ctx=None,
+                   act_group=None):
     """Bytes + flops → v5e time bound for the W4A4(+LR) layer on one path.
 
     The K-split grid streams the f32 U/V factors from HBM once per M-tile
     (they are no longer VMEM-resident across the whole problem), so the
     factor traffic scales with ceil(m/bm) — ``bm`` defaults to the plan
     table's M tile for the regime (from ``ctx``; None -> the analytic
-    defaults)."""
+    defaults).  ``act_group`` swaps the per-token scale term of the
+    intermediate traffic for the (M, K/g) scale plane."""
     if bm is None:
         from repro.kernels.context import KernelContext
 
@@ -79,7 +93,8 @@ def _roofline_time(m, k, n, r, path: str, bm: int = None, ctx=None):
     bytes_x = m * k * 2  # bf16 activations read
     bytes_out = m * n * 4
     bytes_lr_w = n_m * (k * r + n * r) * 4 if r else 0  # f32 U/V per M-tile
-    inter = m * k + 4 * m + (4 * m * r if r else 0)  # xq + sx (+ xv)
+    # xq + sx (per-token column or scale plane) + xv — the shared spelling
+    inter = prologue_intermediate_bytes(m, k, r, act_group=act_group)
     total_bytes = bytes_w + bytes_x + bytes_out + bytes_lr_w
     if path in ("chained", "unfused"):
         total_bytes += 2 * inter  # prologue writes xq/sx/xv; GEMM reads back
@@ -112,10 +127,14 @@ def analytic_rows(ms=MS, sizes=SIZES, ranks=RANKS):
                 t_ch = _roofline_time(m, k, n, r, "chained")
                 t_fu = _roofline_time(m, k, n, r, "fused")
                 t_fs = _roofline_time(m, k, n, r, "fused_stream")
+                g = GROUP_COLUMN_G
+                t_ch_g = _roofline_time(m, k, n, r, "chained", act_group=g)
                 act = {p: prologue_activation_bytes(m, k, r, rotate=True,
                                                     path=p)
                        for p in ("unfused", "chained", "fused",
                                  "fused_stream")}
+                act_ch_g = prologue_activation_bytes(
+                    m, k, r, rotate=True, path="chained", act_group=g)
                 rows.append([
                     f"M{m}_{n}x{k}", r,
                     round(t_un * 1e6, 1), round(t_ch * 1e6, 1),
@@ -128,16 +147,20 @@ def analytic_rows(ms=MS, sizes=SIZES, ranks=RANKS):
                     round(act["chained"] / act["fused"], 2),
                     round(t_fs * 1e6, 1),
                     round(act["fused_stream"] / 1024, 1),
+                    round(t_ch_g * 1e6, 1),
+                    round(act_ch_g / 1024, 1),
                 ])
     return rows
 
 
 def smoke_rows(ctx=None):
     """Run the three kernel paths for real (pallas interpret mode): small
-    decode/mixed shapes plus the rank-1024 large-K no-demotion shape.
-    Cross-path bitwise parity + wall-clock; the big shape additionally
-    asserts that auto dispatch resolves to the fused path (the old whole-V
-    VMEM ceiling would have demoted it to unfused).  ``ctx`` is the
+    decode/mixed shapes, the rank-1024 large-K no-demotion shape, and a
+    g=128 group-wise-scale shape.  Cross-path bitwise parity + wall-clock;
+    the big shape additionally asserts that auto dispatch resolves to the
+    fused path (the old whole-V VMEM ceiling would have demoted it to
+    unfused), and the grouped shape asserts the same (group-wise scales
+    used to demote straight to the jnp int8 GEMM).  ``ctx`` is the
     KernelContext to run under (None -> analytic defaults)."""
     from benchmarks.common import make_w4a4_problem
     from repro.kernels import ops
@@ -146,23 +169,28 @@ def smoke_rows(ctx=None):
     ctx = ctx or KernelContext()
     rng = np.random.default_rng(0)
     rows = []
-    # (m, k, n, r, rotate) — decode and mixed regime shapes, odd N included,
-    # and the K-split acceptance shape: K×R×4 = 32 MB of V, 4× the old
-    # 8 MB whole-VMEM ceiling.
+    # (m, k, n, r, rotate, act_group) — decode and mixed regime shapes, odd
+    # N included, the K-split acceptance shape (K×R×4 = 32 MB of V, 4× the
+    # old 8 MB whole-VMEM ceiling) and the grouped acceptance shape (g=128
+    # scale plane through the fused path).
     shapes = [
-        (16, 256, 512, 0, False),
-        (16, 256, 512, 32, True),
-        (16, 512, 300, 64, False),
-        (64, 256, 256, 32, True),
-        (16, 8192, 256, 1024, True),  # previously demoted to unfused
+        (16, 256, 512, 0, False, None),
+        (16, 256, 512, 32, True, None),
+        (16, 512, 300, 64, False, None),
+        (64, 256, 256, 32, True, None),
+        (16, 8192, 256, 1024, True, None),  # previously demoted to unfused
+        (16, 512, 256, 32, True, 128),  # previously demoted to jnp int8
     ]
-    for m, k, n, r, rot in shapes:
+    for m, k, n, r, rot, g in shapes:
         big = k * r * 4 > ctx.prologue_vmem_bytes
-        if big:
-            plan = ctx.resolve_plan(m, k, n, r, rotate=rot)
+        if big or g is not None:
+            plan = ctx.resolve_plan(m, k, n, r, rotate=rot, act_group=g)
             assert plan.path == "fused", \
-                f"K-split regression: {(m, k, n, r)} resolved to {plan}"
-        spec, x, wp, s, u, v = make_w4a4_problem(rng, m, k, n, r)
+                f"fast-path regression: {(m, k, n, r, g)} resolved to {plan}"
+            if g is not None:
+                assert plan.bk % g == 0, (plan, g)
+        spec, x, wp, s, u, v = make_w4a4_problem(rng, m, k, n, r,
+                                                 act_group=g)
         outs, times = {}, {}
         for impl in ("unfused", "chained", "fused", "auto"):
             f = lambda: ops.w4a4_lrc_forward(x, wp, s, u, v, spec,
@@ -176,11 +204,18 @@ def smoke_rows(ctx=None):
         bitwise = (np.array_equal(outs["fused"], outs["chained"])
                    and np.array_equal(outs["fused"], outs["unfused"])
                    and np.array_equal(outs["fused"], outs["auto"]))
-        assert bitwise, f"cross-path mismatch at {(m, k, n, r, rot)}"
-        act_ch = prologue_activation_bytes(m, k, r, rotate=rot, path="chained")
+        assert bitwise, f"cross-path mismatch at {(m, k, n, r, rot, g)}"
+        # the standard columns stay PER-TOKEN for every row (one scale
+        # granularity per column — comparable across rows); grouped bytes
+        # go only in the dedicated _g128 column
+        act_ch = prologue_activation_bytes(m, k, r, rotate=rot,
+                                           path="chained")
         act_fu = prologue_activation_bytes(m, k, r, rotate=rot, path="fused")
+        act_ch_g = prologue_activation_bytes(
+            m, k, r, rotate=rot, path="chained", act_group=GROUP_COLUMN_G)
         rows.append([
-            f"M{m}_{n}x{k}_r{r}{'_rot' if rot else ''}",
+            f"M{m}_{n}x{k}_r{r}{'_rot' if rot else ''}"
+            + (f"_g{g}" if g else ""),
             r,
             round(times["unfused"], 1), round(times["chained"], 1),
             round(times["fused"], 1),
@@ -192,6 +227,8 @@ def smoke_rows(ctx=None):
             "",
             round(prologue_activation_bytes(m, k, r, rotate=rot,
                                             path="fused_stream") / 1024, 1),
+            "",
+            round(act_ch_g / 1024, 1),
         ])
     return rows
 

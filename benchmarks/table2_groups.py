@@ -1,5 +1,13 @@
 """Paper Table 2 — W4A4 with activation group-scaling (paper: 128; scaled to
-the bench model's d_ff granularity: 64)."""
+the bench model's d_ff granularity: 64).
+
+Evaluation runs on the FAST PATH: after calibration each quantized model is
+retagged to ``impl="fused"`` so every grouped QLinear executes the
+single-kernel pallas forward with the (M, K/g) scale plane (interpret mode
+on CPU) — the regime this table measures is the one the kernels actually
+serve, not the jnp int8 fallback it used to demote to.  The sim-path
+numbers are kept alongside as the reference semantics.
+"""
 
 from __future__ import annotations
 
@@ -12,6 +20,7 @@ from benchmarks.common import (
     quantize,
     record,
 )
+from repro.quant.qlinear import retag_qlinear_impl
 
 GROUP = 64
 
@@ -22,7 +31,8 @@ def run():
     evals = eval_batches(cfg)
     rows = []
     fp_ppl, fp_acc = ppl_and_acc(cfg, params, evals)
-    rows.append(["FP16", round(fp_ppl, 4), round(fp_acc, 4)])
+    rows.append(["FP16", round(fp_ppl, 4), round(fp_acc, 4),
+                 round(fp_ppl, 4), round(fp_acc, 4)])
     out = {"FP16": (fp_ppl, fp_acc)}
     for name, method, iters in [
         ("QuaRot", "quarot", 1),
@@ -32,9 +42,14 @@ def run():
     ]:
         qp = quantize(cfg, params, make_policy(method, lrc_iters=iters, act_group=GROUP), calib)
         ppl, acc = ppl_and_acc(cfg, qp, evals)
-        rows.append([name, round(ppl, 4), round(acc, 4)])
-        out[name] = (ppl, acc)
-    record("table2_groups", rows, ["method", "ppl", "acc"])
+        # the serving regime: grouped scale plane through the fused kernels
+        ppl_f, acc_f = ppl_and_acc(cfg, retag_qlinear_impl(qp, "fused"),
+                                   evals)
+        rows.append([name, round(ppl, 4), round(acc, 4),
+                     round(ppl_f, 4), round(acc_f, 4)])
+        out[name] = (ppl_f, acc_f)
+    record("table2_groups", rows,
+           ["method", "ppl_sim", "acc_sim", "ppl_fused", "acc_fused"])
     return out
 
 

@@ -32,15 +32,18 @@ through every entry point as `ctx=`; measured winners from
 benchmarks/autotune_blocks.py load via
 `KernelContext.from_json(results/block_table.json)`, which may also carry
 VMEM-budget overrides (a "vmem" entry) and per-layer plan overrides (a
-"layers" entry).  Inspect resolution with `ctx.explain(m, k, n, r)`.  The
-old global setters (`ops.load_block_table` / `ops.set_vmem_budgets`) are
-one-release deprecation shims onto the process-default context.  All GEMM
-operands are
+"layers" entry).  Inspect resolution with `ctx.explain(m, k, n, r)`.  (The
+old global setters `ops.load_block_table` / `ops.set_vmem_budgets` finished
+their deprecation window and were removed.)  All GEMM operands are
 zero-padded to block multiples so odd MLP widths take the pallas path;
 grids carry Mosaic ``dimension_semantics`` annotations.  All three paths
 are bitwise identical in interpret mode: they share the row-tile bodies in
 rowops.py (including the canonical chunked projection-accumulation order)
-and integer accumulation is exact under any K split.
+and integer accumulation is exact under any K split.  Activation-scale
+granularity is a first-class plan axis: per-token (M, 1) scales or — with
+``act_group`` (paper Table 2, g = 128) — a per-group (M, K/g) scale plane,
+with BK snapped to a multiple of g so K-chunks hold whole scale groups and
+the GEMM dequant moving into the K loop.
 
   fused_gemm.py — single-kernel W4A4+LRC forward (prologue + GEMM + epilogue)
   prologue.py — fused rotate → quantize → low-rank-project prologue
@@ -50,7 +53,7 @@ and integer accumulation is exact under any K split.
   rowops.py   — shared row-tile bodies (butterfly, quantize, prologue, unpack)
   context.py  — KernelContext: immutable execution config (plan table, VMEM
                 budgets, per-layer overrides) + plan resolution/explain
-  ops.py      — jit'd wrappers (padding, ctx-based dispatch, shims)
+  ops.py      — jit'd wrappers (padding, ctx-based dispatch)
   ref.py      — pure-jnp oracles for every kernel
 """
 

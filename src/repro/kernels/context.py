@@ -32,9 +32,16 @@ Resolution::
     print(ctx.explain(m, k, n, r, rotate=True))    # per-regime report
 
 ``kernels/ops.py`` threads a ``ctx=`` through ``w4a4_lrc_forward`` /
-``select_plan`` / ``resolve_plan`` (``None`` → the process-default context)
-and keeps one-release deprecation shims for the old global setters
-(``load_block_table`` / ``set_vmem_budgets``).
+``select_plan`` / ``resolve_plan`` (``None`` → the process-default
+context).  The old global setters (``load_block_table`` /
+``set_vmem_budgets``) finished their deprecation window and are gone.
+
+Activation-scale granularity rides the same resolution:
+``resolve_plan(..., act_group=g)`` snaps BK to a power-of-two multiple of
+``g`` (K-chunks must hold whole scale groups), adds the per-group
+(M, K/g) scale plane to the VMEM working-set model, and demotes a path
+only when no multiple-of-``g`` tiling fits — ``explain(...,
+act_group=g)`` reports the snap and any granularity-driven demotion.
 """
 
 from __future__ import annotations
@@ -45,7 +52,9 @@ import json
 from pathlib import Path
 from typing import NamedTuple, Optional
 
-from repro.kernels.rowops import default_proj_tiles, round_pow2 as _round_pow2
+from repro.kernels.rowops import (default_proj_tiles,
+                                  round_pow2 as _round_pow2,
+                                  snap_bk_to_group)
 
 # Default working-set budget of the two-kernel chain's prologue (x row slab
 # + rotated-row scratch + xq/sx/xv outputs + double-buffered V tiles).
@@ -112,15 +121,17 @@ def gemm_regime(m: int) -> str:
 
 
 def fused_vmem_bytes(k: int, r: int, bm: int, bn: int, bk: int, br: int,
-                     resident: bool) -> int:
+                     resident: bool, act_group: int = None) -> int:
     """Worst-case VMEM working set of the K-split fused kernel: resident
-    scratch plus double-buffered streamed blocks."""
+    scratch plus double-buffered streamed blocks.  ``act_group`` swaps the
+    (bm, 1) per-token scale for the (bm, K/g) scale plane."""
     k_pad = k + (-k) % bk
     r_pad = (r + (-r) % br) if r else 0
+    n_s = 1 if act_group is None else k_pad // act_group
     res = (
         bm * k_pad          # xq int8 residency
-        + bm * 4            # sx
-        + bm * bn * 4       # int32 GEMM accumulator
+        + bm * n_s * 4      # sx (per-token column or per-group scale plane)
+        + bm * bn * 4       # GEMM accumulator (int32 or grouped f32)
     )
     if r:
         res += bm * r_pad * 4  # xv accumulator
@@ -138,13 +149,15 @@ def fused_vmem_bytes(k: int, r: int, bm: int, bn: int, bk: int, br: int,
 
 
 def prologue_vmem_bytes(k: int, r: int, bm: int, bk: int, br: int,
-                        rotate: bool) -> int:
+                        rotate: bool, act_group: int = None) -> int:
     """Working set of the standalone (chained-path) prologue kernel: the x
     row slab, the rotated-row scratch, the xq/sx/xv outputs and the
     double-buffered streamed V tiles."""
     k_pad = k + (-k) % bk if r else k
     r_pad = (r + (-r) % br) if r else 0
-    b = bm * k_pad * 4 + bm * k_pad + bm * 4  # x slab + q out + s out
+    n_s = 1 if act_group is None else k_pad // act_group
+    # x slab + q out + s out (per-token column or per-group scale plane)
+    b = bm * k_pad * 4 + bm * k_pad + bm * n_s * 4
     if rotate:
         b += bm * k_pad * 4  # rotated-row scratch
     if r:
@@ -174,21 +187,29 @@ def _shrink_to_fit(bytes_fn, tiles: dict, mins: dict, budget: int):
 
 
 def _fit_fused(k: int, r: int, bm: int, bn: int, bk: int, br: int,
-               rotate: bool, budget: int, variant_pin: str = None):
+               rotate: bool, budget: int, variant_pin: str = None,
+               act_group: int = None):
     """Feasible (bm, bn, bk, br, variant) for the fused kernel under
     ``budget``, shrinking tiles as needed; None when nothing fits.  The
     resident prologue is preferred (one x read); the streamed variant
     (rotate=False only) trades an extra x read for dropping the f32 row
     slab.  ``variant_pin`` restricts the search to one variant (a
-    table/override pin); rotation still forces the resident slab."""
-    mins = dict(bk=min(bk, 128), br=min(br, 128), bn=min(bn, 128),
-                bm=min(bm, 8))
+    table/override pin); rotation still forces the resident slab.  With
+    group-wise scales (``act_group``) BK starts snapped to a power-of-two
+    multiple of the group and can shrink no further than one group — the
+    halving search stays closed over the chunks-hold-whole-groups
+    constraint."""
+    if act_group is not None:
+        bk = snap_bk_to_group(bk, act_group)
+    mins = dict(bk=act_group if act_group is not None else min(bk, 128),
+                br=min(br, 128), bn=min(bn, 128), bm=min(bm, 8))
     variants = ("resident",) if rotate else ("resident", "streamed")
     if variant_pin is not None and not (rotate and variant_pin == "streamed"):
         variants = (variant_pin,)
     for variant in variants:
         def bytes_fn(bm, bn, bk, br, _res=(variant == "resident")):
-            return fused_vmem_bytes(k, r, bm, bn, bk, br, _res)
+            return fused_vmem_bytes(k, r, bm, bn, bk, br, _res,
+                                    act_group=act_group)
         fit = _shrink_to_fit(bytes_fn, dict(bm=bm, bn=bn, bk=bk, br=br),
                              mins, budget)
         if fit is not None:
@@ -198,12 +219,16 @@ def _fit_fused(k: int, r: int, bm: int, bn: int, bk: int, br: int,
 
 
 def _fit_chained(k: int, r: int, bm: int, bn: int, bk: int, br: int,
-                 rotate: bool, budget: int):
+                 rotate: bool, budget: int, act_group: int = None):
     """Feasible chained-path plan under the prologue budget, or None."""
-    mins = dict(bk=min(bk, 128), br=min(br, 128), bm=min(bm, 8))
+    if act_group is not None:
+        bk = snap_bk_to_group(bk, act_group)
+    mins = dict(bk=act_group if act_group is not None else min(bk, 128),
+                br=min(br, 128), bm=min(bm, 8))
 
     def bytes_fn(bm, bk, br):
-        return prologue_vmem_bytes(k, r, bm, bk, br, rotate)
+        return prologue_vmem_bytes(k, r, bm, bk, br, rotate,
+                                   act_group=act_group)
 
     fit = _shrink_to_fit(bytes_fn, dict(bm=bm, bk=bk, br=br), mins, budget)
     if fit is None:
@@ -557,26 +582,37 @@ class KernelContext:
         return Plan(entry["path"], bm, bn, bk, br, entry.get("variant"))
 
     def fused_variant(self, k: int, r: int, bm: int, bn: int, bk: int,
-                      br: int, rotate: bool) -> str:
+                      br: int, rotate: bool, act_group: int = None) -> str:
         """Prologue variant for FORCED-fused execution at fixed tiles:
         resident when it fits the budget (or rotation requires it), else
         streamed."""
         if rotate:
             return "resident"
-        if fused_vmem_bytes(k, r, bm, bn, bk, br, True) \
-                <= self.fused_vmem_bytes:
+        if fused_vmem_bytes(k, r, bm, bn, bk, br, True,
+                            act_group=act_group) <= self.fused_vmem_bytes:
             return "resident"
         return "streamed"
 
     def resolve_plan(self, m: int, k: int, n: int, r: int = 0,
                      rotate: bool = False, regime: str = None,
-                     layer: str = None) -> Plan:
+                     layer: str = None, act_group: int = None) -> Plan:
         """The executable plan for a (M, K, N, R) problem: the table plan
         (with any per-layer override) plus per-slab VMEM feasibility —
         tiles shrink to fit the budget first; the path demotes (fused →
-        chained → unfused) only when no tiling fits."""
+        chained → unfused) only when no tiling fits.
+
+        ``act_group`` (group-wise activation scales, paper Table 2) makes
+        the granularity a plan axis: BK snaps to a power-of-two multiple of
+        the group (K-chunks must hold whole scale groups; ``g = K`` pins
+        BK = K, degenerating to per-token), the (M, K/g) scale plane joins
+        the working-set model, and BK shrinks no further than one group —
+        a path demotes when no multiple-of-g tiling fits its budget."""
+        if act_group is not None and k % act_group:
+            raise ValueError(f"act_group {act_group} must divide K={k}")
         sel = self.select_plan(m, k, n, r, regime=regime, layer=layer)
         path, bm, bn, bk, br = sel[:5]
+        if act_group is not None:
+            bk = snap_bk_to_group(bk, act_group)
         if path == "fused":
             # a table/override variant pin constrains the variant search but
             # NEVER bypasses feasibility — tiles still shrink to fit and the
@@ -584,13 +620,14 @@ class KernelContext:
             # resident slab regardless of the pin)
             plan = _fit_fused(k, r, bm, bn, bk, br, rotate,
                               self.fused_vmem_bytes,
-                              variant_pin=sel.variant)
+                              variant_pin=sel.variant, act_group=act_group)
             if plan is not None:
                 return plan
             path = "chained"
         if path == "chained":
             plan = _fit_chained(k, r, bm, bn, bk, br, rotate,
-                                self.prologue_vmem_bytes)
+                                self.prologue_vmem_bytes,
+                                act_group=act_group)
             if plan is not None:
                 return plan
         return Plan("unfused", bm, bn, bk, br, None)
@@ -598,37 +635,52 @@ class KernelContext:
     # -- introspection report -------------------------------------------------
 
     def explain(self, m: int, k: int, n: int, r: int = 0,
-                rotate: bool = False, layer: str = None) -> str:
+                rotate: bool = False, layer: str = None,
+                act_group: int = None) -> str:
         """Human-readable plan-introspection report: for each serving regime,
         the table plan, the per-layer override (if one matches), the
         resolved path/tiles/variant, and the VMEM working set vs. budget.
-        The regime the given M falls into is starred."""
+        The regime the given M falls into is starred.  With ``act_group``
+        the report names the granularity constraint (BK snapped to a
+        multiple of g, scale plane in the working set) and flags resolved
+        plans whose BK the snap changed or whose path demoted under it."""
         mib = 1024 * 1024
         active = gemm_regime(m)
         lines = [
             f"KernelContext.explain(m={m}, k={k}, n={n}, r={r}, "
             f"rotate={rotate}" + (f", layer={layer!r}" if layer else "")
-            + ")",
+            + (f", act_group={act_group}" if act_group else "") + ")",
             f"  impl={self.impl}  interpret="
             f"{'auto' if self.interpret is None else self.interpret}  "
             f"budgets: fused={self.fused_vmem_bytes / mib:.1f} MiB, "
             f"prologue={self.prologue_vmem_bytes / mib:.1f} MiB",
         ]
+        if act_group:
+            lines.append(
+                f"  act_group={act_group}: bk snaps to a multiple of "
+                f"{act_group} (K-chunks hold whole scale groups, floor "
+                f"bk={act_group}); the (M, K/{act_group}) f32 scale plane "
+                f"joins the working set; a path demotes when no such "
+                f"tiling fits its budget")
         override = self.layer_plan(layer, k, n, r)
         if override:
             lines.append(f"  layer override: {override} "
                          f"(override > table > defaults)")
         for regime in ("decode", "mixed", "prefill"):
             entry = self.table_entry(regime)
+            table_plan = self.select_plan(m, k, n, r, regime=regime,
+                                          layer=layer)
             plan = self.resolve_plan(m, k, n, r, rotate=rotate,
-                                     regime=regime, layer=layer)
+                                     regime=regime, layer=layer,
+                                     act_group=act_group)
             if plan.path == "fused":
                 need = fused_vmem_bytes(k, r, plan.bm, plan.bn, plan.bk,
-                                        plan.br, plan.variant != "streamed")
+                                        plan.br, plan.variant != "streamed",
+                                        act_group=act_group)
                 budget = self.fused_vmem_bytes
             elif plan.path == "chained":
                 need = prologue_vmem_bytes(k, r, plan.bm, plan.bk, plan.br,
-                                           rotate)
+                                           rotate, act_group=act_group)
                 budget = self.prologue_vmem_bytes
             else:
                 need = budget = None
@@ -639,11 +691,22 @@ class KernelContext:
             plan_s = (f"{plan.path} bm={plan.bm} bn={plan.bn} bk={plan.bk} "
                       f"br={plan.br}"
                       + (f" variant={plan.variant}" if plan.variant else ""))
+            notes = []
+            if act_group:
+                snapped = snap_bk_to_group(table_plan.bk, act_group)
+                if snapped != table_plan.bk:
+                    notes.append(f"bk {table_plan.bk}->{snapped} "
+                                 f"(multiple of g={act_group})")
+                if plan.path != table_plan.path:
+                    notes.append(f"demoted {table_plan.path}->{plan.path}: "
+                                 f"no multiple-of-{act_group} bk tiling "
+                                 f"fits the {table_plan.path} budget")
+            note_s = f"  ({'; '.join(notes)})" if notes else ""
             if need is None:
                 fit_s = "vmem n/a (jnp fallback path)"
             else:
                 fit_s = (f"vmem {need / mib:.2f}/{budget / mib:.2f} MiB "
                          f"({'fits' if need <= budget else 'OVER'})")
             lines.append(f" {star}[{regime:7s}] table: {table_s}  ->  "
-                         f"resolved: {plan_s}  [{fit_s}]")
+                         f"resolved: {plan_s}  [{fit_s}]{note_s}")
         return "\n".join(lines)

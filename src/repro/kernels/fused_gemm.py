@@ -53,6 +53,17 @@ K is consumed UNPADDED by the prologue math (zero pad columns are exact for
 amax/quantize/project; rotation requires K = K_pad, power of two), so the
 integer accumulation over padded chunks is exact and all paths stay bitwise
 identical in interpret mode.
+
+GROUP-WISE activation scales (``act_group``, paper Table 2 g = 128): the
+(bm, 1) per-token scale becomes the (bm, K_pad/g) scale plane in the same
+VMEM scratch, with bk a multiple of g so a K-chunk always holds whole
+groups.  The prologue sweep computes each chunk's group scales CHUNK-LOCALLY
+(grouped amax needs no cross-chunk fold — the streamed variant drops its
+fold entirely), and the dequant moves from the epilogue into the K loop:
+each GEMM chunk's int32 group partials rescale by their group's activation
+scale before the f32 accumulation (``rowops.gemm_chunk_grouped``, the
+canonical order shared with the chained/unfused GEMM), so the accumulator
+scratch is f32 and the epilogue multiplies only the weight scales.
 """
 
 from __future__ import annotations
@@ -69,8 +80,11 @@ from repro.kernels.rowops import (
     default_proj_tiles,
     fwht_cross_rows,
     fwht_intra_rows,
+    gemm_chunk_grouped,
+    group_amax,
     project_chunk_rows,
     quantize_rows,
+    quantize_rows_grouped,
     row_amax,
     unpack_int4_rows,
 )
@@ -81,11 +95,12 @@ _VARIANTS = ("resident", "streamed")
 def _body(x_ref, v_ref, wp_ref, sw_ref, u_ref, out_ref,
           xq_s, sx_s, xv_s, rot_s, acc_s, *,
           qmax: int, clip_ratio: float, rotate: bool, resident: bool,
-          k_pad: int, bk: int, br: int, n_k: int, n_r: int):
+          k_pad: int, bk: int, br: int, n_k: int, n_r: int, group):
     j = pl.program_id(1)
     kk = pl.program_id(2)
     rr = pl.program_id(3)
     last_kr = (kk == n_k - 1) & (rr == n_r - 1)
+    ngc = None if group is None else bk // group  # scale groups per chunk
 
     # ---- prologue sweep (N-visit 0) -------------------------------------
     if resident:
@@ -102,10 +117,15 @@ def _body(x_ref, v_ref, wp_ref, sw_ref, u_ref, out_ref,
             if rotate:
                 row = fwht_cross_rows(row, k_pad, bk)
                 rot_s[...] = row
-            s = amax_to_scale(row_amax(row), qmax, clip_ratio)
-            sx_s[...] = s
-            xq_s[...] = quantize_rows(row, s, qmax)
-    else:
+            if group is None:
+                s = amax_to_scale(row_amax(row), qmax, clip_ratio)
+                sx_s[...] = s
+                xq_s[...] = quantize_rows(row, s, qmax)
+            else:
+                s = amax_to_scale(group_amax(row, group), qmax, clip_ratio)
+                sx_s[...] = s
+                xq_s[...] = quantize_rows_grouped(row, s, qmax, group)
+    elif group is None:
         @pl.when((j == 0) & (rr == 0))
         def _fold_amax():
             a = row_amax(x_ref[...].astype(jnp.float32))
@@ -119,6 +139,20 @@ def _body(x_ref, v_ref, wp_ref, sw_ref, u_ref, out_ref,
         def _quantize_chunk():
             xq_s[:, pl.ds(kk * bk, bk)] = quantize_rows(
                 x_ref[...].astype(jnp.float32), sx_s[...], qmax)
+    else:
+        # streamed + grouped: groups never cross a chunk, so each chunk's
+        # scales finalize chunk-locally on the sweep — no cross-chunk fold
+        @pl.when((j == 0) & (rr == 0))
+        def _group_scales():
+            a = group_amax(x_ref[...].astype(jnp.float32), group)
+            sx_s[:, pl.ds(kk * ngc, ngc)] = \
+                amax_to_scale(a, qmax, clip_ratio)
+
+        @pl.when((j == 1) & (rr == 0))
+        def _quantize_chunk_grouped():
+            xq_s[:, pl.ds(kk * bk, bk)] = quantize_rows_grouped(
+                x_ref[...].astype(jnp.float32),
+                sx_s[:, pl.ds(kk * ngc, ngc)], qmax, group)
 
     # ---- low-rank projection rides the first GEMM visit (V streams) -----
     if xv_s is not None:
@@ -138,15 +172,25 @@ def _body(x_ref, v_ref, wp_ref, sw_ref, u_ref, out_ref,
             acc_s[...] = jnp.zeros_like(acc_s)
 
         w_blk = unpack_int4_rows(wp_ref[...])
-        acc_s[...] += jax.lax.dot_general(
-            xq_s[:, pl.ds(kk * bk, bk)], w_blk, (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.int32,
-        )
+        if group is None:
+            acc_s[...] += jax.lax.dot_general(
+                xq_s[:, pl.ds(kk * bk, bk)], w_blk, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.int32,
+            )
+        else:
+            # dequant in the K loop: the chunk's groups rescale before the
+            # f32 accumulation (canonical gemm_chunk_grouped order)
+            acc_s[...] += gemm_chunk_grouped(
+                xq_s[:, pl.ds(kk * bk, bk)], w_blk,
+                sx_s[:, pl.ds(kk * ngc, ngc)], group)
 
     # ---- epilogue: one HBM write per (M-tile, N-tile) --------------------
     @pl.when((j >= 1) & last_kr)
     def _epilogue():
-        out = acc_s[...].astype(jnp.float32) * sx_s[...] * sw_ref[...]
+        if group is None:
+            out = acc_s[...].astype(jnp.float32) * sx_s[...] * sw_ref[...]
+        else:
+            out = acc_s[...] * sw_ref[...]  # activation scales already in
         if xv_s is not None:
             out = out + jax.lax.dot_general(
                 xv_s[...], u_ref[...].astype(jnp.float32),
@@ -159,7 +203,7 @@ def _body(x_ref, v_ref, wp_ref, sw_ref, u_ref, out_ref,
 @functools.partial(
     jax.jit,
     static_argnames=("bits", "clip_ratio", "rotate", "bm", "bn", "bk", "br",
-                     "variant", "interpret"),
+                     "variant", "act_group", "interpret"),
 )
 def fused_w4a4_lrc_kernel(
     x: jnp.ndarray,  # (M, K) float — K UNPADDED (prologue semantics)
@@ -175,6 +219,7 @@ def fused_w4a4_lrc_kernel(
     bk: int = 256,
     br: int = None,  # R-tile of the streamed V (defaults: 512-capped pow2)
     variant: str = "resident",  # resident | streamed prologue (see module doc)
+    act_group: int = None,  # None = per-token scales; else bk % act_group == 0
     interpret: bool = True,
 ):
     """One pallas call for the whole W4A4+LRC forward; returns (M, N) f32."""
@@ -192,6 +237,12 @@ def fused_w4a4_lrc_kernel(
         assert k_pad == k, (k, k_pad)
         assert resident, "rotation's cross-chunk butterflies need the " \
                          "resident row slab"
+    if act_group is not None:
+        # chunks hold whole scale groups; pad K columns form whole (exact)
+        # zero groups whose guarded scale quantizes them to 0
+        assert k % act_group == 0, (k, act_group)
+        assert bk % act_group == 0, (bk, act_group)
+    n_s_pad = 1 if act_group is None else k_pad // act_group
     qmax = 2 ** (bits - 1) - 1
     with_lr = v is not None
 
@@ -215,7 +266,8 @@ def fused_w4a4_lrc_kernel(
     # output column j-1.
     grid = (m // bm, n // bn + 1, n_k, n_r)
     kw = dict(qmax=qmax, clip_ratio=clip_ratio, rotate=rotate,
-              resident=resident, k_pad=k_pad, bk=bk, br=br, n_k=n_k, n_r=n_r)
+              resident=resident, k_pad=k_pad, bk=bk, br=br, n_k=n_k, n_r=n_r,
+              group=act_group)
 
     # x chunks stream during the prologue sweep (and, for the streamed
     # variant, again on the first GEMM visit); later visits pin chunk 0 so
@@ -242,7 +294,9 @@ def fused_w4a4_lrc_kernel(
     operands += [wpacked, sw]
     scratch = [
         pltpu.VMEM((bm, k_pad), jnp.int8),  # xq residency
-        pltpu.VMEM((bm, 1), jnp.float32),  # sx (amax accumulator first)
+        # sx: per-token column (amax accumulator first on the streamed
+        # sweep) or the per-group scale plane
+        pltpu.VMEM((bm, n_s_pad), jnp.float32),
     ]
     if with_lr:
         in_specs.append(pl.BlockSpec(
@@ -251,7 +305,10 @@ def fused_w4a4_lrc_kernel(
         scratch.append(pltpu.VMEM((bm, r_pad), jnp.float32))  # xv accumulator
     if resident:
         scratch.append(pltpu.VMEM((bm, k_pad), jnp.float32))  # f32 row slab
-    scratch.append(pltpu.VMEM((bm, bn), jnp.int32))  # GEMM partial sums
+    # GEMM partial sums: int32 per-token (rescale in the epilogue); f32
+    # grouped (each chunk's groups rescale before accumulation)
+    scratch.append(pltpu.VMEM(
+        (bm, bn), jnp.int32 if act_group is None else jnp.float32))
 
     def kernel(*refs):
         i = 0

@@ -39,18 +39,20 @@ Three kernel paths, strongest fusion first:
 All three are bitwise identical in interpret mode: they share the row bodies
 in kernels/rowops.py (including the canonical K-chunked/R-tiled projection
 accumulation order) and integer accumulation is exact under any K split.
+That parity contract covers BOTH scale granularities: per-token (M, 1)
+scales and — when ``act_spec.group_size`` is set (paper Table 2, g = 128) —
+the per-group (M, K/g) scale plane, with the plan layer snapping BK to a
+multiple of g so K-chunks hold whole scale groups (see
+:meth:`KernelContext.resolve_plan`).
 
-DEPRECATED (one release, warn on use): the old module-global mutators
-:func:`load_block_table` and :func:`set_vmem_budgets` now shim onto the
-process-default context.  Migrate to ``KernelContext.from_json(...)`` /
-``ctx.with_vmem_budgets(...)`` passed explicitly.
+The old module-global mutators (``load_block_table`` / ``set_vmem_budgets``)
+finished their one-release deprecation window and are GONE — build a
+:class:`KernelContext` (``from_json`` / ``with_vmem_budgets``) and pass it
+via ``ctx=``.
 """
 
 from __future__ import annotations
 
-import json
-import warnings
-from pathlib import Path
 from typing import Optional
 
 import jax.numpy as jnp
@@ -72,7 +74,8 @@ from repro.kernels.fused_gemm import fused_w4a4_lrc_kernel
 from repro.kernels.hadamard import fwht_kernel
 from repro.kernels.prologue import fused_prologue_kernel
 from repro.kernels.rowops import (project_rows_tiled,
-                                  round_pow2 as _round_pow2)
+                                  round_pow2 as _round_pow2,
+                                  snap_bk_to_group)
 from repro.kernels.w4a4 import w4a4_lowrank_matmul_kernel
 from repro.kernels.flash_attn import flash_attention_kernel
 
@@ -82,11 +85,9 @@ __all__ = [
     "fused_variant", "fused_vmem_budget", "prologue_vmem_budget",
     "w4a4_lrc_forward", "w4a4_lowrank_matmul", "act_quant", "fwht",
     "fused_prologue", "flash_attention",
-    # process-default reset (NOT deprecated: alias of
-    # set_default_context(None), used by tests and legacy scripts)
+    # process-default reset (alias of set_default_context(None), used by
+    # tests and legacy scripts)
     "reset_block_table",
-    # deprecated shims (one release)
-    "load_block_table", "set_vmem_budgets",
 ]
 
 # Back-compat aliases for the analytic default constants (immutable).
@@ -96,8 +97,8 @@ _KERNEL_PATHS = KERNEL_PATHS
 
 # ---------------------------------------------------------------------------
 # process-default context (the ONLY module state; an immutable value swapped
-# atomically — the deprecation shims below and set_default_context are the
-# only writers, every reader goes through default_context())
+# atomically — set_default_context is the only writer, every reader goes
+# through default_context())
 # ---------------------------------------------------------------------------
 
 _DEFAULT_CONTEXT: Optional[KernelContext] = None
@@ -127,62 +128,6 @@ def set_default_context(ctx: Optional[KernelContext]) -> KernelContext:
 
 def _ctx(ctx: Optional[KernelContext]) -> KernelContext:
     return default_context() if ctx is None else ctx
-
-
-# ---------------------------------------------------------------------------
-# deprecated global-mutator shims (one release; migrate to KernelContext)
-# ---------------------------------------------------------------------------
-
-
-def _deprecated(old: str, new: str):
-    warnings.warn(
-        f"repro.kernels.ops.{old} is deprecated and will be removed next "
-        f"release; {new}", DeprecationWarning, stacklevel=3)
-
-
-def load_block_table(path) -> dict:
-    """DEPRECATED shim: overlay a measured block table onto the
-    process-default context.  Use ``KernelContext.from_json(path)`` and
-    pass the context explicitly instead.  Malformed tables raise ValueError
-    and leave no partial state behind; returns the parsed table.
-
-    Only the fields the old loader owned change: the regime table is
-    replaced, the budgets update PER KEY present in the file's ``"vmem"``
-    entry (set_vmem_budgets(None)-style: a missing key keeps the current
-    override), file ``"layers"`` overrides merge over existing ones, and
-    the default impl / interpret flag of the current context survive."""
-    _deprecated("load_block_table()",
-                "build a KernelContext.from_json(path) and pass it via "
-                "ctx= instead")
-    try:
-        raw = json.loads(Path(path).read_text())
-    except json.JSONDecodeError as e:
-        raise ValueError(f"block table {path} is not valid JSON: {e}") from e
-    except OSError as e:
-        raise ValueError(f"cannot read block table {path}: {e}") from e
-    cur = default_context()
-    # validates everything; raises before any state is swapped
-    ctx = KernelContext.from_dict(raw, where=f"block table {path}",
-                                  impl=cur.impl, interpret=cur.interpret)
-    vmem = raw.get("vmem", {})
-    ctx = ctx.with_vmem_budgets(
-        fused=vmem.get("fused_bytes_max", cur.fused_vmem_bytes),
-        prologue=vmem.get("prologue_bytes_max", cur.prologue_vmem_bytes))
-    ctx = ctx.with_overrides(
-        overrides={**cur.layer_overrides(), **ctx.layer_overrides()})
-    set_default_context(ctx)
-    return raw
-
-
-def set_vmem_budgets(fused: int = None, prologue: int = None):
-    """DEPRECATED shim: override the VMEM working-set budgets (bytes) on
-    the process-default context.  Use ``ctx.with_vmem_budgets(...)`` and
-    pass the context explicitly instead."""
-    _deprecated("set_vmem_budgets()",
-                "use ctx.with_vmem_budgets(fused=..., prologue=...) and "
-                "pass the context via ctx= instead")
-    set_default_context(
-        default_context().with_vmem_budgets(fused=fused, prologue=prologue))
 
 
 def reset_block_table():
@@ -238,20 +183,24 @@ def select_blocks(m: int, k: int, n: int, r: int = 0, regime: str = None,
 
 def resolve_plan(m: int, k: int, n: int, r: int = 0, rotate: bool = False,
                  regime: str = None, ctx: KernelContext = None,
-                 layer: str = None) -> Plan:
+                 layer: str = None, act_group: int = None) -> Plan:
     """The executable :class:`Plan` for a (M, K, N, R) problem: the
     block-table plan with per-slab VMEM feasibility applied — tiles shrink
     to fit the budget first; the path demotes (fused → chained → unfused)
-    only when no tiling fits."""
+    only when no tiling fits.  ``act_group`` (per-group activation scales)
+    snaps BK to a multiple of the group and adds the (M, K/g) scale plane
+    to the working-set model."""
     return _ctx(ctx).resolve_plan(m, k, n, r, rotate=rotate, regime=regime,
-                                  layer=layer)
+                                  layer=layer, act_group=act_group)
 
 
 def fused_variant(k: int, r: int, bm: int, bn: int, bk: int, br: int,
-                  rotate: bool, ctx: KernelContext = None) -> str:
+                  rotate: bool, ctx: KernelContext = None,
+                  act_group: int = None) -> str:
     """Prologue variant for FORCED-fused execution at fixed tiles: resident
     when it fits the budget (or rotation requires it), else streamed."""
-    return _ctx(ctx).fused_variant(k, r, bm, bn, bk, br, rotate)
+    return _ctx(ctx).fused_variant(k, r, bm, bn, bk, br, rotate,
+                                   act_group=act_group)
 
 
 # ---------------------------------------------------------------------------
@@ -261,12 +210,16 @@ def fused_variant(k: int, r: int, bm: int, bn: int, bk: int, br: int,
 
 def act_quant(x: jnp.ndarray, spec: QuantSpec, bm: int = 128,
               ctx: KernelContext = None):
-    """Per-token activation quantization. x: (M, K) -> (q int8, s (M,1))."""
-    assert spec.group_size is None, "kernel path: per-token scales only"
+    """Activation quantization. x: (M, K) -> (q int8, s).  Per-token
+    (``spec.group_size`` None) s is (M, 1); per-group it is the
+    (M, K // group) scale plane (K must divide into whole groups)."""
+    if spec.group_size is not None:
+        assert x.shape[-1] % spec.group_size == 0, \
+            f"act_group {spec.group_size} must divide K={x.shape[-1]}"
     xp, m = _pad_to(x, bm, 0)
     q, s = act_quant_kernel(
         xp, bits=spec.bits, clip_ratio=spec.clip_ratio, bm=bm,
-        interpret=_interpret(ctx),
+        group=spec.group_size, interpret=_interpret(ctx),
     )
     return q[:m], s[:m]
 
@@ -281,16 +234,19 @@ def fused_prologue(x: jnp.ndarray, v, spec: QuantSpec,
                    bk: int = None, br: int = None,
                    ctx: KernelContext = None):
     """Single-HBM-pass activation prologue: optional WHT rotation, per-token
-    quantization, and the (x·V) projection, from one row-tile read of x.
-    V streams in (bk, br) tiles — it is never whole in VMEM.
+    or per-group quantization, and the (x·V) projection, from one row-tile
+    read of x.  V streams in (bk, br) tiles — it is never whole in VMEM.
 
-    x: (M, K); v: (K, R) or None.  Returns (xq, sx, xv-or-None)."""
-    assert spec.group_size is None, "kernel path: per-token scales only"
+    x: (M, K); v: (K, R) or None.  Returns (xq, sx, xv-or-None) — sx is
+    (M, 1) per-token or the (M, K // group) scale plane."""
+    if spec.group_size is not None:
+        assert x.shape[-1] % spec.group_size == 0, \
+            f"act_group {spec.group_size} must divide K={x.shape[-1]}"
     xp, m = _pad_to(x, bm, 0)
     q, s, xv = fused_prologue_kernel(
         xp, None if v is None else jnp.asarray(v, jnp.float32),
         bits=spec.bits, clip_ratio=spec.clip_ratio, rotate=rotate, bm=bm,
-        bk=bk, br=br, interpret=_interpret(ctx),
+        bk=bk, br=br, act_group=spec.group_size, interpret=_interpret(ctx),
     )
     return q[:m], s[:m], None if xv is None else xv[:m]
 
@@ -300,13 +256,19 @@ def fused_prologue(x: jnp.ndarray, v, spec: QuantSpec,
 # ---------------------------------------------------------------------------
 
 
-def _pad_gemm_operands(xq, sx, wpacked, w_scale, u, xv, bm, bn, bk, br):
+def _pad_gemm_operands(xq, sx, wpacked, w_scale, u, xv, bm, bn, bk, br,
+                       act_group=None):
     """Zero-pad every GEMM operand to its block multiple.  Zero weight
     nibbles/scales/U-rows contribute nothing, so padded K/N/R columns are
-    exact; padded M rows are sliced off the output."""
+    exact; padded M rows are sliced off the output.  With group-wise scales
+    the (M, K/g) plane pads along the group axis too — padded groups hold
+    only zero xq columns, so their int32 partials are 0 and the rescaled
+    term is an exact f32 +0.0 whatever the pad scale value."""
     xqp, _ = _pad_to(xq, bm, 0)
     xqp, _ = _pad_to(xqp, bk, 1)
     sxp, _ = _pad_to(sx, bm, 0)
+    if act_group is not None:
+        sxp, _ = _pad_to(sxp, bk // act_group, 1)
     wp, _ = _pad_to(wpacked, bk // 2, 0)  # K//2 rows
     wp, _ = _pad_to(wp, bn, 1)
     sw, _ = _pad_to(w_scale.reshape(1, -1), bn, 1)
@@ -352,7 +314,8 @@ def _forward_fused(xp, wpacked, w_scale, u, v, act_spec, rotate,
     return fused_w4a4_lrc_kernel(
         xp, v, wp, sw, up,
         bits=act_spec.bits, clip_ratio=act_spec.clip_ratio, rotate=rotate,
-        bm=bm, bn=bn, bk=bk, br=br, variant=variant, interpret=interpret,
+        bm=bm, bn=bn, bk=bk, br=br, variant=variant,
+        act_group=act_spec.group_size, interpret=interpret,
     )
 
 
@@ -382,23 +345,30 @@ def w4a4_lrc_forward(
     values force a path — "fused"/"chained" trust the caller on VMEM fit.
 
     ``rotate`` applies the online Walsh-Hadamard rotation (K power of two)
-    inside the prologue.  All operands are zero-padded to block multiples, so
-    arbitrary M/K/N (odd MLP widths included) take the pallas path.  The
-    three paths are bitwise identical in interpret mode (shared row bodies,
-    shared K-chunk/R-tile accumulation order, exact integer accumulation) —
-    under ANY context, since the context only picks the tiling.
+    inside the prologue.  ``act_spec.group_size`` switches the per-token
+    scales for the per-group (M, K/g) scale plane on every path: BK snaps
+    to a multiple of g (K-chunks hold whole scale groups) and the GEMM
+    dequant moves into the K loop.  All operands are zero-padded to block
+    multiples, so arbitrary M/K/N (odd MLP widths included) take the pallas
+    path.  The three paths are bitwise identical in interpret mode (shared
+    row bodies, shared K-chunk/R-tile accumulation order, exact integer
+    accumulation) — under ANY context, since the context only picks the
+    tiling.
     """
     ctx = _ctx(ctx)
     m0, k = x.shape
     n = wpacked.shape[1]
     r = 0 if v is None else v.shape[-1]
+    group = act_spec.group_size
+    if group is not None:
+        assert k % group == 0, f"act_group {group} must divide K={k}"
 
     if impl is None:
         impl = ctx.impl
     variant = None
     if impl == "auto":
         path, bm, bn, bk, br, variant = ctx.resolve_plan(
-            m0, k, n, r, rotate=rotate, layer=layer)
+            m0, k, n, r, rotate=rotate, layer=layer, act_group=group)
     elif impl not in KERNEL_PATHS:
         raise ValueError(f"unknown impl {impl!r}; "
                          f"expected auto or one of {KERNEL_PATHS}")
@@ -412,15 +382,17 @@ def w4a4_lrc_forward(
             br = blocks[3]
         br = min(br, _round_pow2(max(r, 8)))
         variant = None
+    if group is not None:
+        bk = snap_bk_to_group(bk, group)  # K-chunks hold whole scale groups
     if path == "fused" and variant is None:
-        variant = ctx.fused_variant(k, r, bm, bn, bk, br, rotate)
+        variant = ctx.fused_variant(k, r, bm, bn, bk, br, rotate,
+                                    act_group=group)
 
     if rotate:
         assert k & (k - 1) == 0, \
             f"online rotation needs power-of-two K, got {k}"
         if variant == "streamed":
             variant = "resident"  # rotation needs the f32 row slab
-    assert act_spec.group_size is None, "kernel path: per-token scales only"
     interpret = ctx.interpret_mode()
     # run the prologue on the M-padded activations directly — its outputs
     # stay bm-aligned so the GEMM padding below never re-pads axis 0
@@ -436,7 +408,8 @@ def w4a4_lrc_forward(
         xq, sx, xv = fused_prologue_kernel(
             xp, jnp.asarray(v, jnp.float32) if r else None,
             bits=act_spec.bits, clip_ratio=act_spec.clip_ratio,
-            rotate=rotate, bm=bm, bk=bk, br=br, interpret=interpret,
+            rotate=rotate, bm=bm, bk=bk, br=br, act_group=group,
+            interpret=interpret,
         )
     else:  # unfused: three activation passes over the row tiles
         xr = fwht(xp, bm=bm, ctx=ctx) if rotate else xp
@@ -444,10 +417,11 @@ def w4a4_lrc_forward(
         xv = _project_tiles(xr, v, bm, bk, br) if r else None
 
     xqp, sxp, wp, sw, up, xvp = _pad_gemm_operands(
-        xq, sx, wpacked, w_scale, u if r else None, xv, bm, bn, bk, br)
+        xq, sx, wpacked, w_scale, u if r else None, xv, bm, bn, bk, br,
+        act_group=group)
     out = w4a4_lowrank_matmul_kernel(
         xqp, sxp, wp, sw, xvp, up,
-        bm=bm, bn=bn, bk=bk, interpret=interpret,
+        bm=bm, bn=bn, bk=bk, group=group, interpret=interpret,
     )
     return out[:m0, :n]
 

@@ -50,12 +50,13 @@ from repro.kernels.rowops import (
     project_chunk_rows,
     prologue_rows,
     scale_round_quantize,
+    snap_bk_to_group,
 )
 
 
 def _kernel_lr(x_ref, v_ref, q_ref, s_ref, xv_ref, rot_ref, *,
                qmax: int, clip_ratio: float, rotate: bool,
-               k: int, bk: int, br: int):
+               k: int, bk: int, br: int, group):
     kk = pl.program_id(1)
     rr = pl.program_id(2)
 
@@ -65,7 +66,7 @@ def _kernel_lr(x_ref, v_ref, q_ref, s_ref, xv_ref, rot_ref, *,
         if rotate:
             row = fwht_rows(row, k)
             rot_ref[...] = row
-        q, s = scale_round_quantize(row, qmax, clip_ratio)
+        q, s = scale_round_quantize(row, qmax, clip_ratio, group=group)
         q_ref[...] = q
         s_ref[...] = s
 
@@ -77,9 +78,9 @@ def _kernel_lr(x_ref, v_ref, q_ref, s_ref, xv_ref, rot_ref, *,
 
 
 def _kernel_nolr(x_ref, q_ref, s_ref, *,
-                 qmax: int, clip_ratio: float, rotate: bool, d: int):
+                 qmax: int, clip_ratio: float, rotate: bool, d: int, group):
     q, s, _ = prologue_rows(x_ref[...].astype(jnp.float32), None,
-                            qmax, clip_ratio, rotate, d)
+                            qmax, clip_ratio, rotate, d, group=group)
     q_ref[...] = q
     s_ref[...] = s
 
@@ -87,7 +88,7 @@ def _kernel_nolr(x_ref, q_ref, s_ref, *,
 @functools.partial(
     jax.jit,
     static_argnames=("bits", "clip_ratio", "rotate", "bm", "bk", "br",
-                     "interpret"),
+                     "act_group", "interpret"),
 )
 def fused_prologue_kernel(
     x: jnp.ndarray,  # (M, K)
@@ -98,10 +99,14 @@ def fused_prologue_kernel(
     bm: int = 128,
     bk: int = None,  # V-stream K-chunk (defaults per default_proj_tiles)
     br: int = None,  # V-stream R-tile
+    act_group: int = None,  # None = per-token scales; else one per K group
     interpret: bool = True,
 ):
-    """One grid pass over row tiles: returns (xq int8, sx (M,1) f32[, xv f32]).
+    """One grid pass over row tiles: returns (xq int8, sx f32[, xv f32]).
 
+    ``sx`` is the (M, 1) per-token scale, or — with ``act_group`` — the
+    (M, K // act_group) per-group scale plane (groups contiguous along K,
+    computed from the VMEM-resident row with the shared rowops bodies).
     ``rotate`` applies the normalized WHT over K (requires K a power of two)
     before quantization and projection, matching fwht_kernel → act_quant_kernel
     → the tiled x_rot @ V run back-to-back.  With a low-rank V the grid is
@@ -112,22 +117,25 @@ def fused_prologue_kernel(
     assert m % bm == 0, (m, bm)
     if rotate:
         assert k & (k - 1) == 0, f"online rotation needs power-of-two K, got {k}"
+    if act_group is not None:
+        assert k % act_group == 0, (k, act_group)
+    n_s = 1 if act_group is None else k // act_group
     qmax = 2 ** (bits - 1) - 1
 
     if v is None:
         grid = (m // bm,)
         q, s = pl.pallas_call(
             functools.partial(_kernel_nolr, qmax=qmax, clip_ratio=clip_ratio,
-                              rotate=rotate, d=k),
+                              rotate=rotate, d=k, group=act_group),
             grid=grid,
             in_specs=[pl.BlockSpec((bm, k), lambda i: (i, 0))],
             out_specs=[
                 pl.BlockSpec((bm, k), lambda i: (i, 0)),
-                pl.BlockSpec((bm, 1), lambda i: (i, 0)),
+                pl.BlockSpec((bm, n_s), lambda i: (i, 0)),
             ],
             out_shape=[
                 jax.ShapeDtypeStruct((m, k), jnp.int8),
-                jax.ShapeDtypeStruct((m, 1), jnp.float32),
+                jax.ShapeDtypeStruct((m, n_s), jnp.float32),
             ],
             compiler_params=pltpu.TPUCompilerParams(
                 dimension_semantics=("parallel",)),
@@ -137,8 +145,11 @@ def fused_prologue_kernel(
 
     r = v.shape[1]
     bk, br = default_proj_tiles(k, r, bk, br)
+    if act_group is not None:
+        bk = snap_bk_to_group(bk, act_group)  # chunks hold whole groups
     k_pad = k + (-k) % bk
     r_pad = r + (-r) % br
+    n_s_pad = 1 if act_group is None else k_pad // act_group
     if rotate:
         assert k_pad == k, (k, bk)  # pow2 K, pow2 bk ≤ K always divides
     if k_pad > k:
@@ -156,7 +167,7 @@ def fused_prologue_kernel(
         rot_ref = rest[0] if rotate else None
         _kernel_lr(x_ref, v_ref, q_ref, s_ref, xv_ref, rot_ref,
                    qmax=qmax, clip_ratio=clip_ratio, rotate=rotate,
-                   k=k, bk=bk, br=br)
+                   k=k, bk=bk, br=br, group=act_group)
 
     q, s, xv = pl.pallas_call(
         kernel,
@@ -168,13 +179,13 @@ def fused_prologue_kernel(
         ],
         out_specs=[
             pl.BlockSpec((bm, k_pad), lambda i, kk, rr: (i, 0)),
-            pl.BlockSpec((bm, 1), lambda i, kk, rr: (i, 0)),
+            pl.BlockSpec((bm, n_s_pad), lambda i, kk, rr: (i, 0)),
             # xv doubles as the accumulator: revisited across (kk, rr)
             pl.BlockSpec((bm, r_pad), lambda i, kk, rr: (i, 0)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((m, k_pad), jnp.int8),
-            jax.ShapeDtypeStruct((m, 1), jnp.float32),
+            jax.ShapeDtypeStruct((m, n_s_pad), jnp.float32),
             jax.ShapeDtypeStruct((m, r_pad), jnp.float32),
         ],
         scratch_shapes=scratch,
@@ -184,4 +195,4 @@ def fused_prologue_kernel(
             dimension_semantics=("parallel", "arbitrary", "arbitrary")),
         interpret=interpret,
     )(x, vp)
-    return q[:, :k], s, xv[:, :r]
+    return q[:, :k], s[:, :n_s], xv[:, :r]

@@ -24,6 +24,29 @@ float ops:
     is exactly the whole-row max (max is exact on floats).
   * ``q = clip(round(x/s))`` is elementwise — chunk-wise application with
     the whole-row scale is the whole-row quantization.
+
+Group-wise activation scales (paper Table 2, g = 128)
+-----------------------------------------------------
+
+Per-group quantization replaces the (bm, 1) per-token scale with a
+(bm, d/g) SCALE PLANE: one scale per g contiguous K features.  Scale groups
+are aligned to K-chunks (the plan layer snaps bk to a multiple of g, see
+``snap_bk_to_group``), so a chunk always holds whole groups and
+
+  * the per-group amax needs NO cross-chunk fold — ``group_amax`` on a
+    chunk computes exactly the same reductions as on the whole row,
+  * the int8 GEMM must rescale per group BEFORE f32 accumulation: the
+    canonical order is ``gemm_chunk_grouped`` (per chunk: int32 dots over
+    the groups in ascending-K order, each rescaled and summed in f32) with
+    the per-chunk results accumulated across chunks in ascending-K order.
+    All three kernel paths issue these same dots in this same order.
+  * zero-padded K tails are exact: a padded group's amax is 0, the scale
+    guard clamps it to 1, its quantized values are 0, and the group's
+    rescaled partial sum is an exact f32 +0.0.
+
+``group = d`` (one group spanning the row) reproduces per-token
+quantization bit for bit: the reductions, the guard and the scale·round are
+the same scalar ops on the same operands.
   * the (x·V) projection is canonically a (bk, br)-tiled accumulation
     (``project_rows_tiled`` / per-chunk ``project_chunk_rows`` summed in
     ascending-K order) — all three kernel paths issue these same dots in
@@ -114,6 +137,37 @@ def row_amax(x: jnp.ndarray) -> jnp.ndarray:
     return jnp.max(jnp.abs(x), axis=-1, keepdims=True)
 
 
+def snap_bk_to_group(bk: int, group: int) -> int:
+    """Largest ``group · 2^j ≤ bk`` (minimum ``group``): with group-wise
+    activation scales a K-chunk must hold WHOLE scale groups, and the
+    power-of-two multiple keeps the plan layer's halving shrink-to-fit
+    closed over the constraint (every halving above ``group`` is still a
+    multiple of ``group``)."""
+    snapped = group
+    while snapped * 2 <= bk:
+        snapped *= 2
+    return snapped
+
+
+def group_amax(x: jnp.ndarray, group: int) -> jnp.ndarray:
+    """Per-group |x| max of a (bm, d) tile -> (bm, d // group).  Groups are
+    contiguous along K; because chunks hold whole groups, chunk-wise
+    application computes exactly the whole-row result."""
+    bm, d = x.shape
+    assert d % group == 0, (d, group)
+    return jnp.max(jnp.abs(x.reshape(bm, d // group, group)), axis=-1)
+
+
+def quantize_rows_grouped(x: jnp.ndarray, s: jnp.ndarray, qmax: int,
+                          group: int) -> jnp.ndarray:
+    """Elementwise q = clip(round(x/s)) with one scale per K group.  Safe to
+    apply per chunk with the matching slice of the scale plane."""
+    bm, d = x.shape
+    xs = x.reshape(bm, d // group, group) / s[..., None]
+    return jnp.clip(jnp.round(xs), -qmax - 1, qmax) \
+        .astype(jnp.int8).reshape(bm, d)
+
+
 def amax_to_scale(amax: jnp.ndarray, qmax: int, clip_ratio: float):
     """Paper §2 scale: zero-guarded amax → s = c·amax/qmax."""
     amax = jnp.where(amax <= 0.0, 1.0, amax)
@@ -126,11 +180,53 @@ def quantize_rows(x: jnp.ndarray, s: jnp.ndarray, qmax: int) -> jnp.ndarray:
     return jnp.clip(jnp.round(x / s), -qmax - 1, qmax).astype(jnp.int8)
 
 
-def scale_round_quantize(x: jnp.ndarray, qmax: int, clip_ratio: float):
-    """Whole-row amax → scale → round (the composition of the slab bodies).
-    Returns (q int8, s f32 (bm, 1))."""
-    s = amax_to_scale(row_amax(x), qmax, clip_ratio)
-    return quantize_rows(x, s, qmax), s
+def scale_round_quantize(x: jnp.ndarray, qmax: int, clip_ratio: float,
+                         group: int = None):
+    """amax → scale → round (the composition of the slab bodies).  Per-token
+    (``group=None``) returns (q int8, s f32 (bm, 1)); group-wise returns the
+    (bm, d // group) scale plane instead."""
+    if group is None:
+        s = amax_to_scale(row_amax(x), qmax, clip_ratio)
+        return quantize_rows(x, s, qmax), s
+    s = amax_to_scale(group_amax(x, group), qmax, clip_ratio)
+    return quantize_rows_grouped(x, s, qmax, group), s
+
+
+def gemm_chunk_grouped(xq_chunk: jnp.ndarray, w_chunk: jnp.ndarray,
+                       s_chunk: jnp.ndarray, group: int) -> jnp.ndarray:
+    """ONE K-chunk of the group-rescaled int4 GEMM: per scale group in
+    ascending-K order, an int8×int8→int32 dot rescaled by that group's
+    activation scale, summed in f32.  xq_chunk: (bm, bk) int8; w_chunk:
+    (bk, bn) int8; s_chunk: (bm, bk // group) f32.  This is THE canonical
+    dequant-in-the-K-loop spelling — the fused, chained and unfused GEMMs
+    all issue these dots in this order, which keeps grouped outputs bitwise
+    identical across paths (cross-chunk accumulation is ascending-K f32
+    adds of these per-chunk results).
+
+    The rescale-and-sum over the chunk's groups is ONE ``dot_general``
+    contraction (out[m, n] = Σ_g s[m, g] · d[g, m, n]) rather than an
+    unrolled mul/add chain — this is load-bearing for the bitwise
+    contract: XLA contracts a hand-written ``prev + acc·s`` chain into an
+    FMA in one kernel's compilation and not another's, skewing the last
+    bit between paths, while the same-shape dot lowers identically in
+    every compilation unit (the xv projection's parity rests on the same
+    property)."""
+    bm, bk = xq_chunk.shape
+    n_g = bk // group
+    parts = [
+        jax.lax.dot_general(
+            xq_chunk[:, gi * group:(gi + 1) * group],
+            w_chunk[gi * group:(gi + 1) * group, :],
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        )
+        for gi in range(n_g)  # exact int32 group partials, ascending K
+    ]
+    stacked = jnp.stack(parts, axis=1).astype(jnp.float32)  # (bm, n_g, bn)
+    return jax.lax.dot_general(
+        s_chunk, stacked, (((1,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )
 
 
 def project_chunk_rows(x_chunk: jnp.ndarray, v_tile: jnp.ndarray):
@@ -164,13 +260,15 @@ def project_rows_tiled(x: jnp.ndarray, v: jnp.ndarray, bk: int, br: int):
     return cols[0] if len(cols) == 1 else jnp.concatenate(cols, axis=1)
 
 
-def prologue_rows(x, v, qmax: int, clip_ratio: float, rotate: bool, d: int):
+def prologue_rows(x, v, qmax: int, clip_ratio: float, rotate: bool, d: int,
+                  group: int = None):
     """The full activation-prologue row body on a (bm, d) f32 tile: optional
-    WHT rotation, per-token quantization, and the (x·V) projection.
-    Returns (q int8, s f32 (bm, 1), xv f32 (bm, R) or None)."""
+    WHT rotation, per-token (or per-group) quantization, and the (x·V)
+    projection.  Returns (q int8, s f32 (bm, 1) or the (bm, d // group)
+    scale plane, xv f32 (bm, R) or None)."""
     if rotate:
         x = fwht_rows(x, d)
-    q, s = scale_round_quantize(x, qmax, clip_ratio)
+    q, s = scale_round_quantize(x, qmax, clip_ratio, group=group)
     xv = None
     if v is not None:
         xv = jax.lax.dot_general(

@@ -175,10 +175,24 @@ def roofline_from_costs(costs: dict, model_flops_total: float, n_chips: int,
     )
 
 
+def prologue_intermediate_bytes(m: int, k: int, r: int = 0,
+                                act_group: int = None) -> int:
+    """Bytes of ONE copy of the prologue's intermediates for an (M, K)
+    block: int8 xq + the f32 scales (per-token (M, 1) column, or the
+    per-group (M, K/g) scale plane when ``act_group`` is set) + the f32 xv
+    projection.  THE one spelling of the term — both the activation-byte
+    model below and the latency model
+    (benchmarks/latency_kernels._roofline_time) derive from it, so a
+    byte-model change can never update one and silently miss the other."""
+    n_s = 1 if act_group is None else k // act_group
+    return m * k + 4 * m * n_s + (4 * m * r if r else 0)
+
+
 def prologue_activation_bytes(m: int, k: int, r: int = 0, *,
                               rotate: bool = True, fused: bool = None,
                               path: str = None,
-                              act_bytes: int = 2) -> float:
+                              act_bytes: int = 2,
+                              act_group: int = None) -> float:
     """Activation-side HBM traffic of the W4A4+LRC forward for an (M, K)
     activation block, up to (excluding) the output-tile write — i.e. every
     intermediate the GEMM's consumption of xq/sx/xv implies.
@@ -200,6 +214,12 @@ def prologue_activation_bytes(m: int, k: int, r: int = 0, *,
     them — TWO reads of x, still strictly below chained (the xq/sx/xv
     round-trip never happens).
 
+    ``act_group`` switches the per-token (M, 1) scale for the per-group
+    (M, K/g) scale plane (paper Table 2): the scale term of the
+    intermediate traffic grows K/g-fold on the paths that round-trip the
+    prologue outputs through HBM (chained / unfused); the fused paths keep
+    the plane in VMEM, so their bytes are granularity-independent.
+
     ``fused`` is the legacy boolean spelling (True ≡ "chained", the PR 1
     fusion; False ≡ "unfused").  Weight-side bytes (V itself, the packed W)
     are identical in all layouts and excluded — this isolates exactly the
@@ -209,7 +229,7 @@ def prologue_activation_bytes(m: int, k: int, r: int = 0, *,
     if path is None:
         path = "chained" if fused else "unfused"
     a = m * k * act_bytes  # one full read or write of the activation block
-    out = m * k + 4 * m + (4 * m * r if r else 0)  # xq + sx (+ xv f32)
+    out = prologue_intermediate_bytes(m, k, r, act_group=act_group)
     if path == "fused":
         return a  # single kernel: x in, everything else VMEM-resident
     if path == "fused_stream":
@@ -263,6 +283,11 @@ def main(argv=None) -> int:
     ap.add_argument("--rotate", action="store_true",
                     help="resolve with the online rotation (pins the "
                          "resident prologue variant)")
+    ap.add_argument("--act-group", type=int, default=None,
+                    help="group-wise activation scales (paper Table 2 g, "
+                         "e.g. 128): resolve with bk snapped to a multiple "
+                         "of the group and the (M, K/g) scale plane in the "
+                         "working set")
     ap.add_argument("--layer", default=None,
                     help="layer name for per-layer override lookup in the "
                          "context's 'layers' table")
@@ -282,7 +307,8 @@ def main(argv=None) -> int:
                              args.impl) or KernelContext()
 
     m, k, n, r = args.shape
-    print(ctx.explain(m, k, n, r, rotate=args.rotate, layer=args.layer))
+    print(ctx.explain(m, k, n, r, rotate=args.rotate, layer=args.layer,
+                      act_group=args.act_group))
 
     try:  # benchmarks/ lives at the repo root, not under src/
         from benchmarks.latency_kernels import _roofline_time
@@ -291,7 +317,8 @@ def main(argv=None) -> int:
 
     print("roofline latency (v5e byte/FLOP model):")
     for path in ("fused", "fused_stream", "chained", "unfused"):
-        t = _roofline_time(m, k, n, r, path, ctx=ctx)
+        t = _roofline_time(m, k, n, r, path, ctx=ctx,
+                           act_group=args.act_group)
         print(f"  {path:12s} {t * 1e6:9.1f} us")
     return 0
 

@@ -4,10 +4,12 @@
         [--quantize] [--requests 8] [--new-tokens 16] \
         [--block-table results/block_table.json] [--vmem-budget BYTES]
 
-The kernel execution config (--block-table / --vmem-budget / --impl) is
-assembled into one immutable ``KernelContext`` handed to the engine — no
+The kernel execution config (--block-table / --vmem-budget) is assembled
+into one immutable ``KernelContext`` handed to the engine — no
 process-global kernel state is mutated, so several launchers/engines can
-coexist with different plan tables.
+coexist with different plan tables.  ``--impl`` selects the QLinear
+execution path separately, via the engine's ``retag_qlinear_impl`` pass
+(it is NOT recorded on the context).
 """
 
 import argparse

@@ -90,7 +90,9 @@ def solve_site(w, stats, policy: QuantPolicy, pre_rot: bool = False,
     return make_qlinear(
         q, s, u, v,
         act_bits=policy.act_bits,
-        act_group=policy.act_group,
+        # per-layer granularity: the policy's act_group_overrides can give
+        # one layer its own scale group (or pin it back to per-token)
+        act_group=policy.act_group_for(name),
         clip_ratio=policy.clip_ratio,
         impl=policy.impl,
         name=name,

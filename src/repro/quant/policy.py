@@ -34,6 +34,12 @@ class QuantPolicy:
     bits: int = 4
     act_bits: int = 4
     act_group: Optional[int] = None  # paper Table 2: 128
+    # Per-layer activation-group overrides keyed by layer name (the
+    # calibration walker's tags, e.g. "mlp/wd"): value None forces a layer
+    # back to per-token while act_group covers the rest; an int sets that
+    # layer's own group.  Stored as a sorted item tuple so the frozen
+    # policy stays hashable.
+    act_group_overrides: tuple = ()
     rank_frac: float = 0.10  # 0.0 disables the low-rank correction
     clip_ratio: float = 0.9
     impl: str = "int8"
@@ -42,10 +48,47 @@ class QuantPolicy:
     correction: str = "lrc"  # lrc | svd | none
     kv_cache_bits: Optional[int] = None  # optional int8 KV-cache quant
 
+    def __post_init__(self):
+        ovr = self.act_group_overrides
+        # normalize ANY accepted spelling — dict, iterable of (name, group)
+        # pairs (tuples or JSON-style lists) — to ONE canonical sorted
+        # tuple form, so semantically equal policies stay value-equal and
+        # hashable regardless of how the caller spelled the overrides
+        if isinstance(ovr, dict):
+            ovr = ovr.items()
+        ovr = tuple(tuple(e) if isinstance(e, (tuple, list)) else e
+                    for e in ovr)
+        for entry in ovr:
+            if (not isinstance(entry, tuple) or len(entry) != 2
+                    or not isinstance(entry[0], str)
+                    or isinstance(entry[1], bool)  # True would silently
+                    # become group size 1 (k % True == 0 always holds)
+                    or not (entry[1] is None
+                            or (isinstance(entry[1], int) and entry[1] > 0))):
+                raise ValueError(
+                    f"act_group_overrides entries must map a layer-name "
+                    f"string to a positive int group (or None = per-token), "
+                    f"got {entry!r}")
+        object.__setattr__(self, "act_group_overrides",
+                           tuple(sorted(ovr, key=lambda e: e[0])))
+
     def should_quantize(self, path_str: str, shape) -> bool:
         if len(shape) < 2:
             return False
         return bool(_QUANT_RE.search(path_str))
+
+    def act_group_for(self, name: Optional[str]) -> Optional[int]:
+        """The activation scale group for one layer: the per-layer override
+        when ``name`` matches one, else the policy-wide ``act_group``.
+        Keys match exactly or as a "/"-delimited path suffix, so the
+        walker's short tags ("mlp/wd") and the shell's full param-tree
+        paths ("layers/mlp/wd") resolve to the same override — the same
+        suffix discipline ``should_quantize``'s patterns use."""
+        if name is not None:
+            for key, group in self.act_group_overrides:
+                if name == key or name.endswith("/" + key):
+                    return group
+        return self.act_group
 
     def rank(self, d_in: int, d_out: int) -> int:
         if self.rank_frac <= 0:

@@ -15,6 +15,11 @@ Four execution paths (static ``impl`` field):
   fused  — force the single-kernel path (kernels/fused_gemm.py): prologue +
            int4 GEMM + LRC epilogue in ONE pallas call, xq never in HBM.
 
+Group-wise activation scales (``act_group``, paper Table 2) run on every
+path: the pallas kernels emit/consume the per-group (M, K/g) scale plane
+(BK snapped to a multiple of g by the plan layer) — a grouped layer no
+longer demotes to the jnp int8 GEMM.
+
 Weight layout in models is (d_in, d_out) with ``y = x @ w``; the LRC solver's
 (d_out, d_in) result is transposed at pack time.
 """
@@ -186,10 +191,9 @@ def qlinear_apply(q: QLinear, x: jnp.ndarray) -> jnp.ndarray:
     if q.impl == "int8":
         return _apply_int8(q, x)
     if q.impl in ("pallas", "fused"):
-        if q.act_group is not None:
-            # the fused kernels emit per-token scales only; group-wise
-            # calibrated layers (paper Table 2) run the int8 grouped GEMM
-            return _apply_int8(q, x)
+        # group-wise calibrated layers (paper Table 2) run the kernel paths
+        # too: the prologue emits the (M, K/g) scale plane and the GEMM
+        # dequantizes per group inside the K loop — no int8 demotion
         return _apply_pallas(q, x, None if q.impl == "pallas" else "fused")
     raise ValueError(f"unknown impl {q.impl!r}")
 

@@ -34,7 +34,9 @@ def quantize_shell(params, policy: QuantPolicy):
             v=jnp.zeros(lead + (d_in, k), jnp.bfloat16) if k else None,
             bits=policy.bits,
             act_bits=policy.act_bits,
-            act_group=policy.act_group,
+            # per-layer granularity, like the calibrating walker — the
+            # shell must lower the same (pytree-static) kernel config
+            act_group=policy.act_group_for(ps),
             clip_ratio=policy.clip_ratio,
             impl=policy.impl,
             name=ps,  # per-layer KernelContext overrides key on this

@@ -32,10 +32,9 @@ def rng():
 @pytest.fixture(autouse=True)
 def _kernel_state_guard():
     """Snapshot/restore the only remaining global kernel-dispatch state —
-    the process-default KernelContext behind the deprecation shims — so a
-    test that loads a block table or pokes budgets (directly or via the
-    shims) can never leak plan state into another test, whatever the
-    ordering."""
+    the process-default KernelContext — so a test that swaps the default
+    (ops.set_default_context) can never leak plan state into another test,
+    whatever the ordering."""
     from repro.kernels import ops
 
     saved = ops.default_context()

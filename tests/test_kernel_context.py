@@ -9,14 +9,13 @@
     (override > table > defaults);
   * hashability / pytree-static QLinear metadata;
   * --vmem-budget CLI validation in serve.py and autotune_blocks.py;
-  * the deprecation shims warn and the new API path never touches them.
+  * the old deprecated global setters are really gone (window expired).
 """
 
 import dataclasses
 import json
 import subprocess
 import sys
-import warnings
 from pathlib import Path
 
 import jax
@@ -436,64 +435,23 @@ def test_serve_build_context_maps_flags(tmp_path):
 
 
 # ---------------------------------------------------------------------------
-# deprecation shims + state isolation
+# removed deprecated setters + state isolation
 # ---------------------------------------------------------------------------
 
 
-def test_shims_warn_but_new_api_is_silent(tmp_path):
-    p = tmp_path / "t.json"
-    p.write_text(json.dumps(
-        {"decode": dict(path="chained", bm=8, bn=128, bk=128, br=128)}))
-    with warnings.catch_warnings():
-        warnings.simplefilter("error", DeprecationWarning)
-        # the NEW api path must never trip the shims
-        ctx = KernelContext.from_json(p)
-        ctx.resolve_plan(16, 4096, 11008, 128, rotate=True)
-        ops.resolve_plan(16, 4096, 11008, 128, ctx=ctx)
-        ops.set_default_context(None)
-    with pytest.deprecated_call(match="load_block_table"):
-        got = ops.load_block_table(p)
-    assert got["decode"]["path"] == "chained"
-    assert ops.select_plan(16, 4096, 11008, 128).path == "chained"
-    with pytest.deprecated_call(match="set_vmem_budgets"):
-        ops.set_vmem_budgets(fused=777)
-    # a table without "vmem" keeps previously-set budgets (old semantics)
-    with pytest.deprecated_call(match="load_block_table"):
-        ops.load_block_table(p)
-    assert ops.fused_vmem_budget() == 777
-    # ... per KEY: a partial "vmem" entry must not reset the other budget
-    with pytest.deprecated_call(match="set_vmem_budgets"):
-        ops.set_vmem_budgets(prologue=123456)
-    p2 = p.parent / "t2.json"
-    p2.write_text(json.dumps({"vmem": dict(fused_bytes_max=999)}))
-    with pytest.deprecated_call(match="load_block_table"):
-        ops.load_block_table(p2)
-    assert ops.fused_vmem_budget() == 999
-    assert ops.prologue_vmem_budget() == 123456
-    ops.reset_block_table()
-    assert ops.select_plan(16, 4096, 11008, 128).path == "fused"
-
-
-def test_load_block_table_shim_preserves_other_context_fields(tmp_path):
-    """The shim only owns the fields the old loader owned: impl, interpret
-    and existing layer overrides on the process default survive a load
-    (file 'layers' merge over them)."""
-    ops.set_default_context(
-        KernelContext()
-        .with_impl("fused")
-        .with_layer_overrides({"mlp/wd": dict(bm=8), "attn/wq": dict(bm=16)}))
-    p = tmp_path / "t.json"
-    p.write_text(json.dumps({
-        "decode": dict(path="chained", bm=8, bn=128, bk=128, br=128),
-        "layers": {"mlp/wd": dict(bm=32)},
-    }))
-    with pytest.deprecated_call(match="load_block_table"):
-        ops.load_block_table(p)
-    got = ops.default_context()
-    assert got.impl == "fused"
-    assert got.table_entry("decode")["path"] == "chained"
-    assert got.layer_overrides()["mlp/wd"] == dict(bm=32)  # file wins
-    assert got.layer_overrides()["attn/wq"] == dict(bm=16)  # survives
+def test_deprecated_global_setters_are_gone():
+    """The one-release window on the old global mutators is up: the
+    attributes no longer exist (callers get a loud AttributeError instead
+    of a silently-ignored DeprecationWarning), while the non-deprecated
+    process-default helpers stay."""
+    assert not hasattr(ops, "load_block_table")
+    assert not hasattr(ops, "set_vmem_budgets")
+    assert "load_block_table" not in ops.__all__
+    assert "set_vmem_budgets" not in ops.__all__
+    # the supported replacements remain available
+    assert callable(ops.reset_block_table)
+    assert callable(ops.set_default_context)
+    assert callable(ops.default_context)
 
 
 def test_default_context_snapshot_restored_between_tests_a():

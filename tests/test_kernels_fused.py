@@ -1,8 +1,8 @@
 """Single-kernel fused W4A4+LRC forward (kernels/fused_gemm.py) vs. the
 two-kernel chain and the unfused three-pass path: bitwise cross-path parity
 (the PR acceptance), the VMEM-budget fallback boundary, the execution-plan
-table (select_plan / load_block_table / unknown-regime errors), and the CI
-regression gate.  All kernels run in pallas interpret mode."""
+table (select_plan / KernelContext.from_json / unknown-regime errors), and
+the CI regression gate.  All kernels run in pallas interpret mode."""
 
 import dataclasses
 import json
@@ -201,10 +201,7 @@ def test_block_table_rejects_malformed(tmp_path, table, msg):
     p.write_text(json.dumps(table))
     with pytest.raises(ValueError, match=msg):
         KernelContext.from_json(p)
-    # the deprecated shim rejects identically and leaves no partial state
-    with pytest.raises(ValueError, match=msg), \
-            pytest.deprecated_call(match="load_block_table"):
-        ops.load_block_table(p)
+    # a rejected table builds nothing — the process default is untouched
     assert ops.select_plan(16, 4096, 11008, 128).path == "fused"
 
 
@@ -258,7 +255,11 @@ def test_retag_to_fused(rng):
         retag_qlinear_impl(tree, "pallsa")  # typo must not tag silently
 
 
-def test_qlinear_fused_groupwise_falls_back_to_int8(rng):
+def test_qlinear_fused_groupwise_runs_kernels(rng):
+    """Group-wise calibrated layers no longer demote to the jnp int8 GEMM:
+    impl="fused" runs the pallas path with the (M, K/g) scale plane and
+    matches the int8 reference semantics (grouped acceptance lives in
+    tests/test_kernels_groups.py)."""
     from repro.quant.qlinear import make_qlinear, qlinear_apply
 
     d_in, d_out, g = 128, 64, 32
@@ -268,7 +269,11 @@ def test_qlinear_fused_groupwise_falls_back_to_int8(rng):
     x = jnp.asarray(rng.standard_normal((8, d_in)), jnp.float32)
     a = qlinear_apply(ql, x)
     b = qlinear_apply(dataclasses.replace(ql, impl="fused"), x)
-    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    c = qlinear_apply(dataclasses.replace(ql, impl="pallas"), x)
+    # rank-0 int math is exact on both paths: same bits as the int8 GEMM
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(b), np.asarray(c))
 
 
 # ---------------------------------------------------------------------------

@@ -196,7 +196,7 @@ def test_big_v_executes_fused_with_parity(rng):
 
 # ---------------------------------------------------------------------------
 # configurable VMEM budgets (ctx.with_vmem_budgets / block-table "vmem"
-# entry) + the deprecated global-setter shims
+# entry)
 # ---------------------------------------------------------------------------
 
 
@@ -210,21 +210,6 @@ def test_vmem_budget_builders_and_validation():
         KernelContext().with_vmem_budgets(fused=-1)
     with pytest.raises(ValueError, match="budget"):
         KernelContext().with_vmem_budgets(prologue="8MB")
-
-
-def test_set_vmem_budgets_shim_warns_and_resets():
-    """The deprecated global setter still works (one release) but warns,
-    and routes through the process-default context."""
-    default = ops.fused_vmem_budget()
-    with pytest.deprecated_call(match="set_vmem_budgets"):
-        ops.set_vmem_budgets(fused=1234567, prologue=7654321)
-    assert ops.fused_vmem_budget() == 1234567
-    assert ops.prologue_vmem_budget() == 7654321
-    ops.reset_block_table()
-    assert ops.fused_vmem_budget() == default
-    with pytest.raises(ValueError, match="budget"), \
-            pytest.deprecated_call(match="set_vmem_budgets"):
-        ops.set_vmem_budgets(fused=-1)
 
 
 def test_block_table_vmem_entry(tmp_path):
@@ -243,12 +228,6 @@ def test_block_table_vmem_entry(tmp_path):
     assert ops._fused_vmem_bytes(8192, 1024, plan.bm, plan.bn, plan.bk,
                                  plan.br, True) <= 4 * 1024 * 1024 \
         or plan.path != "fused"
-    # the deprecated loader shim lands the same budgets on the default ctx
-    with pytest.deprecated_call(match="load_block_table"):
-        ops.load_block_table(p)
-    assert ops.fused_vmem_budget() == 4 * 1024 * 1024
-    ops.reset_block_table()
-    assert ops.fused_vmem_budget() == ops._FUSED_VMEM_BYTES_MAX
 
 
 @pytest.mark.parametrize("table,msg", [
@@ -270,10 +249,7 @@ def test_block_table_malformed_values(tmp_path, table, msg):
     p.write_text(json.dumps(table))
     with pytest.raises(ValueError, match=msg):
         KernelContext.from_json(p)
-    # the shim rejects identically and leaves neither plan nor budget state
-    with pytest.raises(ValueError, match=msg), \
-            pytest.deprecated_call(match="load_block_table"):
-        ops.load_block_table(p)
+    # a rejected table builds nothing — the process default is untouched
     assert ops.select_plan(16, 4096, 11008, 128).path == "fused"
     assert ops.fused_vmem_budget() == ops._FUSED_VMEM_BYTES_MAX
 
