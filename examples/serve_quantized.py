@@ -77,6 +77,12 @@ def main():
     print(f"      {len(done)} requests, {total} tokens in {dt:.1f}s "
           f"({total/dt:.1f} tok/s on 1 CPU core, sim path)")
     assert len(done) == n_req
+    # run() returns structured terminal records — on the happy path every
+    # one is FINISHED with clean timings and no captured error
+    assert all(rec.ok and rec.error_kind is None for rec in done.values()), \
+        {r: (rec.status.value, rec.error_kind) for r, rec in done.items()}
+    h = eng.health()
+    assert h["counters"]["retries"] == 0 and not h["stalled"]
 
 
 if __name__ == "__main__":

@@ -2,7 +2,9 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m \
         [--quantize] [--requests 8] [--new-tokens 16] \
-        [--block-table results/block_table.json] [--vmem-budget BYTES]
+        [--block-table results/block_table.json] [--vmem-budget BYTES] \
+        [--deadline-s 30] [--retries 2] [--queue-bound 64] \
+        [--inject-faults K --fault-seed S --parity-check]
 
 The kernel execution config (--block-table / --vmem-budget) is assembled
 into one immutable ``KernelContext`` handed to the engine — no
@@ -10,9 +12,22 @@ process-global kernel state is mutated, so several launchers/engines can
 coexist with different plan tables.  ``--impl`` selects the QLinear
 execution path separately, via the engine's ``retag_qlinear_impl`` pass
 (it is NOT recorded on the context).
+
+Robustness knobs map 1:1 onto the engine's request lifecycle
+(serve/lifecycle.py): per-request deadlines, bounded retries with
+backoff, a bounded admission queue, and a stall watchdog.  With
+``--inject-faults K`` a seeded ``FaultInjector`` (serve/faults.py)
+targets K of the N requests with hard faults; the launcher then asserts
+the structured split — exactly K FAILED/TIMED_OUT records, N-K FINISHED
+— and exits non-zero on any mismatch or engine crash.  ``--parity-check``
+additionally replays the same requests fault-free and asserts the
+untargeted completions are bitwise identical.  CI runs this as the
+chaos-smoke step.
 """
 
 import argparse
+import json
+import sys
 import time
 
 
@@ -22,6 +37,29 @@ def build_context(block_table=None, vmem_budget=None):
     from repro.kernels.context import context_from_flags
 
     return context_from_flags(block_table, vmem_budget)
+
+
+def _print_failure_summary(done, health, injector=None):
+    from repro.serve.lifecycle import RequestState
+
+    by_status = {}
+    for rec in done.values():
+        by_status.setdefault(rec.status.value, []).append(rec)
+    print("request status: " + "  ".join(
+        f"{status}={len(recs)}" for status, recs in sorted(by_status.items())))
+    for rec in sorted(done.values(), key=lambda r: r.rid):
+        if rec.status is RequestState.FINISHED:
+            continue
+        print(f"  rid {rec.rid}: {rec.status.value} "
+              f"[{rec.error_kind}] after {rec.retries} retries, "
+              f"{rec.new_tokens} token(s) — {rec.error}")
+    counters = health["counters"]
+    print(f"engine health: retries={counters['retries']} "
+          f"slot_failures={counters['slot_failures']} "
+          f"dead_slots={health['dead_slots']} "
+          f"steps={counters['steps']} stalled={health['stalled']}")
+    if injector is not None:
+        print(f"fault injector: {json.dumps(injector.summary())}")
 
 
 def main():
@@ -54,6 +92,39 @@ def main():
                          "the fused single-kernel budget and the chained "
                          "prologue budget; applied after --block-table, so "
                          "the CLI wins.  Use to probe real-TPU ceilings.")
+    # -- request-lifecycle knobs (serve/lifecycle.py) -----------------------
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="per-request wall-clock deadline in seconds; "
+                         "expired requests come back as TIMED_OUT records")
+    ap.add_argument("--retries", type=int, default=2,
+                    help="bounded per-step retry budget before a request "
+                         "is FAILED and its slot quarantined")
+    ap.add_argument("--retry-backoff-s", type=float, default=0.0,
+                    help="base backoff between retries (doubles per attempt)")
+    ap.add_argument("--queue-bound", type=int, default=None,
+                    help="admission-queue depth limit; overflow is handled "
+                         "per --queue-policy as REJECTED records")
+    ap.add_argument("--queue-policy", default="reject_new",
+                    choices=("reject_new", "drop_oldest"))
+    ap.add_argument("--stall-patience", type=int, default=64,
+                    help="steps without progress before the watchdog aborts "
+                         "run() with a stall report")
+    # -- chaos (serve/faults.py) --------------------------------------------
+    ap.add_argument("--inject-faults", type=int, default=0, metavar="K",
+                    help="target K of the N requests with seeded hard "
+                         "faults; the run then ASSERTS exactly K "
+                         "FAILED/TIMED_OUT + N-K FINISHED records and "
+                         "exits 1 on mismatch")
+    ap.add_argument("--fault-seed", type=int, default=0)
+    ap.add_argument("--fault-kinds", default="exception,nan_logits,cache_corruption",
+                    help="comma-separated hard fault kinds to sample from "
+                         "(slow_step only fails requests via --deadline-s, "
+                         "so it is not in the default pool)")
+    ap.add_argument("--fault-phase", default="decode",
+                    choices=("prefill", "decode", "sampling"))
+    ap.add_argument("--parity-check", action="store_true",
+                    help="replay the same requests fault-free and assert "
+                         "the untargeted completions are bitwise identical")
     args = ap.parse_args()
 
     import jax
@@ -61,7 +132,9 @@ def main():
     from repro.configs import get_config
     from repro.models import model as model_lib
     from repro.models.config import reduced as reduce_cfg
-    from repro.serve.engine import Request, ServeEngine
+    from repro.serve.engine import ServeEngine
+    from repro.serve.faults import FaultInjector
+    from repro.serve.lifecycle import Request, RequestState
 
     ctx = build_context(args.block_table, args.vmem_budget)
     if args.block_table:
@@ -86,21 +159,74 @@ def main():
         )
         print("serving the W4A4+LRC quantized model")
 
-    eng = ServeEngine(cfg, params, batch_slots=args.slots, max_seq=args.max_seq,
-                      kernel_impl=args.impl, ctx=ctx)
+    injector = None
+    if args.inject_faults > 0:
+        kinds = tuple(k.strip() for k in args.fault_kinds.split(",") if k.strip())
+        injector = FaultInjector.sample(
+            range(args.requests), k=args.inject_faults, seed=args.fault_seed,
+            kinds=kinds, phase=args.fault_phase,
+            repeat=args.retries + 4,  # outlast the retry budget
+        )
+        print(f"injecting seeded faults (seed {args.fault_seed}) into "
+              f"{args.inject_faults}/{args.requests} requests: "
+              f"rids {sorted(injector.targets)}")
+
     rng = np.random.default_rng(0)
-    for i in range(args.requests):
-        eng.submit(Request(
-            rid=i,
-            prompt=rng.integers(0, cfg.vocab_size, 12).astype(np.int32),
-            max_new_tokens=args.new_tokens,
-        ))
+    prompts = [rng.integers(0, cfg.vocab_size, 12).astype(np.int32)
+               for _ in range(args.requests)]
+
+    def run_engine(inj):
+        eng = ServeEngine(
+            cfg, params, batch_slots=args.slots, max_seq=args.max_seq,
+            kernel_impl=args.impl, ctx=ctx,
+            max_retries=args.retries, retry_backoff_s=args.retry_backoff_s,
+            queue_limit=args.queue_bound, queue_policy=args.queue_policy,
+            default_deadline_s=args.deadline_s,
+            stall_patience=args.stall_patience, injector=inj,
+        )
+        for i, p in enumerate(prompts):
+            eng.submit(Request(rid=i, prompt=p.copy(),
+                               max_new_tokens=args.new_tokens))
+        return eng, eng.run()
+
     t0 = time.time()
-    done = eng.run()
+    eng, done = run_engine(injector)
     dt = time.time() - t0
     total = sum(len(r.out_tokens) for r in done.values())
-    print(f"{len(done)} requests, {total} tokens, {dt:.2f}s "
-          f"-> {total / dt:.1f} tok/s")
+    finished = [r for r in done.values() if r.ok]
+    print(f"{len(done)} requests ({len(finished)} finished), {total} tokens, "
+          f"{dt:.2f}s -> {total / max(dt, 1e-9):.1f} tok/s")
+    _print_failure_summary(done, eng.health(), injector)
+
+    ok = True
+    if injector is not None:
+        # the acceptance split: exactly K structured failures, N-K clean
+        failures = {r.rid for r in done.values()
+                    if r.status in (RequestState.FAILED, RequestState.TIMED_OUT)}
+        expect = injector.targets
+        if failures != expect or len(finished) != args.requests - len(expect):
+            print(f"CHAOS MISMATCH: expected failures {sorted(expect)}, "
+                  f"got {sorted(failures)} "
+                  f"({len(finished)} finished)", file=sys.stderr)
+            ok = False
+        else:
+            print(f"chaos split OK: {len(expect)} structured failures, "
+                  f"{len(finished)} completions, engine exited cleanly")
+        if args.parity_check:
+            _, clean = run_engine(None)
+            mismatched = [
+                rid for rid in sorted(set(done) - expect)
+                if done[rid].out_tokens != clean[rid].out_tokens
+            ]
+            if mismatched:
+                print(f"PARITY MISMATCH for untargeted rids {mismatched}",
+                      file=sys.stderr)
+                ok = False
+            else:
+                print(f"parity OK: {len(set(done) - expect)} untargeted "
+                      f"requests bitwise identical to the fault-free run")
+    if not ok:
+        sys.exit(1)
 
 
 if __name__ == "__main__":

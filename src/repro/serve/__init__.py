@@ -1,2 +1,5 @@
-from repro.serve.engine import ServeEngine, Request
-from repro.serve.sampling import sample_token
+from repro.serve.engine import ServeEngine
+from repro.serve.faults import FaultInjector, FaultSpec, InjectedFault
+from repro.serve.lifecycle import (IllegalTransition, Request, RequestRecord,
+                                   RequestState)
+from repro.serve.sampling import NonFiniteLogitsError, sample_token

@@ -1,4 +1,5 @@
-"""Batched serving engine (slot-based continuous batching).
+"""Batched serving engine (slot-based continuous batching) with a hardened
+request lifecycle.
 
 A fixed pool of B slots shares one jitted decode_step; requests are admitted
 into free slots (prefill writes their prompt into the slot's cache region),
@@ -6,8 +7,49 @@ decode steps advance ALL active slots together, finished slots are freed and
 refilled from the queue — the standard continuous-batching pattern, sized for
 the W4A4+LRC quantized model this framework serves.
 
-Single jitted decode signature ⇒ one compilation; per-slot positions are
-tracked host-side.  Works with FP or quantized (QLinear) params.
+On top of the happy path, the engine enforces the request lifecycle in
+``serve/lifecycle.py``:
+
+- **Admission control.**  ``submit()`` validates prompts (length vs.
+  ``max_seq``, token ids vs. the vocab, positive token budget, positive
+  deadline, unique rid) and enforces a bounded queue with a reject policy
+  — bad input yields a ``REJECTED`` record instead of corrupting a slot
+  cache deep inside prefill.
+- **Failure isolation.**  Prefill/decode/sampling for one slot runs
+  guarded: an exception or non-finite logits (NaN/Inf from quantized
+  activation blow-ups) fails ONLY that request.  The step is retried up
+  to ``max_retries`` with exponential backoff, then the slot is
+  quarantined (cache reset, failure streak bumped — ``slot_failure_limit``
+  consecutive request failures kill the slot) and a ``FAILED`` record with
+  the captured error is emitted.  Slot caches are per-slot and never
+  shared, so one request's corruption cannot leak into another's tokens.
+- **Deadlines & budgets.**  Per-request wall-clock deadlines (checked
+  while queued AND in flight) and token budgets; ``cancel(rid)`` works on
+  queued and in-flight requests.
+- **Liveness.**  ``health()`` snapshots slot states, queue depth,
+  retry/failure counters and steps-since-progress; a stall watchdog
+  aborts a wedged ``run()`` (e.g. every slot dead with work still queued)
+  with a diagnosable ``stall_report`` instead of spinning to
+  ``max_steps``.  When the step budget trips with requests still in
+  flight, they are returned as ``TIMED_OUT`` records, not dropped.
+- **Fault injection.**  A ``serve/faults.py`` injector can be threaded in
+  (``injector=``) to fire deterministic exceptions / NaN bursts / slow
+  steps / cache corruption at the phase boundaries — the chaos suite uses
+  it to prove the isolation contract.  The clock and sleep are injectable
+  (``clock=``, ``sleep_fn=``) so deadline/backoff behavior is testable
+  without real waiting.
+
+``run()`` returns ``{rid: RequestRecord}`` — structured terminal records
+(status, error kind, timings, token counts), not live request objects.
+
+Sampling keys are derived per (rid, token index) via ``fold_in``, so a
+request's output never depends on which slot it landed in, what else was
+in flight, or how many retries other requests burned — that is what makes
+"untargeted requests are bitwise identical under chaos" provable.
+
+Single jitted decode signature ⇒ one compilation, shared process-wide per
+config; per-slot positions are tracked host-side.  Works with FP or
+quantized (QLinear) params.
 
 Simplification vs. a paged server: each slot owns a contiguous max_seq cache
 region (no paging); for the dry-run shapes that is the assigned cache layout
@@ -16,32 +58,67 @@ anyway.
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Callable, Dict, List, Optional
+import functools
+import time
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models import model as model_lib
-from repro.serve.sampling import sample_token
+from repro.serve.faults import FaultInjector, InjectedFault
+from repro.serve.lifecycle import (Request, RequestRecord, RequestState,
+                                   TERMINAL_STATES)
+from repro.serve.sampling import NonFiniteLogitsError, sample_token
 
 
-@dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: np.ndarray  # (S,) int32
-    max_new_tokens: int = 16
-    temperature: float = 0.0
-    out_tokens: list = dataclasses.field(default_factory=list)
-    done: bool = False
+@functools.lru_cache(maxsize=16)
+def _model_fns(cfg) -> Tuple[Callable, Callable]:
+    """Per-config jitted prefill/decode, shared by every engine instance in
+    the process (cfg is a hashable static dataclass) — N engines over the
+    same config stop paying N compilations."""
+
+    @jax.jit
+    def _prefill(params, tokens, cache):
+        return model_lib.prefill(cfg, params, {"tokens": tokens}, cache)
+
+    @jax.jit
+    def _decode(params, tokens, cache):
+        return model_lib.decode_step(cfg, params, tokens, cache)
+
+    return _prefill, _decode
+
+
+def _classify_error(e: BaseException) -> Tuple[str, str]:
+    if isinstance(e, InjectedFault):
+        kind = "injected"
+    elif isinstance(e, NonFiniteLogitsError):
+        kind = "non_finite_logits"
+    else:
+        kind = "exception"
+    msg = f"{type(e).__name__}: {e}"
+    return kind, msg[:500]
 
 
 class ServeEngine:
     def __init__(self, cfg, params, batch_slots: int = 4, max_seq: int = 256,
                  eos_id: Optional[int] = None, seed: int = 0,
-                 kernel_impl: Optional[str] = "auto", ctx=None):
+                 kernel_impl: Optional[str] = "auto", ctx=None, *,
+                 max_retries: int = 2, retry_backoff_s: float = 0.0,
+                 queue_limit: Optional[int] = None,
+                 queue_policy: str = "reject_new",
+                 default_deadline_s: Optional[float] = None,
+                 slot_failure_limit: int = 3, stall_patience: int = 64,
+                 injector: Optional[FaultInjector] = None,
+                 clock: Callable[[], float] = time.monotonic,
+                 sleep_fn: Callable[[float], None] = time.sleep):
         assert cfg.family in ("dense", "vlm", "ssm", "hybrid", "moe"), cfg.family
+        if queue_policy not in ("reject_new", "drop_oldest"):
+            raise ValueError(f"unknown queue_policy {queue_policy!r}; "
+                             f"one of ('reject_new', 'drop_oldest')")
+        if max_retries < 0 or retry_backoff_s < 0:
+            raise ValueError("max_retries and retry_backoff_s must be >= 0")
         # Decode runs W4A4+LRC through the pallas kernels (single-kernel
         # fused forward at decode/mixed shapes, prologue→GEMM chain past the
         # VMEM gate) whenever a compiled backend is attached; "auto" keeps
@@ -66,79 +143,358 @@ class ServeEngine:
         self.b = batch_slots
         self.max_seq = max_seq
         self.eos_id = eos_id
-        self.key = jax.random.PRNGKey(seed)
-        self.cache = model_lib.init_cache(cfg, 1, max_seq, dtype=jnp.float32)
-        # per-slot caches (B=1 each) so slots admit/evict independently
-        self.slot_caches: List = [
-            model_lib.init_cache(cfg, 1, max_seq, dtype=jnp.float32)
-            for _ in range(batch_slots)
-        ]
+        self.base_key = jax.random.PRNGKey(seed)
+
+        self.max_retries = max_retries
+        self.retry_backoff_s = retry_backoff_s
+        self.queue_limit = queue_limit
+        self.queue_policy = queue_policy
+        self.default_deadline_s = default_deadline_s
+        self.slot_failure_limit = slot_failure_limit
+        self.stall_patience = stall_patience
+        self.injector = injector
+        self.clock = clock
+        self.sleep_fn = sleep_fn
+
+        # per-slot caches (B=1 each) so slots admit/evict independently and
+        # one request's corruption can never leak into a neighbor
+        self.slot_caches: List = [self._fresh_cache() for _ in range(batch_slots)]
         self.slot_req: List[Optional[Request]] = [None] * batch_slots
+        self.slot_fail_streak: List[int] = [0] * batch_slots
+        self.slot_dead: List[bool] = [False] * batch_slots
         self.queue: List[Request] = []
-        self.finished: Dict[int, Request] = {}
+        self.records: Dict[int, RequestRecord] = {}
+        self.counters: Dict[str, int] = {
+            "submitted": 0, "admitted": 0, "steps": 0, "retries": 0,
+            "finished": 0, "failed": 0, "rejected": 0, "cancelled": 0,
+            "timed_out": 0, "slot_failures": 0,
+        }
+        self._steps_since_progress = 0
+        self.stall_report: Optional[dict] = None
 
-        cfg_static = cfg
-
-        @jax.jit
-        def _prefill(params, tokens, cache):
-            return model_lib.prefill(cfg_static, params, {"tokens": tokens}, cache)
-
-        @jax.jit
-        def _decode(params, tokens, cache):
-            return model_lib.decode_step(cfg_static, params, tokens, cache)
-
-        self._prefill = _prefill
-        self._decode = _decode
+        self._prefill, self._decode = _model_fns(cfg)
 
     # -- public API ---------------------------------------------------------
 
-    def submit(self, req: Request):
+    def submit(self, req: Request) -> bool:
+        """Validate and enqueue; returns False (with a ``REJECTED`` record)
+        when admission control refuses the request."""
+        now = self.clock()
+        req.submitted_at = now
+        if req.deadline_s is None:
+            req.deadline_s = self.default_deadline_s
+        err = self._validate(req)
+        if err is not None:
+            if err[0] == "duplicate_rid":
+                # a second record cannot be indexed under the same rid —
+                # reject the duplicate in place, leaving the original
+                # request's record/queue entry untouched
+                req.error_kind, req.error = err
+                req.advance(RequestState.REJECTED, now)
+                self.counters["rejected"] += 1
+                return False
+            self._finalize(req, RequestState.REJECTED, *err)
+            return False
+        if self.queue_limit is not None and len(self.queue) >= self.queue_limit:
+            if self.queue_policy == "drop_oldest":
+                oldest = self.queue.pop(0)
+                self._finalize(oldest, RequestState.REJECTED, "queue_evicted",
+                               f"evicted by rid {req.rid} under drop_oldest "
+                               f"(queue_limit={self.queue_limit})")
+            else:
+                self._finalize(req, RequestState.REJECTED, "queue_full",
+                               f"queue at limit {self.queue_limit}")
+                return False
+        self.counters["submitted"] += 1
         self.queue.append(req)
+        return True
 
-    def run(self, max_steps: int = 1024):
-        """Drive until queue + slots drain (or step limit)."""
+    def cancel(self, rid: int) -> bool:
+        """Cancel a queued or in-flight request; False if unknown/terminal."""
+        for qi, req in enumerate(self.queue):
+            if req.rid == rid:
+                self.queue.pop(qi)
+                self._finalize(req, RequestState.CANCELLED, "cancelled",
+                               "cancelled while queued")
+                return True
+        for i, req in enumerate(self.slot_req):
+            if req is not None and req.rid == rid:
+                # applied immediately: free the slot, keep emitted tokens
+                self._release_slot(i)
+                self._finalize(req, RequestState.CANCELLED, "cancelled",
+                               "cancelled in flight")
+                return True
+        return False
+
+    def run(self, max_steps: int = 1024) -> Dict[int, RequestRecord]:
+        """Drive until queue + slots drain; never raises for per-request
+        failures.  Exhausting ``max_steps`` returns the survivors as
+        ``TIMED_OUT`` records; a detected stall aborts with
+        ``self.stall_report`` set."""
+        self.stall_report = None
         for _ in range(max_steps):
-            self._admit()
-            if not any(self.slot_req):
-                if not self.queue:
-                    break
-                continue
-            self._step()
-        return self.finished
+            self.counters["steps"] += 1
+            progressed = self._expire_deadlines()
+            progressed |= self._admit()
+            if not any(r is not None for r in self.slot_req) and not self.queue:
+                break
+            progressed |= self._step()
+            self._steps_since_progress = (
+                0 if progressed else self._steps_since_progress + 1)
+            stall = self._stall_reason()
+            if stall is not None:
+                self.stall_report = {"reason": stall, "health": self.health()}
+                self._drain_unfinished("stall", f"run() aborted: {stall}")
+                return self.records
+        else:
+            self._drain_unfinished(
+                "step_limit", f"engine step budget ({max_steps}) exhausted")
+        return self.records
 
-    # -- internals ----------------------------------------------------------
-
-    def _admit(self):
+    def health(self) -> dict:
+        """Live snapshot: slot states, queue depth, counters, liveness."""
+        slots = []
         for i in range(self.b):
-            if self.slot_req[i] is None and self.queue:
+            req = self.slot_req[i]
+            slots.append({
+                "slot": i,
+                "state": ("dead" if self.slot_dead[i]
+                          else req.state.value if req is not None else "idle"),
+                "rid": None if req is None else req.rid,
+                "tokens": 0 if req is None else len(req.out_tokens),
+                "fail_streak": self.slot_fail_streak[i],
+            })
+        return {
+            "slots": slots,
+            "queue_depth": len(self.queue),
+            "dead_slots": sum(self.slot_dead),
+            "counters": dict(self.counters),
+            "steps_since_progress": self._steps_since_progress,
+            "stalled": self.stall_report is not None,
+        }
+
+    # -- admission ----------------------------------------------------------
+
+    def _validate(self, req: Request) -> Optional[Tuple[str, str]]:
+        if (req.rid in self.records
+                or any(q.rid == req.rid for q in self.queue)
+                or any(r is not None and r.rid == req.rid for r in self.slot_req)):
+            return ("duplicate_rid", f"rid {req.rid} already known to the engine")
+        prompt = np.asarray(req.prompt)
+        if prompt.ndim != 1 or prompt.size == 0:
+            return ("empty_prompt", f"prompt must be a non-empty 1-D token "
+                                    f"array, got shape {prompt.shape}")
+        if not np.issubdtype(prompt.dtype, np.integer):
+            return ("bad_token_ids", f"prompt dtype {prompt.dtype} is not integral")
+        if prompt.min() < 0 or prompt.max() >= self.cfg.vocab_size:
+            return ("bad_token_ids",
+                    f"token ids outside [0, {self.cfg.vocab_size})")
+        if len(prompt) >= self.max_seq:
+            # an oversized prompt would overflow the slot's contiguous
+            # max_seq cache region deep inside prefill — refuse it here
+            return ("prompt_too_long",
+                    f"prompt length {len(prompt)} >= max_seq {self.max_seq}")
+        if req.max_new_tokens < 1:
+            return ("bad_token_budget",
+                    f"max_new_tokens must be >= 1, got {req.max_new_tokens}")
+        if req.deadline_s is not None and req.deadline_s <= 0:
+            return ("bad_deadline", f"deadline_s must be > 0, got {req.deadline_s}")
+        return None
+
+    def _admit(self) -> bool:
+        progressed = False
+        for i in range(self.b):
+            # a slot that finishes/fails at prefill frees up immediately,
+            # so keep pulling from the queue until it sticks or the queue
+            # (or the slot's life) runs out
+            while (not self.slot_dead[i] and self.slot_req[i] is None
+                   and self.queue):
                 req = self.queue.pop(0)
-                cache = model_lib.init_cache(self.cfg, 1, self.max_seq, dtype=jnp.float32)
-                toks = jnp.asarray(req.prompt[None, :], jnp.int32)
-                logits, cache = self._prefill(self.params, toks, cache)
-                self.slot_caches[i] = cache
-                self.slot_req[i] = req
-                tok = self._sample(logits[:, -1])
-                req.out_tokens.append(int(tok[0]))
+                progressed = True
+                self._admit_one(i, req)
+        return progressed
 
-    def _sample(self, logits):
-        self.key, sub = jax.random.split(self.key)
-        return sample_token(logits, sub, temperature=0.0)
+    def _admit_one(self, i: int, req: Request):
+        req.advance(RequestState.PREFILLING, self.clock())
+        self.counters["admitted"] += 1
+        cache = self._fresh_cache()
+        toks = jnp.asarray(np.asarray(req.prompt)[None, :], jnp.int32)
+        try:
+            tok, cache = self._attempt(req, "prefill", self._prefill, toks, cache)
+        except Exception as e:  # isolated: fails only this request
+            self._slot_failure(i, req, e)
+            return
+        self.slot_caches[i] = cache
+        self.slot_fail_streak[i] = 0
+        req.out_tokens.append(tok)
+        req.first_token_at = self.clock()
+        # the prefill-sampled token obeys the SAME termination predicate as
+        # decode tokens: max_new_tokens=1 means one token, and an EOS
+        # emitted at prefill ends the request
+        if self._should_finish(req, tok):
+            self._release_slot(i)
+            self._finalize(req, RequestState.FINISHED)
+        else:
+            req.advance(RequestState.DECODING, self.clock())
+            self.slot_req[i] = req
 
-    def _step(self):
+    # -- stepping -----------------------------------------------------------
+
+    def _step(self) -> bool:
+        progressed = False
         for i, req in enumerate(self.slot_req):
             if req is None:
                 continue
             last = jnp.asarray([[req.out_tokens[-1]]], jnp.int32)
-            logits, cache = self._decode(self.params, last, self.slot_caches[i])
+            try:
+                tok, cache = self._attempt(req, "decode", self._decode, last,
+                                           self.slot_caches[i])
+            except Exception as e:  # isolated: fails only this request
+                self._slot_failure(i, req, e)
+                progressed = True  # a terminal record IS progress
+                continue
             self.slot_caches[i] = cache
-            tok = int(self._sample(logits[:, -1])[0])
+            self.slot_fail_streak[i] = 0
             req.out_tokens.append(tok)
-            total = len(req.prompt) + len(req.out_tokens)
-            if (
-                len(req.out_tokens) >= req.max_new_tokens
-                or (self.eos_id is not None and tok == self.eos_id)
-                or total >= self.max_seq - 1
-            ):
-                req.done = True
-                self.finished[req.rid] = req
-                self.slot_req[i] = None
+            progressed = True
+            if self._should_finish(req, tok):
+                self._release_slot(i)
+                self._finalize(req, RequestState.FINISHED)
+        return progressed
+
+    def _attempt(self, req: Request, phase: str, fn, tokens, cache):
+        """One guarded forward+sample for one request, with bounded retries
+        and exponential backoff.  Nothing is committed on failure — the
+        caller's cache reference is untouched, so a retry restarts from
+        clean state.  Raises the last error once the budget is spent."""
+        attempt = 0
+        while True:
+            try:
+                fault = (self.injector.poll(req.rid, phase)
+                         if self.injector is not None else None)
+                cache_in = cache
+                if fault is not None:
+                    if fault.kind == "slow_step":
+                        self.injector.sleep(fault.seconds)
+                    elif fault.kind == "exception":
+                        raise InjectedFault(
+                            f"injected {phase} exception for rid {req.rid}")
+                    elif fault.kind == "cache_corruption":
+                        cache_in = self.injector.corrupt_cache(cache)
+                logits, new_cache = fn(self.params, tokens, cache_in)
+                if fault is not None and fault.kind in ("nan_logits", "inf_logits"):
+                    logits = self.injector.corrupt_logits(logits, fault.kind)
+                sfault = (self.injector.poll(req.rid, "sampling")
+                          if self.injector is not None else None)
+                if sfault is not None:
+                    if sfault.kind == "slow_step":
+                        self.injector.sleep(sfault.seconds)
+                    elif sfault.kind == "exception":
+                        raise InjectedFault(
+                            f"injected sampling exception for rid {req.rid}")
+                tok = int(self._sample(req, logits[:, -1])[0])
+                return tok, new_cache
+            except Exception:
+                attempt += 1
+                if attempt > self.max_retries:
+                    raise
+                req.retries += 1
+                self.counters["retries"] += 1
+                if self.retry_backoff_s > 0:
+                    self.sleep_fn(self.retry_backoff_s * (2 ** (attempt - 1)))
+
+    def _sample(self, req: Request, logits):
+        # key depends only on (engine seed, rid, token index): a request's
+        # tokens are invariant to slot placement, co-tenants, and retries —
+        # the property the chaos suite's bitwise-parity asserts rely on
+        key = jax.random.fold_in(
+            jax.random.fold_in(self.base_key, req.rid), len(req.out_tokens))
+        return sample_token(logits, key, temperature=req.temperature,
+                            check_finite=True)
+
+    def _should_finish(self, req: Request, tok: int) -> bool:
+        total = len(req.prompt) + len(req.out_tokens)
+        return (
+            len(req.out_tokens) >= req.max_new_tokens
+            or (self.eos_id is not None and tok == self.eos_id)
+            or total >= self.max_seq - 1
+        )
+
+    # -- failure handling / lifecycle ---------------------------------------
+
+    def _slot_failure(self, i: int, req: Request, e: BaseException):
+        """Quarantine the slot (reset its cache, bump the failure streak —
+        ``slot_failure_limit`` consecutive request failures kill it) and
+        fail ONLY this request with the captured error."""
+        kind, msg = _classify_error(e)
+        self._release_slot(i)
+        self.slot_fail_streak[i] += 1
+        self.counters["slot_failures"] += 1
+        if self.slot_fail_streak[i] >= self.slot_failure_limit:
+            self.slot_dead[i] = True
+        self._finalize(req, RequestState.FAILED, kind, msg)
+
+    def _release_slot(self, i: int):
+        self.slot_req[i] = None
+        self.slot_caches[i] = self._fresh_cache()
+
+    def _fresh_cache(self):
+        return model_lib.init_cache(self.cfg, 1, self.max_seq,
+                                    dtype=jnp.float32)
+
+    def _finalize(self, req: Request, status: RequestState,
+                  error_kind: Optional[str] = None,
+                  error: Optional[str] = None):
+        req.error_kind = error_kind
+        req.error = error
+        req.advance(status, self.clock())
+        self.records[req.rid] = RequestRecord.from_request(req)
+        self.counters[status.value] = self.counters.get(status.value, 0) + 1
+
+    def _expire_deadlines(self) -> bool:
+        now = self.clock()
+        progressed = False
+        for req in [q for q in self.queue]:
+            at = req.deadline_at()
+            if at is not None and now >= at:
+                self.queue.remove(req)
+                self._finalize(req, RequestState.TIMED_OUT, "deadline",
+                               f"deadline ({req.deadline_s:.3f}s) expired "
+                               f"while queued")
+                progressed = True
+        for i, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            at = req.deadline_at()
+            if at is not None and now >= at:
+                self._release_slot(i)
+                self._finalize(req, RequestState.TIMED_OUT, "deadline",
+                               f"deadline ({req.deadline_s:.3f}s) expired "
+                               f"after {len(req.out_tokens)} tokens")
+                progressed = True
+        return progressed
+
+    def _stall_reason(self) -> Optional[str]:
+        pending = bool(self.queue) or any(r is not None for r in self.slot_req)
+        if pending and all(self.slot_dead):
+            return (f"all {self.b} slots dead "
+                    f"(slot_failure_limit={self.slot_failure_limit}) with "
+                    f"{len(self.queue)} request(s) still queued")
+        if self._steps_since_progress > self.stall_patience:
+            return (f"no progress for {self._steps_since_progress} steps "
+                    f"(stall_patience={self.stall_patience})")
+        return None
+
+    def _drain_unfinished(self, kind: str, msg: str):
+        """Every request still queued or in a slot becomes a TIMED_OUT
+        record — nothing silently vanishes from ``run()``'s return."""
+        for i, req in enumerate(self.slot_req):
+            if req is not None:
+                self._release_slot(i)
+                self._finalize(req, RequestState.TIMED_OUT, kind,
+                               f"{msg}; in flight with "
+                               f"{len(req.out_tokens)} token(s)")
+        while self.queue:
+            req = self.queue.pop(0)
+            self._finalize(req, RequestState.TIMED_OUT, kind,
+                           f"{msg}; still queued")

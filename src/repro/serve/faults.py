@@ -1,0 +1,161 @@
+"""Deterministic fault injection for the serving engine.
+
+A :class:`FaultInjector` is handed to ``ServeEngine(injector=...)`` and
+polled at the three request-phase boundaries (``prefill`` / ``decode`` /
+``sampling``).  Every fault fires on a deterministic schedule — the n-th
+time a given (rid, phase) boundary is hit — so a chaos run is exactly
+reproducible: same specs (or same seed via :meth:`FaultInjector.sample`),
+same engine seed, same records, and the untargeted requests' outputs are
+bitwise identical to a fault-free run.
+
+Fault kinds:
+
+- ``exception``         raise :class:`InjectedFault` before the forward
+- ``nan_logits``        overwrite a deterministic slice of the logits with NaN
+- ``inf_logits``        same, with +Inf
+- ``slow_step``         burn ``seconds`` of (injectable) wall clock — pairs
+                        with per-request deadlines to produce TIMED_OUT
+- ``cache_corruption``  poison every float leaf of the slot cache fed to
+                        the forward (NaN), surfacing as non-finite logits
+                        at the decode boundary — LQER-style activation
+                        blow-ups in miniature
+
+The low-rank-corrected W4A4 regime this repo serves is exactly where
+activation outliers stress quantized numerics, so ``nan_logits`` /
+``cache_corruption`` are not hypothetical failure shapes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+FAULT_KINDS = ("exception", "nan_logits", "inf_logits", "slow_step",
+               "cache_corruption")
+FAULT_PHASES = ("prefill", "decode", "sampling")
+# sampling sees a token id, not logits or a cache — only control-flow
+# faults make sense there
+_SAMPLING_KINDS = ("exception", "slow_step")
+# hard kinds deterministically fail a request once they outlast the retry
+# budget; slow_step only fails via a deadline
+HARD_KINDS = ("exception", "nan_logits", "inf_logits", "cache_corruption")
+
+
+class InjectedFault(RuntimeError):
+    """Raised by the injector at an ``exception`` fault site."""
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """One scheduled fault: fire ``repeat`` consecutive times starting at
+    the ``at_call``-th hit of the (rid, phase) boundary."""
+
+    kind: str
+    phase: str
+    rid: int
+    at_call: int = 0
+    repeat: int = 1
+    seconds: float = 0.0  # slow_step only
+
+    def __post_init__(self):
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}; one of {FAULT_KINDS}")
+        if self.phase not in FAULT_PHASES:
+            raise ValueError(f"unknown fault phase {self.phase!r}; one of {FAULT_PHASES}")
+        if self.phase == "sampling" and self.kind not in _SAMPLING_KINDS:
+            raise ValueError(
+                f"fault kind {self.kind!r} cannot fire at the sampling "
+                f"boundary (no logits/cache there); use one of {_SAMPLING_KINDS}")
+        if self.at_call < 0 or self.repeat < 1:
+            raise ValueError(f"need at_call >= 0 and repeat >= 1, got "
+                             f"at_call={self.at_call} repeat={self.repeat}")
+        if self.kind == "slow_step" and self.seconds < 0:
+            raise ValueError(f"slow_step needs seconds >= 0, got {self.seconds}")
+
+
+class FaultInjector:
+    """Seed-/schedule-driven fault source, polled by the engine.
+
+    ``poll(rid, phase)`` increments the (rid, phase) hit counter and
+    returns the matching :class:`FaultSpec` (or None); the engine applies
+    the fault at the right point of the step.  Fired faults are logged in
+    ``self.fired`` as ``(spec, hit_index)`` for post-mortem asserts.
+    """
+
+    def __init__(self, specs: Sequence[FaultSpec],
+                 sleep_fn: Callable[[float], None] = time.sleep):
+        self.specs: Tuple[FaultSpec, ...] = tuple(specs)
+        self.sleep_fn = sleep_fn
+        self._hits: Dict[Tuple[int, str], int] = {}
+        self.fired: List[Tuple[FaultSpec, int]] = []
+
+    @classmethod
+    def sample(cls, rids: Sequence[int], k: int, seed: int,
+               kinds: Sequence[str] = HARD_KINDS, phase: str = "decode",
+               at_call_max: int = 3, repeat: int = 8, seconds: float = 0.05,
+               sleep_fn: Callable[[float], None] = time.sleep) -> "FaultInjector":
+        """Deterministically target ``k`` of ``rids``: the seed fixes which
+        requests are hit, with which kind, and on which call.  ``repeat``
+        defaults high enough to outlast any sane retry budget, so a
+        sampled hard fault reliably FAILs its request."""
+        if not 0 <= k <= len(rids):
+            raise ValueError(f"need 0 <= k <= {len(rids)}, got {k}")
+        rng = np.random.default_rng(seed)
+        targets = sorted(int(r) for r in
+                         rng.choice(np.asarray(list(rids)), size=k, replace=False))
+        specs = [
+            FaultSpec(kind=str(rng.choice(list(kinds))), phase=phase, rid=rid,
+                      at_call=int(rng.integers(0, max(1, at_call_max))),
+                      repeat=repeat, seconds=seconds)
+            for rid in targets
+        ]
+        return cls(specs, sleep_fn=sleep_fn)
+
+    @property
+    def targets(self) -> frozenset:
+        return frozenset(s.rid for s in self.specs)
+
+    def poll(self, rid: int, phase: str) -> Optional[FaultSpec]:
+        n = self._hits.get((rid, phase), 0)
+        self._hits[(rid, phase)] = n + 1
+        for spec in self.specs:
+            if (spec.rid == rid and spec.phase == phase
+                    and spec.at_call <= n < spec.at_call + spec.repeat):
+                self.fired.append((spec, n))
+                return spec
+        return None
+
+    def sleep(self, seconds: float):
+        self.sleep_fn(seconds)
+
+    # -- fault payloads ------------------------------------------------------
+
+    @staticmethod
+    def corrupt_logits(logits, kind: str):
+        """A deterministic non-finite burst: every 7th vocab entry."""
+        fill = float("nan") if kind == "nan_logits" else float("inf")
+        return jnp.asarray(logits).at[..., ::7].set(fill)
+
+    @staticmethod
+    def corrupt_cache(cache):
+        """Poison every float leaf (NaN everywhere) — integer leaves such
+        as the cache offset keep their values so the corruption surfaces
+        as non-finite activations, not a shape/index error."""
+        def poison(leaf):
+            leaf = jnp.asarray(leaf)
+            if jnp.issubdtype(leaf.dtype, jnp.inexact):
+                return jnp.full_like(leaf, float("nan"))
+            return leaf
+        return jax.tree.map(poison, cache)
+
+    def summary(self) -> Dict[str, object]:
+        return {
+            "specs": len(self.specs),
+            "targets": sorted(self.targets),
+            "fired": [(s.kind, s.phase, s.rid, n) for s, n in self.fired],
+        }

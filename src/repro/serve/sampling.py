@@ -1,4 +1,4 @@
-"""Token sampling (greedy / temperature / top-k)."""
+"""Token sampling (greedy / temperature / top-k) with a finite-ness guard."""
 
 from __future__ import annotations
 
@@ -6,8 +6,34 @@ import jax
 import jax.numpy as jnp
 
 
-def sample_token(logits, key, temperature: float = 0.0, top_k: int = 0):
-    """logits: (B, V) -> (B,) int32."""
+class NonFiniteLogitsError(FloatingPointError):
+    """Non-finite logits reached the sampling boundary.
+
+    W4A4+LRC inference is exactly the regime where activation outliers can
+    blow through the quantized numerics (LQER, arXiv 2402.02446); argmax
+    over NaN/Inf logits silently emits garbage tokens, so the serving
+    engine samples with ``check_finite=True`` and turns this into a
+    per-request structured failure instead of a corrupted completion.
+    """
+
+
+def sample_token(logits, key, temperature: float = 0.0, top_k: int = 0,
+                 check_finite: bool = False):
+    """logits: (B, V) -> (B,) int32.
+
+    ``check_finite=True`` raises :class:`NonFiniteLogitsError` (with NaN /
+    Inf counts for diagnosis) before any token is drawn from bad logits.
+    The check synchronizes on the device value, which is why it is opt-in:
+    the serving engine pays it once per step at the decode boundary.
+    """
+    if check_finite:
+        finite = jnp.isfinite(logits)
+        if not bool(jnp.all(finite)):
+            n_nan = int(jnp.isnan(logits).sum())
+            n_inf = int(jnp.isinf(logits).sum())
+            raise NonFiniteLogitsError(
+                f"non-finite logits at sampling boundary: {n_nan} NaN, "
+                f"{n_inf} Inf of {logits.size} entries")
     if temperature <= 0.0:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
     logits = logits / temperature

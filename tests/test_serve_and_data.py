@@ -72,6 +72,8 @@ def test_engine_matches_sequential_greedy(family_arch, rng):
         eng.submit(Request(rid=i, prompt=p, max_new_tokens=5))
     done = eng.run()
     assert sorted(done) == [0, 1, 2]
+    # run() now returns structured terminal records, all FINISHED here
+    assert all(done[i].ok and done[i].retries == 0 for i in range(3))
 
     # manual single-request reference
     for i, p in enumerate(prompts):

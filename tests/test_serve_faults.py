@@ -1,0 +1,324 @@
+"""Chaos suite: seeded deterministic fault injection against ServeEngine.
+
+The acceptance contract: with a FaultInjector targeting K of N requests
+(exceptions, NaN/Inf logit bursts, slow steps, cache corruption), the
+engine finishes with exactly K structured FAILED/TIMED_OUT records, the
+other N-K completions bitwise identical to a fault-free run, no unhandled
+exception escaping run(), and bounded-retry counters visible in health().
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import model
+from repro.models.config import reduced
+from repro.serve.engine import ServeEngine
+from repro.serve.faults import (FAULT_KINDS, HARD_KINDS, FaultInjector,
+                                FaultSpec, InjectedFault)
+from repro.serve.lifecycle import Request, RequestState
+from repro.serve.sampling import NonFiniteLogitsError, sample_token
+
+from test_serve_lifecycle import FakeClock
+
+N_REQ = 4
+NEW_TOKENS = 5
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = reduced(get_config("smollm-135m"))
+    params = model.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, 6).astype(np.int32)
+               for _ in range(N_REQ)]
+    return cfg, params, prompts
+
+
+def _run(cfg, params, prompts, **engine_kw):
+    eng = ServeEngine(cfg, params, batch_slots=2, max_seq=32, **engine_kw)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p.copy(), max_new_tokens=NEW_TOKENS))
+    return eng, eng.run()
+
+
+@pytest.fixture(scope="module")
+def baseline(served):
+    """Fault-free reference run: every request FINISHED."""
+    cfg, params, prompts = served
+    _, done = _run(cfg, params, prompts)
+    assert all(done[i].ok for i in range(N_REQ))
+    return {i: list(done[i].out_tokens) for i in range(N_REQ)}
+
+
+# -- the injector itself ----------------------------------------------------
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError, match="kind"):
+        FaultSpec("meteor", "decode", 0)
+    with pytest.raises(ValueError, match="phase"):
+        FaultSpec("exception", "epilogue", 0)
+    with pytest.raises(ValueError, match="sampling"):
+        FaultSpec("nan_logits", "sampling", 0)  # no logits at that boundary
+    with pytest.raises(ValueError, match="repeat"):
+        FaultSpec("exception", "decode", 0, repeat=0)
+    with pytest.raises(ValueError, match="seconds"):
+        FaultSpec("slow_step", "decode", 0, seconds=-1.0)
+    assert set(HARD_KINDS) == set(FAULT_KINDS) - {"slow_step"}
+
+
+def test_poll_schedule_is_positional():
+    spec = FaultSpec("exception", "decode", rid=1, at_call=2, repeat=2)
+    inj = FaultInjector([spec])
+    # decode hits 0..5 for rid 1: fires exactly on hits 2 and 3
+    hits = [inj.poll(1, "decode") for _ in range(6)]
+    assert [h is not None for h in hits] == [False, False, True, True, False,
+                                             False]
+    assert inj.poll(0, "decode") is None  # other rid never fires
+    assert inj.poll(1, "prefill") is None  # other phase never fires
+    assert inj.fired == [(spec, 2), (spec, 3)]
+
+
+def test_sample_is_seed_deterministic():
+    a = FaultInjector.sample(range(8), k=3, seed=11)
+    b = FaultInjector.sample(range(8), k=3, seed=11)
+    c = FaultInjector.sample(range(8), k=3, seed=12)
+    assert a.specs == b.specs
+    assert len(a.targets) == 3 and a.targets <= set(range(8))
+    assert all(s.kind in HARD_KINDS for s in a.specs)
+    assert c.specs != a.specs  # different seed, different schedule
+    with pytest.raises(ValueError):
+        FaultInjector.sample(range(4), k=5, seed=0)
+
+
+def test_corrupt_payloads():
+    import jax.numpy as jnp
+
+    logits = jnp.zeros((1, 32), jnp.float32)
+    nan = FaultInjector.corrupt_logits(logits, "nan_logits")
+    inf = FaultInjector.corrupt_logits(logits, "inf_logits")
+    assert bool(jnp.isnan(nan).any()) and not bool(jnp.isnan(nan).all())
+    assert bool(jnp.isinf(inf).any())
+    cache = {"k": jnp.ones((2, 3)), "offset": jnp.asarray(7, jnp.int32)}
+    bad = FaultInjector.corrupt_cache(cache)
+    assert bool(jnp.isnan(bad["k"]).all())
+    assert int(bad["offset"]) == 7  # int leaves (positions) survive
+
+
+# -- the chaos matrix -------------------------------------------------------
+
+MATRIX = [
+    ("exception", "prefill"),
+    ("exception", "decode"),
+    ("exception", "sampling"),
+    ("nan_logits", "prefill"),
+    ("nan_logits", "decode"),
+    ("inf_logits", "decode"),
+    ("cache_corruption", "decode"),
+]
+
+
+@pytest.mark.parametrize("kind,phase", MATRIX, ids=[f"{k}-{p}" for k, p in MATRIX])
+def test_chaos_k_of_n_split_and_parity(served, baseline, kind, phase):
+    """K=2 targeted requests fail structurally; the other N-K finish with
+    outputs bitwise identical to the fault-free run."""
+    cfg, params, prompts = served
+    targets = {1, 3}
+    # prefill is hit once per request, so its schedule must start at hit 0;
+    # decode/sampling are hit repeatedly and can fire mid-request
+    inj = FaultInjector([
+        FaultSpec(kind, phase, rid,
+                  at_call=(rid % 2 if phase != "prefill" else 0), repeat=16)
+        for rid in targets
+    ])
+    eng, done = _run(cfg, params, prompts, injector=inj, max_retries=1)
+    assert sorted(done) == list(range(N_REQ))  # nothing vanished
+    for rid in range(N_REQ):
+        rec = done[rid]
+        if rid in targets:
+            assert rec.status is RequestState.FAILED, (rid, rec)
+            assert rec.error_kind in ("injected", "non_finite_logits")
+            assert rec.retries == 1  # bounded budget was spent
+            assert rec.error  # captured message
+        else:
+            assert rec.ok
+            assert rec.out_tokens == baseline[rid], (kind, phase, rid)
+    h = eng.health()
+    assert h["counters"]["failed"] == len(targets)
+    assert h["counters"]["finished"] == N_REQ - len(targets)
+    assert h["counters"]["retries"] == len(targets)  # visible retry budget
+    assert inj.fired  # the schedule actually triggered
+
+
+def test_chaos_run_is_reproducible(served):
+    cfg, params, prompts = served
+    outs = []
+    for _ in range(2):
+        inj = FaultInjector.sample(range(N_REQ), k=2, seed=5)
+        _, done = _run(cfg, params, prompts, injector=inj, max_retries=1)
+        outs.append({r: (done[r].status, tuple(done[r].out_tokens),
+                         done[r].error_kind) for r in done})
+    assert outs[0] == outs[1]
+
+
+def test_sampled_injector_end_to_end(served, baseline):
+    cfg, params, prompts = served
+    inj = FaultInjector.sample(range(N_REQ), k=2, seed=3)
+    eng, done = _run(cfg, params, prompts, injector=inj, max_retries=2)
+    failed = {r for r in done if done[r].status is RequestState.FAILED}
+    assert failed == inj.targets and len(failed) == 2
+    for rid in set(range(N_REQ)) - failed:
+        assert done[rid].ok and done[rid].out_tokens == baseline[rid]
+
+
+# -- retries: recovery and exhaustion ---------------------------------------
+
+
+def test_transient_fault_recovers_with_retry(served, baseline):
+    """A fault that fires once is absorbed by the retry budget: everyone
+    finishes, bitwise equal to fault-free, and the retry is accounted."""
+    cfg, params, prompts = served
+    inj = FaultInjector([FaultSpec("exception", "decode", 1, at_call=1,
+                                   repeat=1)])
+    eng, done = _run(cfg, params, prompts, injector=inj, max_retries=2)
+    assert all(done[i].ok for i in range(N_REQ))
+    assert {i: done[i].out_tokens for i in range(N_REQ)} == baseline
+    assert done[1].retries == 1 and done[0].retries == 0
+    assert eng.health()["counters"]["retries"] == 1
+
+
+def test_transient_cache_corruption_recovers(served, baseline):
+    """Cache corruption is applied to the forward's INPUT, never committed:
+    once the fault stops firing, the retry restarts from clean state."""
+    cfg, params, prompts = served
+    inj = FaultInjector([FaultSpec("cache_corruption", "decode", 2,
+                                   at_call=0, repeat=2)])
+    _, done = _run(cfg, params, prompts, injector=inj, max_retries=2)
+    assert all(done[i].ok for i in range(N_REQ))
+    assert done[2].out_tokens == baseline[2]
+    assert done[2].retries == 2
+
+
+def test_retry_budget_boundary(served):
+    """repeat == max_retries recovers on the final attempt; repeat ==
+    max_retries + 1 exhausts the budget and fails."""
+    cfg, params, prompts = served
+    for repeat, ok in ((2, True), (3, False)):
+        inj = FaultInjector([FaultSpec("exception", "decode", 0,
+                                       at_call=0, repeat=repeat)])
+        _, done = _run(cfg, params, prompts, injector=inj, max_retries=2)
+        assert done[0].ok is ok, (repeat, done[0])
+        assert done[0].retries == 2
+
+
+def test_retry_backoff_is_exponential(served):
+    cfg, params, prompts = served
+    slept = []
+    inj = FaultInjector([FaultSpec("exception", "decode", 0, at_call=0,
+                                   repeat=2)])
+    _, done = _run(cfg, params, prompts, injector=inj, max_retries=3,
+                   retry_backoff_s=0.1, sleep_fn=slept.append)
+    assert done[0].ok
+    assert slept == pytest.approx([0.1, 0.2])
+
+
+# -- slow steps + deadlines -------------------------------------------------
+
+
+def test_slow_step_trips_deadline(served, baseline):
+    """A slow fault alone does not fail a request — but paired with a
+    per-request deadline it becomes a TIMED_OUT record."""
+    cfg, params, prompts = served
+    fc = FakeClock()
+    inj = FaultInjector([FaultSpec("slow_step", "decode", 1, at_call=0,
+                                   repeat=1, seconds=60.0)],
+                        sleep_fn=fc.sleep)
+    eng = ServeEngine(cfg, params, batch_slots=2, max_seq=32, injector=inj,
+                      clock=fc, sleep_fn=fc.sleep)
+    for i, p in enumerate(prompts):
+        # only the targeted request carries a deadline: the injected sleep
+        # burns shared wall-clock, which must not expire its neighbors
+        eng.submit(Request(rid=i, prompt=p.copy(), max_new_tokens=NEW_TOKENS,
+                           deadline_s=30.0 if i == 1 else None))
+    done = eng.run()
+    assert done[1].status is RequestState.TIMED_OUT
+    assert done[1].error_kind == "deadline"
+    for rid in (0, 2, 3):
+        assert done[rid].ok and done[rid].out_tokens == baseline[rid]
+
+
+def test_slow_step_without_deadline_is_harmless(served, baseline):
+    cfg, params, prompts = served
+    fc = FakeClock()
+    inj = FaultInjector([FaultSpec("slow_step", "decode", 1, at_call=0,
+                                   repeat=3, seconds=60.0)],
+                        sleep_fn=fc.sleep)
+    eng = ServeEngine(cfg, params, batch_slots=2, max_seq=32, injector=inj,
+                      clock=fc, sleep_fn=fc.sleep)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p.copy(), max_new_tokens=NEW_TOKENS))
+    done = eng.run()
+    assert all(done[i].ok for i in range(N_REQ))
+    assert {i: done[i].out_tokens for i in range(N_REQ)} == baseline
+
+
+# -- slot quarantine + stall watchdog ---------------------------------------
+
+
+def test_slot_death_and_stall_watchdog(served):
+    """Permanent prefill faults kill both slots (failure-limit 1); the
+    watchdog then aborts run() with a diagnosable report instead of
+    spinning to max_steps, and the queued survivors come back TIMED_OUT."""
+    cfg, params, prompts = served
+    inj = FaultInjector([FaultSpec("exception", "prefill", rid, at_call=0,
+                                   repeat=999) for rid in (0, 1)])
+    eng = ServeEngine(cfg, params, batch_slots=2, max_seq=32, injector=inj,
+                      max_retries=0, slot_failure_limit=1)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p.copy(), max_new_tokens=NEW_TOKENS))
+    done = eng.run(max_steps=500)
+    assert done[0].status is RequestState.FAILED
+    assert done[1].status is RequestState.FAILED
+    for rid in (2, 3):
+        assert done[rid].status is RequestState.TIMED_OUT
+        assert done[rid].error_kind == "stall"
+    assert eng.stall_report is not None
+    assert "slots dead" in eng.stall_report["reason"]
+    h = eng.health()
+    assert h["dead_slots"] == 2 and h["stalled"]
+    assert eng.counters["steps"] < 500  # aborted, did not spin to the limit
+
+
+def test_failure_streak_resets_on_success(served):
+    """One failure then a success must not accumulate toward slot death."""
+    cfg, params, prompts = served
+    inj = FaultInjector([FaultSpec("exception", "decode", 0, at_call=0,
+                                   repeat=16)])
+    eng, done = _run(cfg, params, prompts, injector=inj, max_retries=0,
+                     slot_failure_limit=2)
+    assert done[0].status is RequestState.FAILED
+    assert all(done[i].ok for i in (1, 2, 3))
+    assert not any(eng.slot_dead)
+    assert all(s["fail_streak"] <= 1 for s in eng.health()["slots"])
+
+
+# -- the sampling guard -----------------------------------------------------
+
+
+def test_sample_token_finite_guard(rng):
+    import jax.numpy as jnp
+
+    logits = jnp.asarray(rng.standard_normal((2, 16)), jnp.float32)
+    assert sample_token(logits, jax.random.PRNGKey(0), check_finite=True).shape == (2,)
+    bad = logits.at[0, 3].set(float("nan")).at[1, 5].set(float("inf"))
+    with pytest.raises(NonFiniteLogitsError, match="1 NaN, 1 Inf"):
+        sample_token(bad, jax.random.PRNGKey(0), check_finite=True)
+    # guard off: legacy behavior, caller's problem
+    sample_token(bad, jax.random.PRNGKey(0))
+
+
+def test_injected_fault_is_runtime_error():
+    assert issubclass(InjectedFault, RuntimeError)
+    assert issubclass(NonFiniteLogitsError, FloatingPointError)

@@ -1,0 +1,304 @@
+"""Request-lifecycle unit tests: the transition graph, admission control,
+deadlines, cancellation, step-limit draining, and health snapshots.
+
+The chaos/fault-injection suite lives in tests/test_serve_faults.py; this
+file pins the state machine itself."""
+
+import itertools
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import model
+from repro.models.config import reduced
+from repro.serve.engine import ServeEngine
+from repro.serve.lifecycle import (LEGAL_TRANSITIONS, TERMINAL_STATES,
+                                   IllegalTransition, Request, RequestRecord,
+                                   RequestState)
+
+
+class FakeClock:
+    """Deterministic engine clock; `sleep` advances it (wire it to the
+    engine's and injector's sleep_fn to make backoff/slow faults burn
+    virtual wall-clock)."""
+
+    def __init__(self, t: float = 0.0):
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+    def sleep(self, s: float):
+        self.t += s
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = reduced(get_config("smollm-135m"))
+    params = model.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, 6).astype(np.int32)
+               for _ in range(4)]
+    return cfg, params, prompts
+
+
+def _req(rid=0, n=6, **kw):
+    return Request(rid=rid, prompt=np.arange(n, dtype=np.int32), **kw)
+
+
+# -- the transition graph itself -------------------------------------------
+
+
+def test_every_transition_pair_legal_or_illegal():
+    """Exhaustive: every (from, to) pair either advances or raises, exactly
+    per LEGAL_TRANSITIONS — no edge is silently accepted."""
+    for s1, s2 in itertools.product(RequestState, RequestState):
+        req = _req()
+        req.state = s1
+        if s2 in LEGAL_TRANSITIONS[s1]:
+            req.advance(s2, now=1.0)
+            assert req.state is s2
+        else:
+            with pytest.raises(IllegalTransition):
+                req.advance(s2, now=1.0)
+            assert req.state is s1  # unchanged on refusal
+
+
+def test_terminal_states_are_absorbing():
+    for term in TERMINAL_STATES:
+        assert LEGAL_TRANSITIONS[term] == frozenset()
+        req = _req()
+        req.state = term
+        assert req.done
+        for s2 in RequestState:
+            with pytest.raises(IllegalTransition):
+                req.advance(s2)
+
+
+def test_rejected_only_reachable_from_queued():
+    sources = [s for s in RequestState
+               if RequestState.REJECTED in LEGAL_TRANSITIONS[s]]
+    assert sources == [RequestState.QUEUED]
+
+
+def test_advance_stamps_timestamps():
+    req = _req()
+    req.submitted_at = 1.0
+    req.advance(RequestState.PREFILLING, now=2.0)
+    req.advance(RequestState.DECODING, now=3.0)
+    req.first_token_at = 3.0
+    req.advance(RequestState.FINISHED, now=5.0)
+    rec = RequestRecord.from_request(req)
+    assert rec.timings["queue_s"] == pytest.approx(1.0)
+    assert rec.timings["first_token_s"] == pytest.approx(2.0)
+    assert rec.timings["total_s"] == pytest.approx(4.0)
+
+
+def test_record_requires_terminal_state():
+    req = _req()
+    with pytest.raises(IllegalTransition):
+        RequestRecord.from_request(req)
+    req.advance(RequestState.CANCELLED, now=1.0)
+    rec = RequestRecord.from_request(req)
+    assert rec.status is RequestState.CANCELLED and not rec.ok
+    assert rec.prompt_tokens == 6 and rec.new_tokens == 0
+
+
+# -- admission control ------------------------------------------------------
+
+
+def test_submit_rejects_bad_input(served):
+    cfg, params, _ = served
+    eng = ServeEngine(cfg, params, batch_slots=1, max_seq=8)
+    cases = {
+        0: (Request(rid=0, prompt=np.zeros(0, np.int32)), "empty_prompt"),
+        1: (Request(rid=1, prompt=np.zeros(4, np.float32)), "bad_token_ids"),
+        2: (Request(rid=2, prompt=np.full(4, cfg.vocab_size, np.int32)),
+            "bad_token_ids"),
+        3: (Request(rid=3, prompt=np.arange(8, dtype=np.int32)),
+            "prompt_too_long"),  # len == max_seq would overflow the cache
+        4: (_req(rid=4, n=4, max_new_tokens=0), "bad_token_budget"),
+        5: (_req(rid=5, n=4, deadline_s=-1.0), "bad_deadline"),
+    }
+    for rid, (req, kind) in cases.items():
+        assert eng.submit(req) is False
+        rec = eng.records[rid]
+        assert rec.status is RequestState.REJECTED and rec.error_kind == kind
+    # a valid one still goes through, then its rid is taken
+    assert eng.submit(_req(rid=6, n=4)) is True
+    dup = _req(rid=6, n=4)
+    assert eng.submit(dup) is False  # duplicate while queued
+    assert dup.state is RequestState.REJECTED
+    assert dup.error_kind == "duplicate_rid"
+    done = eng.run()
+    assert done[6].ok
+    assert eng.submit(_req(rid=6, n=4)) is False  # duplicate vs. records
+    assert eng.records[6].ok  # ...which did NOT clobber the finished record
+
+
+def test_queue_bound_reject_new(served):
+    cfg, params, _ = served
+    eng = ServeEngine(cfg, params, batch_slots=1, max_seq=16, queue_limit=2)
+    assert [eng.submit(_req(rid=i, n=4)) for i in range(4)] == [
+        True, True, False, False]
+    assert {r: eng.records[r].error_kind for r in (2, 3)} == {
+        2: "queue_full", 3: "queue_full"}
+    done = eng.run()
+    assert done[0].ok and done[1].ok
+
+
+def test_queue_bound_drop_oldest(served):
+    cfg, params, _ = served
+    eng = ServeEngine(cfg, params, batch_slots=1, max_seq=16, queue_limit=2,
+                      queue_policy="drop_oldest")
+    for i in range(4):
+        eng.submit(_req(rid=i, n=4))
+    # 2 and 3 displaced 0 and 1
+    assert eng.records[0].error_kind == "queue_evicted"
+    assert eng.records[1].error_kind == "queue_evicted"
+    done = eng.run()
+    assert done[2].ok and done[3].ok
+
+
+def test_bad_queue_policy_rejected(served):
+    cfg, params, _ = served
+    with pytest.raises(ValueError, match="queue_policy"):
+        ServeEngine(cfg, params, queue_policy="nope")
+
+
+# -- cancellation -----------------------------------------------------------
+
+
+def test_cancel_queued_and_inflight_and_unknown(served):
+    cfg, params, prompts = served
+    eng = ServeEngine(cfg, params, batch_slots=1, max_seq=32)
+    for i, p in enumerate(prompts[:3]):
+        eng.submit(Request(rid=i, prompt=p.copy(), max_new_tokens=5))
+    assert eng.cancel(99) is False
+    assert eng.cancel(2) is True  # still queued
+    eng._admit()  # rid 0 prefills into the slot
+    assert eng.cancel(0) is True  # in flight, keeps its prefill token
+    done = eng.run()
+    assert done[2].status is RequestState.CANCELLED and done[2].new_tokens == 0
+    assert done[0].status is RequestState.CANCELLED and done[0].new_tokens == 1
+    assert done[1].ok and done[1].new_tokens == 5
+    assert eng.cancel(1) is False  # already terminal
+
+
+# -- deadlines --------------------------------------------------------------
+
+
+def test_deadline_expires_while_queued(served):
+    cfg, params, prompts = served
+    fc = FakeClock()
+    eng = ServeEngine(cfg, params, batch_slots=1, max_seq=32, clock=fc,
+                      sleep_fn=fc.sleep)
+    eng.submit(Request(rid=0, prompt=prompts[0].copy(), deadline_s=5.0))
+    fc.t = 6.0
+    done = eng.run()
+    rec = done[0]
+    assert rec.status is RequestState.TIMED_OUT
+    assert rec.error_kind == "deadline" and rec.new_tokens == 0
+
+
+def test_deadline_expires_in_flight(served):
+    cfg, params, prompts = served
+    fc = FakeClock()
+    eng = ServeEngine(cfg, params, batch_slots=1, max_seq=32, clock=fc,
+                      sleep_fn=fc.sleep)
+    eng.submit(Request(rid=0, prompt=prompts[0].copy(), max_new_tokens=50,
+                       deadline_s=5.0))
+    eng._admit()  # prefill at t=0, one token out
+    fc.t = 6.0
+    done = eng.run()
+    rec = done[0]
+    assert rec.status is RequestState.TIMED_OUT and rec.error_kind == "deadline"
+    assert rec.new_tokens >= 1  # partial output is preserved in the record
+
+
+def test_default_deadline_applies(served):
+    cfg, params, prompts = served
+    fc = FakeClock()
+    eng = ServeEngine(cfg, params, batch_slots=1, max_seq=32, clock=fc,
+                      sleep_fn=fc.sleep, default_deadline_s=5.0)
+    eng.submit(Request(rid=0, prompt=prompts[0].copy()))
+    fc.t = 6.0
+    assert eng.run()[0].status is RequestState.TIMED_OUT
+
+
+# -- prefill-token termination (the old off-by-one) -------------------------
+
+
+def test_max_new_tokens_one_yields_one_token(served):
+    cfg, params, prompts = served
+    eng = ServeEngine(cfg, params, batch_slots=1, max_seq=32)
+    eng.submit(Request(rid=0, prompt=prompts[0].copy(), max_new_tokens=1))
+    done = eng.run()
+    assert done[0].ok and len(done[0].out_tokens) == 1
+
+
+def test_eos_at_prefill_terminates(served):
+    cfg, params, prompts = served
+    eng = ServeEngine(cfg, params, batch_slots=1, max_seq=32)
+    eng.submit(Request(rid=0, prompt=prompts[0].copy(), max_new_tokens=5))
+    first_tok = eng.run()[0].out_tokens[0]
+
+    eng2 = ServeEngine(cfg, params, batch_slots=1, max_seq=32,
+                       eos_id=int(first_tok))
+    eng2.submit(Request(rid=0, prompt=prompts[0].copy(), max_new_tokens=5))
+    rec = eng2.run()[0]
+    assert rec.ok and rec.out_tokens == [first_tok]  # EOS honored at prefill
+
+
+# -- step-limit draining ----------------------------------------------------
+
+
+def test_step_limit_returns_timed_out_records(served):
+    """Requests still occupying slots (or queued) when max_steps trips must
+    come back as TIMED_OUT records, not vanish."""
+    cfg, params, prompts = served
+    eng = ServeEngine(cfg, params, batch_slots=1, max_seq=64)
+    for i in range(3):
+        eng.submit(Request(rid=i, prompt=prompts[i].copy(), max_new_tokens=40))
+    done = eng.run(max_steps=3)
+    assert sorted(done) == [0, 1, 2]  # nobody dropped
+    assert all(done[i].status is RequestState.TIMED_OUT for i in range(3))
+    assert all(done[i].error_kind == "step_limit" for i in range(3))
+    assert done[0].new_tokens >= 1  # the in-flight one keeps its tokens
+    assert done[2].new_tokens == 0  # the queued ones never started
+
+
+# -- health -----------------------------------------------------------------
+
+
+def test_health_snapshot_fields(served):
+    cfg, params, prompts = served
+    eng = ServeEngine(cfg, params, batch_slots=2, max_seq=32)
+    h0 = eng.health()
+    assert [s["state"] for s in h0["slots"]] == ["idle", "idle"]
+    assert h0["queue_depth"] == 0 and not h0["stalled"]
+    for i in range(3):
+        eng.submit(Request(rid=i, prompt=prompts[i].copy(), max_new_tokens=4))
+    eng._admit()
+    h1 = eng.health()
+    assert [s["state"] for s in h1["slots"]] == ["decoding", "decoding"]
+    assert h1["queue_depth"] == 1
+    assert h1["counters"]["admitted"] == 2
+    eng.run()
+    h2 = eng.health()
+    assert h2["counters"]["finished"] == 3
+    assert h2["counters"]["retries"] == 0
+    assert h2["steps_since_progress"] == 0
+
+
+def test_run_returns_records_not_requests(served):
+    cfg, params, prompts = served
+    eng = ServeEngine(cfg, params, batch_slots=1, max_seq=32)
+    eng.submit(Request(rid=0, prompt=prompts[0].copy(), max_new_tokens=3))
+    done = eng.run()
+    assert isinstance(done[0], RequestRecord)
+    assert done[0].status is RequestState.FINISHED
+    assert done[0].prompt_tokens == 6 and done[0].new_tokens == 3
+    assert done[0].timings["total_s"] >= 0.0
