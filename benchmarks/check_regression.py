@@ -12,10 +12,21 @@ the CURRENT code and compares them against the committed baseline
     activation bytes at decode shapes (the PR acceptance invariant: the M×K
     xq write+read is eliminated).
 
+With ``--serve`` the gate instead compares a freshly measured serving run
+(``results/BENCH_serve_smoke.json`` from ``benchmarks.serve_latency
+--smoke``) against the committed ``results/BENCH_serve.json``.  Wall-clock
+columns are informational (CI runners are too noisy); the gate guards the
+DETERMINISTIC efficiency columns — ``decode_calls_per_token`` (must stay
+exactly ``1/batch``: one batched decode call per engine step) and
+``prefill_chunks_per_prompt`` — which are token-count invariant, so smoke
+rows compare against the full baseline directly.
+
 Exit status 1 on any violation — wire this after the bench-smoke step in CI.
 
     PYTHONPATH=src python -m benchmarks.check_regression \
         [--baseline results/latency_kernels.json] [--tolerance 0.05]
+    PYTHONPATH=src python -m benchmarks.check_regression --serve \
+        [--serve-current results/BENCH_serve_smoke.json]
 """
 
 from __future__ import annotations
@@ -95,23 +106,113 @@ def check(baseline_path: Path, tolerance: float) -> list[str]:
     return failures
 
 
+# serving-efficiency columns the --serve gate protects.  Both are exact
+# consequences of the engine's batching structure (see
+# benchmarks/serve_latency.py), so ANY growth over baseline is a structural
+# regression — but the shared --tolerance still applies for symmetry.
+_SERVE_GUARDED = ["decode_calls_per_token", "prefill_chunks_per_prompt"]
+_SERVE_KEY = ["batch", "page_size", "prefill_chunk"]
+_SERVE_REGEN = ("regenerate them with: PYTHONPATH=src python -m "
+                "benchmarks.serve_latency (baseline) and "
+                "PYTHONPATH=src python -m benchmarks.serve_latency --smoke "
+                "(current)")
+
+
+def _load_table(path: Path, needed: list[str]):
+    """Load a benchmarks.common.record() table; return (err, idx, rows)."""
+    try:
+        data = json.loads(path.read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        return f"{path} is unreadable ({e}); {_SERVE_REGEN}", None, None
+    if not isinstance(data, dict) or "header" not in data or "rows" not in data:
+        return f"{path} lacks header/rows; {_SERVE_REGEN}", None, None
+    idx = {h: i for i, h in enumerate(data["header"])}
+    missing = [c for c in needed if c not in idx]
+    if missing:
+        return (f"{path} lacks columns {missing} — it predates this code; "
+                f"{_SERVE_REGEN}"), None, None
+    short = [r for r in data["rows"] if len(r) < len(data["header"])]
+    if short:
+        return (f"{path} has {len(short)} row(s) shorter than its header; "
+                f"{_SERVE_REGEN}"), None, None
+    return None, idx, data["rows"]
+
+
+def check_serve(baseline_path: Path, current_path: Path,
+                tolerance: float) -> list[str]:
+    needed = _SERVE_GUARDED + _SERVE_KEY
+    err, b_idx, b_raw = _load_table(baseline_path, needed)
+    if err:
+        return [err]
+    err, c_idx, c_rows = _load_table(current_path, needed)
+    if err:
+        return [err]
+    b_rows = {tuple(r[b_idx[k]] for k in _SERVE_KEY): r for r in b_raw}
+
+    failures = []
+    matched = 0
+    for row in c_rows:
+        key = tuple(row[c_idx[k]] for k in _SERVE_KEY)
+        tag = f"B={key[0]} page={key[1]} chunk={key[2]}"
+        # structural invariant: ONE batched decode call per engine step,
+        # independent of any baseline — 1/batch exactly
+        cpt = row[c_idx["decode_calls_per_token"]]
+        if abs(cpt - 1.0 / key[0]) > 1e-4:
+            failures.append(
+                f"{tag}: decode_calls_per_token {cpt} != 1/batch "
+                f"({1.0 / key[0]:.6f}) — decode is no longer one batched "
+                "call per step")
+        base = b_rows.get(key)
+        if base is None:
+            continue  # new grid point, nothing to regress against
+        matched += 1
+        for col in _SERVE_GUARDED:
+            b, c = base[b_idx[col]], row[c_idx[col]]
+            if not (isinstance(b, (int, float)) and isinstance(c, (int, float))):
+                continue
+            if b > 0 and c > b * (1.0 + tolerance):
+                failures.append(
+                    f"{tag} {col}: {c} vs baseline {b} "
+                    f"(+{(c / b - 1) * 100:.1f}% > {tolerance * 100:.0f}%)")
+    if matched == 0:
+        failures.append(
+            f"no baseline rows matched current serve grid — baseline "
+            f"{baseline_path} is stale; {_SERVE_REGEN}")
+    return failures
+
+
 def main(argv=None) -> int:
+    results = Path(__file__).resolve().parents[1] / "results"
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline",
-                    default=str(Path(__file__).resolve().parents[1]
-                                / "results" / "latency_kernels.json"))
+                    default=str(results / "latency_kernels.json"))
     ap.add_argument("--tolerance", type=float, default=0.05)
+    ap.add_argument("--serve", action="store_true",
+                    help="gate the serving benchmark instead of the kernel "
+                         "roofline (compares --serve-current against "
+                         "--serve-baseline)")
+    ap.add_argument("--serve-baseline",
+                    default=str(results / "BENCH_serve.json"))
+    ap.add_argument("--serve-current",
+                    default=str(results / "BENCH_serve_smoke.json"))
     args = ap.parse_args(argv)
 
-    failures = check(Path(args.baseline), args.tolerance)
+    if args.serve:
+        failures = check_serve(Path(args.serve_baseline),
+                               Path(args.serve_current), args.tolerance)
+        name = "serving regression gate"
+        detail = (f"baseline {args.serve_baseline}, "
+                  f"current {args.serve_current}")
+    else:
+        failures = check(Path(args.baseline), args.tolerance)
+        name = "roofline regression gate"
+        detail = f"baseline {args.baseline}"
     if failures:
-        print("roofline regression gate FAILED:")
+        print(f"{name} FAILED:")
         for f in failures:
             print(f"  {f}")
         return 1
-    print(f"roofline regression gate passed "
-          f"(tolerance {args.tolerance * 100:.0f}%, "
-          f"baseline {args.baseline})")
+    print(f"{name} passed (tolerance {args.tolerance * 100:.0f}%, {detail})")
     return 0
 
 

@@ -3,7 +3,14 @@ the synthetic corpus, quantize it W4A4 with LRC, and SERVE batched requests
 through the continuous-batching engine — comparing PPL and greedy outputs of
 the FP and quantized models.
 
-    PYTHONPATH=src python examples/serve_quantized.py [--steps 200]
+The serving step uses the paged KV cache: ``--page-size`` sets the page
+granularity and ``--prefill-chunk`` enables chunked prefill (long prompts
+advance one chunk per engine step, interleaved with batched decode).  Both
+knobs change scheduling/placement only — greedy outputs are bitwise
+identical across settings (docs/serving.md).
+
+    PYTHONPATH=src python examples/serve_quantized.py [--steps 200] \
+        [--page-size 16] [--prefill-chunk 8]
 """
 
 import argparse
@@ -36,9 +43,20 @@ def ppl(cfg, params, n=3, bsz=8, seq=64):
     return float(np.exp(-total_ll / total_n))
 
 
+def _positive_int(s):
+    v = int(s)
+    if v <= 0:
+        raise argparse.ArgumentTypeError(f"must be a positive integer, got {s}")
+    return v
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--page-size", type=_positive_int, default=16,
+                    help="paged-KV page granularity in tokens")
+    ap.add_argument("--prefill-chunk", type=_positive_int, default=None,
+                    help="chunked-prefill width; default = whole prompt")
     args = ap.parse_args()
 
     cfg = reduced(get_config("smollm-135m"), n_layers=4, d_model=128,
@@ -65,7 +83,9 @@ def main():
 
     print("[4/4] serving batched requests through the quantized model ...")
     rng = np.random.default_rng(0)
-    eng = ServeEngine(cfg, qparams, batch_slots=4, max_seq=96)
+    eng = ServeEngine(cfg, qparams, batch_slots=4, max_seq=96,
+                      page_size=args.page_size,
+                      prefill_chunk=args.prefill_chunk)
     n_req, new_toks = 8, 24
     for i in range(n_req):
         eng.submit(Request(rid=i, prompt=rng.integers(0, cfg.vocab_size, 16).astype(np.int32),

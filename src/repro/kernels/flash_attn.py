@@ -54,6 +54,88 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, *, scale: float, causal: bool,
     o_ref[0] = (acc / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
 
 
+def _paged_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref, *,
+                  scale: float, page_size: int, n_pages: int):
+    """One (sequence, kv-head) program of paged decode attention.
+
+    The KV gather happens HERE, per page id from the block table — scores
+    stream page-by-page through the online-softmax statistics, so a
+    sequence's KV never needs to be contiguous (or even materialized
+    gathered) in HBM.  Positions at and past ``length`` are masked to
+    NEG_INF, which is what makes the result invariant to whatever garbage
+    the unowned / null pages hold."""
+    q = q_ref[0, 0].astype(jnp.float32) * scale  # (G, D) grouped queries
+    bt = bt_ref[0]  # (MPB,) page ids, null page 0 past the owned prefix
+    length = len_ref[0]  # valid kv positions, incl. the current token
+    kpool = k_ref[0]  # (NP, P, D) this kv-head's slice of the pool
+    vpool = v_ref[0]
+    g = q.shape[0]
+    m = jnp.full((g, 1), NEG_INF, jnp.float32)
+    l = jnp.zeros((g, 1), jnp.float32)
+    acc = jnp.zeros((g, vpool.shape[-1]), jnp.float32)
+
+    def body(j, carry):
+        m, l, acc = carry
+        pid = bt[j]
+        k = jax.lax.dynamic_index_in_dim(kpool, pid, 0, keepdims=False)
+        v = jax.lax.dynamic_index_in_dim(vpool, pid, 0, keepdims=False)
+        s = q @ k.astype(jnp.float32).T  # (G, P)
+        kpos = j * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, (g, page_size), 1)
+        s = jnp.where(kpos < length, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc * corr + p @ v.astype(jnp.float32)
+        return m_new, l, acc
+
+    m, l, acc = jax.lax.fori_loop(0, n_pages, body, (m, l, acc))
+    o_ref[0, 0] = (acc / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_flash_attention_kernel(
+    q: jnp.ndarray,            # (B, H, D) one decode token per sequence
+    k_pages: jnp.ndarray,      # (NP, P, KH, D) shared page pool
+    v_pages: jnp.ndarray,      # (NP, P, KH, Dv)
+    block_table: jnp.ndarray,  # (B, MPB) int32 page ids (0 = null page)
+    lengths: jnp.ndarray,      # (B,) int32 valid kv count, incl. current token
+    scale: float,
+    interpret: bool = True,
+):
+    """Decode attention against a PAGED KV pool (the serving engine's cache
+    layout): each sequence reads its pages through its block-table row, so
+    no per-request contiguous KV copy is ever materialized.  GQA is handled
+    natively — grid is (B, KH) and each program computes all H/KH query
+    heads of its group against one gathered page stream.  Returns (B, H, Dv).
+    """
+    b, h, d = q.shape
+    n_pages_total, page_size, kh, dv = v_pages.shape
+    g = h // kh
+    mpb = block_table.shape[1]
+    qg = q.reshape(b, kh, g, d)  # heads grouped by kv head
+    kp = k_pages.transpose(2, 0, 1, 3)  # (KH, NP, P, D)
+    vp = v_pages.transpose(2, 0, 1, 3)
+    out = pl.pallas_call(
+        functools.partial(_paged_kernel, scale=scale, page_size=page_size,
+                          n_pages=mpb),
+        grid=(b, kh),
+        in_specs=[
+            pl.BlockSpec((1, mpb), lambda i, j: (i, 0)),
+            pl.BlockSpec((1,), lambda i, j: (i,)),
+            pl.BlockSpec((1, 1, g, d), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, n_pages_total, page_size, d), lambda i, j: (j, 0, 0, 0)),
+            pl.BlockSpec((1, n_pages_total, page_size, dv), lambda i, j: (j, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, dv), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kh, g, dv), q.dtype),
+        interpret=interpret,
+    )(jnp.asarray(block_table, jnp.int32), jnp.asarray(lengths, jnp.int32),
+      qg, kp, vp)
+    return out.reshape(b, h, dv)
+
+
 @functools.partial(jax.jit, static_argnames=("scale", "causal", "bq", "bkv", "interpret"))
 def flash_attention_kernel(
     q: jnp.ndarray,  # (BH, Sq, D)

@@ -77,7 +77,8 @@ from repro.kernels.rowops import (project_rows_tiled,
                                   round_pow2 as _round_pow2,
                                   snap_bk_to_group)
 from repro.kernels.w4a4 import w4a4_lowrank_matmul_kernel
-from repro.kernels.flash_attn import flash_attention_kernel
+from repro.kernels.flash_attn import (flash_attention_kernel,
+                                      paged_flash_attention_kernel)
 
 __all__ = [
     "KernelContext", "Plan", "gemm_regime", "default_context",
@@ -466,3 +467,15 @@ def flash_attention(q, k, v, scale: float, causal: bool = True,
     out = flash_attention_kernel(qf, kf, vf, scale, causal=causal,
                                  bq=bq, bkv=bkv, interpret=_interpret(ctx))
     return out.reshape(b, h, sq, -1).transpose(0, 2, 1, 3)
+
+
+def paged_flash_attention(q, k_pages, v_pages, block_table, lengths,
+                          scale: float, ctx: KernelContext = None):
+    """Decode attention against the serving engine's paged KV pool.
+    q: (B, H, D) one token per sequence; k/v_pages: (NP, P, KH, D[v]);
+    block_table: (B, MPB) int32; lengths: (B,) valid kv positions including
+    the current token.  The page gather runs inside the kernel — no
+    contiguous per-request KV copy is materialized.  Returns (B, H, Dv)."""
+    return paged_flash_attention_kernel(
+        q, k_pages, v_pages, block_table, lengths, scale,
+        interpret=_interpret(ctx))

@@ -2,9 +2,15 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m \
         [--quantize] [--requests 8] [--new-tokens 16] \
+        [--page-size 16] [--kv-pages N] [--prefill-chunk C] \
         [--block-table results/block_table.json] [--vmem-budget BYTES] \
         [--deadline-s 30] [--retries 2] [--queue-bound 64] \
         [--inject-faults K --fault-seed S --parity-check]
+
+KV-cache knobs (docs/serving.md): ``--page-size`` sets the paged-KV page
+granularity, ``--kv-pages`` shrinks the shared page pool (admission then
+accounts in available pages, not max_seq), ``--prefill-chunk`` enables
+chunked prefill so long prompts interleave with ongoing decode.
 
 The kernel execution config (--block-table / --vmem-budget) is assembled
 into one immutable ``KernelContext`` handed to the engine — no
@@ -29,6 +35,13 @@ import argparse
 import json
 import sys
 import time
+
+
+def _positive_int(s):
+    v = int(s)
+    if v <= 0:
+        raise argparse.ArgumentTypeError(f"must be a positive integer, got {s}")
+    return v
 
 
 def build_context(block_table=None, vmem_budget=None):
@@ -73,6 +86,21 @@ def main():
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--page-size", type=_positive_int, default=16,
+                    help="paged-KV page granularity in tokens; pages are "
+                         "allocated lazily as sequences cross page "
+                         "boundaries and freed on terminal transitions")
+    ap.add_argument("--kv-pages", type=_positive_int, default=None,
+                    help="total pages in the shared KV pool (default sizes "
+                         "the pool so exhaustion is impossible: "
+                         "slots*ceil(max_seq/page_size)+1).  Shrinking it "
+                         "makes admission account in available pages and "
+                         "surfaces kv_pages_exhausted failures")
+    ap.add_argument("--prefill-chunk", type=_positive_int, default=None,
+                    help="chunked prefill width in tokens; long prompts "
+                         "prefill one chunk per engine step, interleaved "
+                         "with ongoing batched decode (default: whole "
+                         "prompt in one forward)")
     ap.add_argument("--impl", default="auto",
                     choices=("auto", "sim", "int8", "pallas", "fused"),
                     help="QLinear execution path for decode; auto = pallas "
@@ -178,6 +206,8 @@ def main():
     def run_engine(inj):
         eng = ServeEngine(
             cfg, params, batch_slots=args.slots, max_seq=args.max_seq,
+            page_size=args.page_size, kv_pages=args.kv_pages,
+            prefill_chunk=args.prefill_chunk,
             kernel_impl=args.impl, ctx=ctx,
             max_retries=args.retries, retry_backoff_s=args.retry_backoff_s,
             queue_limit=args.queue_bound, queue_policy=args.queue_policy,

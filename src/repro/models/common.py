@@ -136,18 +136,25 @@ def attention(
     q: jnp.ndarray,  # (B, Sq, H, Dq)
     k: jnp.ndarray,  # (B, Skv, K, Dq)
     v: jnp.ndarray,  # (B, Skv, K, Dv)
-    mask,  # (Sq, Skv) bool or None
+    mask,  # (Sq, Skv) or per-row (B, Sq, Skv) bool, or None
     scale: float,
 ) -> jnp.ndarray:
     """GQA attention: H query heads grouped over K kv heads. Returns
-    (B, Sq, H, Dv).  Softmax in f32."""
+    (B, Sq, H, Dv).  Softmax in f32.
+
+    A 2-D mask is shared across the batch; a 3-D mask carries one (Sq, Skv)
+    plane per batch row — the batched-decode case where co-tenant requests
+    sit at different sequence lengths.  Masked positions contribute exactly
+    0.0 to the output (exp(-1e30 - m) underflows), so results are bitwise
+    invariant to whatever finite garbage sits in masked cache slots."""
     b, sq, h, dq = q.shape
     kheads = k.shape[2]
     g = h // kheads
     q = q.reshape(b, sq, kheads, g, dq)
     logits = jnp.einsum("bqkgd,bskd->bkgqs", q, k).astype(jnp.float32) * scale
     if mask is not None:
-        logits = jnp.where(mask[None, None, None], logits, -1e30)
+        m = mask[None, None, None] if mask.ndim == 2 else mask[:, None, None]
+        logits = jnp.where(m, logits, -1e30)
     probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
     out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
     return out.reshape(b, sq, h, v.shape[-1])
@@ -162,6 +169,65 @@ def mlp_block(p: dict, x: jnp.ndarray, act: str) -> jnp.ndarray:
     else:
         h = jax.nn.gelu(g, approximate=True) * u
     return apply_linear(p["wd"], h)
+
+
+def paged_cache_update(
+    pages: jnp.ndarray,      # (NP, P, K, hd) one layer's page pool
+    update: jnp.ndarray,     # (B, S, K, hd) new k or v rows
+    block_table: jnp.ndarray,  # (B, MPB) int32 page ids, 0 = null page
+    positions: jnp.ndarray,  # (B, S) absolute token positions
+    valid: jnp.ndarray,      # (B, S) bool; False rows write to the null page
+) -> jnp.ndarray:
+    """Scatter per-token k/v rows into a paged pool.
+
+    Token at absolute position p for batch row b lands in page
+    ``block_table[b, p // P]`` at slot ``p % P``.  Invalid rows (padding,
+    inactive slots) are redirected to page 0 — the reserved null page that
+    the allocator never hands out — so a single fixed-shape scatter serves
+    prefill chunks and masked batched decode alike.  Valid writes are
+    page-disjoint across requests (each page has exactly one owner), so the
+    scatter has no cross-request write conflicts; only null-page writes may
+    collide, and nothing ever reads the null page unmasked."""
+    b, s = positions.shape
+    page_size = pages.shape[1]
+    page = jnp.take_along_axis(block_table, positions // page_size, axis=1)
+    page = jnp.where(valid, page, 0)
+    within = positions % page_size
+    return pages.at[page.reshape(-1), within.reshape(-1)].set(
+        update.astype(pages.dtype).reshape(b * s, *update.shape[2:]))
+
+
+def paged_gqa_attention_block(
+    p: dict,
+    x: jnp.ndarray,          # (B, S, D)
+    positions: jnp.ndarray,  # (B, S)
+    valid: jnp.ndarray,      # (B, S)
+    cfg,
+    mask,                    # (B, S, MPB * P) per-row bool
+    pages_k: jnp.ndarray,    # (NP, P, K, hd)
+    pages_v: jnp.ndarray,
+    block_table: jnp.ndarray,  # (B, MPB)
+):
+    """GQA attention against a paged KV pool.  Writes this step's k/v into
+    the owning pages, gathers each row's pages into a dense (B, MPB*P, ...)
+    view, and attends under the caller's per-row mask.  Returns
+    (out (B,S,D), new_pages_k, new_pages_v)."""
+    b, s, _ = x.shape
+    h, kh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = apply_linear(p["wq"], x).reshape(b, s, h, hd)
+    k = apply_linear(p["wk"], x).reshape(b, s, kh, hd)
+    v = apply_linear(p["wv"], x).reshape(b, s, kh, hd)
+    q, k, v = attn_qkv_hints(q, k, v)
+    if cfg.rope_theta > 0:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    pages_k = paged_cache_update(pages_k, k, block_table, positions, valid)
+    pages_v = paged_cache_update(pages_v, v, block_table, positions, valid)
+    kc = pages_k[block_table].reshape(b, -1, kh, hd).astype(x.dtype)
+    vc = pages_v[block_table].reshape(b, -1, kh, hd).astype(x.dtype)
+    out = attention(q, kc, vc, mask, scale=1.0 / (hd**0.5))
+    out = apply_linear(p["wo"], out.reshape(b, s, h * hd))
+    return out, pages_k, pages_v
 
 
 def gqa_attention_block(

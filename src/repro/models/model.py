@@ -165,6 +165,44 @@ def init_cache(cfg, batch: int, max_seq: int, dtype=jnp.bfloat16, enc_len: int =
     raise ValueError(fam)
 
 
+# families whose decode state is an attention KV cache with a contiguous
+# layout we can page (vs. ssm's recurrent state / MLA's latent cache)
+PAGED_FAMILIES = ("dense",)
+
+# families whose decode state is per-row (batch axis 1 on every leaf) and
+# carries no shared scalar offset, so independent requests can be stacked
+# into one batched decode without model changes
+STACKED_FAMILIES = ("ssm",)
+
+
+def init_paged_cache(cfg, num_pages: int, page_size: int, dtype=jnp.bfloat16):
+    if cfg.family in PAGED_FAMILIES:
+        return transformer.init_paged_cache(cfg, num_pages, page_size, dtype)
+    raise NotImplementedError(
+        f"paged KV serving supports families {PAGED_FAMILIES}, not "
+        f"{cfg.family!r} (hybrid/moe caches carry a shared scalar offset; "
+        f"ssm state is recurrent, not positional)")
+
+
+def paged_step(cfg, params, tokens, positions, valid, cache, block_table,
+               sample_row=None):
+    """Chunked-prefill / batched-decode step against a paged KV pool; see
+    ``transformer.paged_step`` for the contract."""
+    if cfg.family in PAGED_FAMILIES:
+        return transformer.paged_step(cfg, params, tokens, positions, valid,
+                                      cache, block_table, sample_row)
+    raise NotImplementedError(cfg.family)
+
+
+def insert_cache_row(stacked, one, row: int):
+    """Write a B=1 cache pytree into batch row ``row`` of a stacked cache
+    (every leaf batched on axis 1, the layout of ``_ssm_init_cache``)."""
+    return jax.tree.map(
+        lambda full, single: jax.lax.dynamic_update_slice_in_dim(
+            full, single.astype(full.dtype), row, axis=1),
+        stacked, one)
+
+
 def prefill(cfg, params, batch, cache):
     fam = cfg.family
     tokens = batch["tokens"]

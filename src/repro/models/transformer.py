@@ -14,6 +14,7 @@ from repro.models.common import (
     causal_mask,
     gqa_attention_block,
     mlp_block,
+    paged_gqa_attention_block,
     prefix_lm_mask,
     rms_norm,
 )
@@ -157,6 +158,53 @@ def prefill(cfg, params, tokens, cache, prefix_len: int = 0, embeds=None):
     x, cache = run_layers(cfg, params["layers"], x, positions, base, cache)
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     return unembed(cfg, params, x[:, -1:]), cache
+
+
+def init_paged_cache(cfg, num_pages: int, page_size: int, dtype=jnp.bfloat16):
+    """A paged KV pool shared by every in-flight request: page id indexes
+    axis 1, page 0 is the reserved null page (never allocated; padding and
+    inactive-slot writes are redirected there)."""
+    kh, hd = cfg.n_kv_heads, cfg.head_dim
+    shape = (cfg.n_layers, num_pages, page_size, kh, hd)
+    return dict(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))
+
+
+def paged_step(cfg, params, tokens, positions, valid, cache, block_table,
+               sample_row=None):
+    """One forward step against the paged KV pool — the single entry point
+    for BOTH chunked prefill (B=1, S=chunk) and batched decode (B=slots,
+    S=1), so the serving engine compiles exactly two traces per config.
+
+    tokens (B, S) int32; positions (B, S) absolute token positions;
+    valid (B, S) bool (False = padding / inactive slot: the KV write is
+    redirected to the null page and the row's output is garbage the caller
+    ignores); block_table (B, MPB) int32 page ids.  ``sample_row`` (B,)
+    optionally selects one hidden row per batch entry before the unembed
+    (the last real prompt token of a final prefill chunk), matching
+    ``prefill``'s logits[:, -1:] shape.  Returns (logits (B, S|1, V),
+    new_cache)."""
+    x = embed_tokens(cfg, params, tokens)
+    page_size = cache["k"].shape[2]
+    kv_len = block_table.shape[1] * page_size
+    kj = jnp.arange(kv_len)
+    mask = (kj[None, None, :] <= positions[:, :, None]) & valid[:, :, None]
+
+    def body(xc, xs):
+        lp, pk, pv = xs
+        h = rms_norm(xc, lp["attn_norm"], cfg.norm_eps)
+        a, npk, npv = paged_gqa_attention_block(
+            lp["attn"], h, positions, valid, cfg, mask, pk, pv, block_table)
+        xc = xc + a
+        h = rms_norm(xc, lp["mlp_norm"], cfg.norm_eps)
+        xc = xc + mlp_block(lp["mlp"], h, cfg.act)
+        return xc, (npk, npv)
+
+    x, (nk, nv) = scan_layers(cfg, body, x, (params["layers"], cache["k"], cache["v"]))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if sample_row is not None:
+        x = jax.vmap(
+            lambda xb, r: jax.lax.dynamic_slice_in_dim(xb, r, 1))(x, sample_row)
+    return unembed(cfg, params, x), dict(k=nk, v=nv)
 
 
 def decode_step(cfg, params, tokens, cache):

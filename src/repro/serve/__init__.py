@@ -1,5 +1,6 @@
-from repro.serve.engine import ServeEngine
+from repro.serve.engine import PagesExhausted, ServeEngine
 from repro.serve.faults import FaultInjector, FaultSpec, InjectedFault
 from repro.serve.lifecycle import (IllegalTransition, Request, RequestRecord,
                                    RequestState)
+from repro.serve.paging import NULL_PAGE, PageAllocator
 from repro.serve.sampling import NonFiniteLogitsError, sample_token

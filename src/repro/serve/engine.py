@@ -1,65 +1,75 @@
-"""Batched serving engine (slot-based continuous batching) with a hardened
-request lifecycle.
+"""Continuous-batching serving engine: ONE batched decode step over a paged
+KV cache, with the hardened request lifecycle of ``serve/lifecycle.py``.
 
-A fixed pool of B slots shares one jitted decode_step; requests are admitted
-into free slots (prefill writes their prompt into the slot's cache region),
-decode steps advance ALL active slots together, finished slots are freed and
-refilled from the queue — the standard continuous-batching pattern, sized for
-the W4A4+LRC quantized model this framework serves.
+Design (the full guide lives in ``docs/serving.md``):
 
-On top of the happy path, the engine enforces the request lifecycle in
-``serve/lifecycle.py``:
+- **One decode call per step.**  All active slots advance through a single
+  jitted forward per engine step — tokens ``(B, 1)``, an active-slot
+  ``valid`` mask for empty / faulted slots — instead of B per-slot calls.
+  ``counters["decode_calls"]`` counts exactly one per step with any active
+  decoder, regardless of occupancy.
+- **Paged KV cache** (attention families; ``model.PAGED_FAMILIES``).  Slots
+  share one page pool (``model.init_paged_cache``); ``serve/paging.py``
+  owns the free-list allocator and per-request page lists, the engine keeps
+  a host-side ``(B, pages_per_slot)`` block table.  Pages are allocated at
+  admission (prompt) and at decode-boundary crossings, freed as a unit on
+  every terminal transition.  Page 0 is the reserved null page: writes for
+  padding / inactive / faulted slots are redirected there, which is what
+  makes a masked slot's garbage provably invisible to its neighbors.
+- **Stacked decode** (``model.STACKED_FAMILIES``: recurrent state, no
+  positional cache to page).  Slots live as rows of one stacked cache;
+  prefill runs B=1 and is inserted via ``model.insert_cache_row``; decode
+  is the same single batched call.
+- **Legacy slot loop** (vlm / hybrid / moe).  Their caches carry a shared
+  scalar offset that cannot differ per row, so they keep the per-slot
+  contiguous caches and per-slot decode calls of the previous engine.
+- **Chunked prefill** (paged mode, ``prefill_chunk=``).  A long prompt
+  prefills in fixed-size chunks, one chunk per engine step, so decode for
+  co-tenant requests keeps advancing between chunks instead of stalling
+  behind one long prompt.  Chunks are padded to a fixed width (one trace),
+  non-final chunks run a finite-logits check so corruption can never be
+  committed silently, and only the final chunk samples.  The default
+  (``None``) prefills the whole prompt in one chunk at admission.
 
-- **Admission control.**  ``submit()`` validates prompts (length vs.
-  ``max_seq``, token ids vs. the vocab, positive token budget, positive
-  deadline, unique rid) and enforces a bounded queue with a reject policy
-  — bad input yields a ``REJECTED`` record instead of corrupting a slot
-  cache deep inside prefill.
-- **Failure isolation.**  Prefill/decode/sampling for one slot runs
-  guarded: an exception or non-finite logits (NaN/Inf from quantized
-  activation blow-ups) fails ONLY that request.  The step is retried up
-  to ``max_retries`` with exponential backoff, then the slot is
-  quarantined (cache reset, failure streak bumped — ``slot_failure_limit``
-  consecutive request failures kill the slot) and a ``FAILED`` record with
-  the captured error is emitted.  Slot caches are per-slot and never
-  shared, so one request's corruption cannot leak into another's tokens.
-- **Deadlines & budgets.**  Per-request wall-clock deadlines (checked
-  while queued AND in flight) and token budgets; ``cancel(rid)`` works on
-  queued and in-flight requests.
-- **Liveness.**  ``health()`` snapshots slot states, queue depth,
-  retry/failure counters and steps-since-progress; a stall watchdog
-  aborts a wedged ``run()`` (e.g. every slot dead with work still queued)
-  with a diagnosable ``stall_report`` instead of spinning to
-  ``max_steps``.  When the step budget trips with requests still in
-  flight, they are returned as ``TIMED_OUT`` records, not dropped.
-- **Fault injection.**  A ``serve/faults.py`` injector can be threaded in
-  (``injector=``) to fire deterministic exceptions / NaN bursts / slow
-  steps / cache corruption at the phase boundaries — the chaos suite uses
-  it to prove the isolation contract.  The clock and sleep are injectable
-  (``clock=``, ``sleep_fn=``) so deadline/backoff behavior is testable
-  without real waiting.
+The lifecycle contract is unchanged from the per-slot engine and the chaos
+suite proves it still holds under paging:
 
-``run()`` returns ``{rid: RequestRecord}`` — structured terminal records
-(status, error kind, timings, token counts), not live request objects.
+- **Admission control.**  ``submit()`` validates prompts (length vs. the
+  block-table width ``max_seq``, pool capacity in PAGES, token ids, budgets,
+  deadlines, unique rid) with a bounded queue; at admission time a request
+  additionally waits in queue (FIFO) until the free list covers its prompt
+  — page-accounting backpressure instead of a blind slot grab.
+- **Failure isolation.**  Faults are applied per slot: an injected
+  exception drops the slot from the step's ``valid`` mask (its KV writes
+  redirect to the null page), cache corruption poisons ONLY that request's
+  pages (``FaultInjector.corrupt_pages``) or stacked row, and sampling is
+  per-row.  A failed attempt commits nothing for that slot — its pages are
+  rolled back to the pre-step pool, its length/tokens do not advance — so
+  a retry restarts from clean committed state on the NEXT engine step
+  (bounded by ``max_retries`` with exponential backoff, then the slot is
+  quarantined and a FAILED record emitted; ``slot_failure_limit``
+  consecutive request failures kill the slot).
+- **Deadlines & budgets, liveness, fault injection.**  Unchanged: per-
+  request deadlines checked queued and in flight, ``cancel()``, the stall
+  watchdog + ``stall_report``, injectable clock/sleep, ``health()``
+  snapshots (now including page-pool stats and the resolved decode-regime
+  kernel plan at the REAL batched M = ``batch_slots``).
 
-Sampling keys are derived per (rid, token index) via ``fold_in``, so a
-request's output never depends on which slot it landed in, what else was
-in flight, or how many retries other requests burned — that is what makes
-"untargeted requests are bitwise identical under chaos" provable.
+Sampling keys derive only from (engine seed, rid, token index), and masked
+attention positions contribute exactly zero weight — together these make
+the chaos suite's strongest assert hold: untargeted requests are bitwise
+identical to a fault-free run, regardless of WHICH pages a request lands
+on, which slot it occupies, or what its co-tenants are doing.
 
-Single jitted decode signature ⇒ one compilation, shared process-wide per
-config; per-slot positions are tracked host-side.  Works with FP or
-quantized (QLinear) params.
-
-Simplification vs. a paged server: each slot owns a contiguous max_seq cache
-region (no paging); for the dry-run shapes that is the assigned cache layout
-anyway.
+``run()`` returns ``{rid: RequestRecord}`` — structured terminal records,
+not live request objects.  Works with FP or quantized (QLinear) params.
 """
 
 from __future__ import annotations
 
 import functools
 import time
+from types import SimpleNamespace
 from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
@@ -70,24 +80,49 @@ from repro.models import model as model_lib
 from repro.serve.faults import FaultInjector, InjectedFault
 from repro.serve.lifecycle import (Request, RequestRecord, RequestState,
                                    TERMINAL_STATES)
+from repro.serve.paging import PageAllocator
 from repro.serve.sampling import NonFiniteLogitsError, sample_token
 
 
+class PagesExhausted(RuntimeError):
+    """The free list could not cover a page allocation (admission raced, or
+    the pool was sized below ``batch_slots * pages_per_slot``).  Retried
+    like any transient fault — a co-tenant finishing frees pages — then
+    surfaces as a FAILED record with ``error_kind == 'kv_pages_exhausted'``.
+    """
+
+
 @functools.lru_cache(maxsize=16)
-def _model_fns(cfg) -> Tuple[Callable, Callable]:
-    """Per-config jitted prefill/decode, shared by every engine instance in
+def _model_fns(cfg) -> SimpleNamespace:
+    """Per-config jitted step functions, shared by every engine instance in
     the process (cfg is a hashable static dataclass) — N engines over the
-    same config stop paying N compilations."""
+    same config stop paying N compilations.
+
+    ``traces`` counts retracings (incremented at trace time, not per call):
+    the paged engine compiles exactly two ``paged`` traces per config —
+    one (1, chunk) prefill shape, one (B, 1) decode shape — and the test
+    suite asserts that."""
+    traces = {"prefill": 0, "decode": 0, "paged": 0}
 
     @jax.jit
     def _prefill(params, tokens, cache):
+        traces["prefill"] += 1
         return model_lib.prefill(cfg, params, {"tokens": tokens}, cache)
 
     @jax.jit
     def _decode(params, tokens, cache):
+        traces["decode"] += 1
         return model_lib.decode_step(cfg, params, tokens, cache)
 
-    return _prefill, _decode
+    @jax.jit
+    def _paged(params, tokens, positions, valid, cache, block_table,
+               sample_row):
+        traces["paged"] += 1
+        return model_lib.paged_step(cfg, params, tokens, positions, valid,
+                                    cache, block_table, sample_row)
+
+    return SimpleNamespace(prefill=_prefill, decode=_decode, paged=_paged,
+                           traces=traces)
 
 
 def _classify_error(e: BaseException) -> Tuple[str, str]:
@@ -95,6 +130,8 @@ def _classify_error(e: BaseException) -> Tuple[str, str]:
         kind = "injected"
     elif isinstance(e, NonFiniteLogitsError):
         kind = "non_finite_logits"
+    elif isinstance(e, PagesExhausted):
+        kind = "kv_pages_exhausted"
     else:
         kind = "exception"
     msg = f"{type(e).__name__}: {e}"
@@ -105,6 +142,8 @@ class ServeEngine:
     def __init__(self, cfg, params, batch_slots: int = 4, max_seq: int = 256,
                  eos_id: Optional[int] = None, seed: int = 0,
                  kernel_impl: Optional[str] = "auto", ctx=None, *,
+                 page_size: int = 16, kv_pages: Optional[int] = None,
+                 prefill_chunk: Optional[int] = None,
                  max_retries: int = 2, retry_backoff_s: float = 0.0,
                  queue_limit: Optional[int] = None,
                  queue_policy: str = "reject_new",
@@ -119,6 +158,10 @@ class ServeEngine:
                              f"one of ('reject_new', 'drop_oldest')")
         if max_retries < 0 or retry_backoff_s < 0:
             raise ValueError("max_retries and retry_backoff_s must be >= 0")
+        if page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {page_size}")
+        if prefill_chunk is not None and prefill_chunk < 1:
+            raise ValueError(f"prefill_chunk must be >= 1, got {prefill_chunk}")
         # Decode runs W4A4+LRC through the pallas kernels (single-kernel
         # fused forward at decode/mixed shapes, prologue→GEMM chain past the
         # VMEM gate) whenever a compiled backend is attached; "auto" keeps
@@ -156,9 +199,43 @@ class ServeEngine:
         self.clock = clock
         self.sleep_fn = sleep_fn
 
-        # per-slot caches (B=1 each) so slots admit/evict independently and
-        # one request's corruption can never leak into a neighbor
-        self.slot_caches: List = [self._fresh_cache() for _ in range(batch_slots)]
+        # family -> decode-state layout; see the module docstring
+        if cfg.family in model_lib.PAGED_FAMILIES:
+            self.mode = "paged"
+        elif cfg.family in model_lib.STACKED_FAMILIES:
+            self.mode = "stacked"
+        else:
+            self.mode = "slots"
+        if prefill_chunk is not None and self.mode != "paged":
+            raise ValueError(
+                f"prefill_chunk requires a paged family "
+                f"{model_lib.PAGED_FAMILIES}, not {cfg.family!r}")
+        self.page_size = page_size
+        self.prefill_chunk = prefill_chunk
+        self.alloc: Optional[PageAllocator] = None
+        self.slot_caches: List = []
+        if self.mode == "paged":
+            # block-table width bounds positions to max_seq; the DEFAULT
+            # pool exactly covers every slot at full length, so the free
+            # list can only run dry when the caller shrinks kv_pages
+            self.pages_per_slot = -(-max_seq // page_size)
+            num_pages = (kv_pages if kv_pages is not None
+                         else batch_slots * self.pages_per_slot + 1)
+            self.alloc = PageAllocator(num_pages, page_size)
+            self.pool = model_lib.init_paged_cache(
+                cfg, num_pages, page_size, dtype=jnp.float32)
+            self.block_tables = np.zeros(
+                (batch_slots, self.pages_per_slot), np.int32)
+            self.lengths = np.zeros((batch_slots,), np.int32)
+            self._prefill_off = [0] * batch_slots
+        elif self.mode == "stacked":
+            self.stacked_cache = model_lib.init_cache(
+                cfg, batch_slots, max_seq, dtype=jnp.float32)
+        else:
+            # per-slot caches (B=1 each): these families' caches carry a
+            # shared scalar offset, so slots cannot share a batched cache
+            self.slot_caches = [self._fresh_cache() for _ in range(batch_slots)]
+
         self.slot_req: List[Optional[Request]] = [None] * batch_slots
         self.slot_fail_streak: List[int] = [0] * batch_slots
         self.slot_dead: List[bool] = [False] * batch_slots
@@ -167,12 +244,20 @@ class ServeEngine:
         self.counters: Dict[str, int] = {
             "submitted": 0, "admitted": 0, "steps": 0, "retries": 0,
             "finished": 0, "failed": 0, "rejected": 0, "cancelled": 0,
-            "timed_out": 0, "slot_failures": 0,
+            "timed_out": 0, "slot_failures": 0, "decode_calls": 0,
         }
+        # rid -> consecutive failed attempts; a failed attempt retries on
+        # the NEXT engine step (deferred retry) so the batched step stays
+        # one forward per step even while some slot is flaky
+        self._attempt_streak: Dict[int, int] = {}
         self._steps_since_progress = 0
         self.stall_report: Optional[dict] = None
 
-        self._prefill, self._decode = _model_fns(cfg)
+        self._fns = _model_fns(cfg)
+        self._prefill = self._fns.prefill
+        self._decode = self._fns.decode
+        self._paged = self._fns.paged
+        self.decode_plan = self._resolve_decode_plan()
 
     # -- public API ---------------------------------------------------------
 
@@ -219,7 +304,8 @@ class ServeEngine:
                 return True
         for i, req in enumerate(self.slot_req):
             if req is not None and req.rid == rid:
-                # applied immediately: free the slot, keep emitted tokens
+                # applied immediately: free the slot (and its pages), keep
+                # emitted tokens
                 self._release_slot(i)
                 self._finalize(req, RequestState.CANCELLED, "cancelled",
                                "cancelled in flight")
@@ -238,6 +324,7 @@ class ServeEngine:
             progressed |= self._admit()
             if not any(r is not None for r in self.slot_req) and not self.queue:
                 break
+            progressed |= self._prefill_tick()
             progressed |= self._step()
             self._steps_since_progress = (
                 0 if progressed else self._steps_since_progress + 1)
@@ -252,7 +339,9 @@ class ServeEngine:
         return self.records
 
     def health(self) -> dict:
-        """Live snapshot: slot states, queue depth, counters, liveness."""
+        """Live snapshot: slot states, queue depth, counters, liveness,
+        page-pool accounting, trace counts, and the decode-regime kernel
+        plan resolved at the engine's REAL batched M (= ``batch_slots``)."""
         slots = []
         for i in range(self.b):
             req = self.slot_req[i]
@@ -271,6 +360,42 @@ class ServeEngine:
             "counters": dict(self.counters),
             "steps_since_progress": self._steps_since_progress,
             "stalled": self.stall_report is not None,
+            "mode": self.mode,
+            "kv_pages": None if self.alloc is None else self.alloc.stats(),
+            "traces": dict(self._fns.traces),
+            "decode_plan": self.decode_plan,
+        }
+
+    # -- kernel-plan introspection ------------------------------------------
+
+    def _resolve_decode_plan(self) -> Optional[dict]:
+        """The kernel plan the batched decode step actually runs: QLinear
+        flattens (B, 1, K) activations to an (M=B, K) GEMM, so the plan must
+        be resolved at M = ``batch_slots``, not the per-slot M=1 the old
+        slot-loop engine implied.  Uses the largest QLinear in the params
+        (the dominant GEMM of the step); None for FP params."""
+        from repro.kernels.context import gemm_regime
+
+        from repro.quant.qlinear import QLinear
+
+        leaves = jax.tree.leaves(
+            self.params, is_leaf=lambda x: isinstance(x, QLinear))
+        qls = [l for l in leaves if isinstance(l, QLinear)]
+        if not qls:
+            return None
+        q = max(qls, key=lambda l: l.d_in * l.d_out)
+        ctx = q.ctx
+        if ctx is None:
+            from repro.kernels import ops
+            ctx = ops.default_context()
+        r = 0 if q.u is None else int(q.u.shape[1])
+        plan = ctx.resolve_plan(self.b, q.d_in, q.d_out, r,
+                                layer=q.name, act_group=q.act_group)
+        return {
+            "m": self.b, "k": q.d_in, "n": q.d_out, "r": r,
+            "regime": gemm_regime(self.b), "impl": q.impl,
+            "path": plan.path, "bm": plan.bm, "bn": plan.bn, "bk": plan.bk,
+            "br": plan.br, "variant": plan.variant,
         }
 
     # -- admission ----------------------------------------------------------
@@ -290,10 +415,20 @@ class ServeEngine:
             return ("bad_token_ids",
                     f"token ids outside [0, {self.cfg.vocab_size})")
         if len(prompt) >= self.max_seq:
-            # an oversized prompt would overflow the slot's contiguous
-            # max_seq cache region deep inside prefill — refuse it here
+            # max_seq bounds the position space (block-table width in paged
+            # mode, contiguous cache region otherwise) — an oversized prompt
+            # can never be admitted
             return ("prompt_too_long",
                     f"prompt length {len(prompt)} >= max_seq {self.max_seq}")
+        if self.mode == "paged":
+            # pool accounting: a prompt that needs more pages than the pool
+            # HOLDS can never admit no matter how long it queues (transient
+            # shortage is handled by FIFO backpressure in _admit instead)
+            need = self.alloc.pages_for(len(prompt) + 1)
+            if need > self.alloc.capacity:
+                return ("kv_capacity",
+                        f"prompt needs {need} KV pages; pool capacity is "
+                        f"{self.alloc.capacity} pages of {self.page_size}")
         if req.max_new_tokens < 1:
             return ("bad_token_budget",
                     f"max_new_tokens must be >= 1, got {req.max_new_tokens}")
@@ -309,6 +444,15 @@ class ServeEngine:
             # (or the slot's life) runs out
             while (not self.slot_dead[i] and self.slot_req[i] is None
                    and self.queue):
+                if self.mode == "paged":
+                    head = self.queue[0]
+                    need = self.alloc.pages_for(len(head.prompt) + 1)
+                    if need > self.alloc.free_pages:
+                        # page-accounting backpressure: hold the queue in
+                        # FIFO order until co-tenants free enough pages
+                        # (all-idle implies all pages free, so this cannot
+                        # deadlock for a prompt that passed _validate)
+                        return progressed
                 req = self.queue.pop(0)
                 progressed = True
                 self._admit_one(i, req)
@@ -317,15 +461,146 @@ class ServeEngine:
     def _admit_one(self, i: int, req: Request):
         req.advance(RequestState.PREFILLING, self.clock())
         self.counters["admitted"] += 1
-        cache = self._fresh_cache()
-        toks = jnp.asarray(np.asarray(req.prompt)[None, :], jnp.int32)
+        self.slot_req[i] = req
+        if self.mode == "paged":
+            self._prefill_off[i] = 0
+            self.lengths[i] = 0
+            self._prefill_advance(i)
+        else:
+            self._slot_prefill(i, req)
+
+    def _prefill_tick(self) -> bool:
+        """Advance every mid-prefill slot by one chunk (paged mode), or
+        retry a whole-prompt prefill whose last attempt failed."""
+        progressed = False
+        for i in range(self.b):
+            req = self.slot_req[i]
+            if req is None or req.state is not RequestState.PREFILLING:
+                continue
+            if self.mode == "paged":
+                progressed |= self._prefill_advance(i)
+            else:
+                progressed |= self._slot_prefill(i, req)
+        return progressed
+
+    # -- prefill ------------------------------------------------------------
+
+    def _prefill_advance(self, i: int) -> bool:
+        """One guarded prefill-chunk attempt for slot ``i`` (paged mode).
+        Nothing is committed on failure: the pool reference, chunk offset
+        and length are untouched, so the retry replays the same chunk from
+        clean state."""
+        req = self.slot_req[i]
+        prompt = np.asarray(req.prompt, np.int32)
+        n_prompt = int(prompt.size)
+        got = self.alloc.ensure(req.rid, n_prompt)
+        if got is None:
+            self._attempt_failed(i, req, PagesExhausted(
+                f"free list cannot cover "
+                f"{self.alloc.pages_for(n_prompt)} prompt page(s) for rid "
+                f"{req.rid} ({self.alloc.free_pages} free of "
+                f"{self.alloc.capacity})"))
+            return True
+        if got:
+            self._write_block_row(i, req.rid)
+        off = self._prefill_off[i]
+        chunk = self.prefill_chunk or n_prompt
+        n = min(chunk, n_prompt - off)
+        final = off + n >= n_prompt
+        fault = (self.injector.poll(req.rid, "prefill")
+                 if self.injector is not None else None)
         try:
-            tok, cache = self._attempt(req, "prefill", self._prefill, toks, cache)
+            pool_in = self.pool
+            if fault is not None:
+                if fault.kind == "slow_step":
+                    self.injector.sleep(fault.seconds)
+                elif fault.kind == "exception":
+                    raise InjectedFault(
+                        f"injected prefill exception for rid {req.rid}")
+                elif fault.kind == "cache_corruption":
+                    pool_in = self.injector.corrupt_pages(
+                        self.pool, self.alloc.pages_of(req.rid))
+            tokens = np.zeros((1, chunk), np.int32)
+            tokens[0, :n] = prompt[off:off + n]
+            positions = off + np.arange(chunk, dtype=np.int32)[None, :]
+            valid = (np.arange(chunk) < n)[None, :]
+            srow = np.asarray([n - 1], np.int32)
+            logits, new_pool = self._paged(
+                self.params, jnp.asarray(tokens), jnp.asarray(positions),
+                jnp.asarray(valid), pool_in,
+                jnp.asarray(self.block_tables[i:i + 1]), jnp.asarray(srow))
+            if fault is not None and fault.kind in ("nan_logits", "inf_logits"):
+                logits = self.injector.corrupt_logits(logits, fault.kind)
+            if final:
+                sfault = (self.injector.poll(req.rid, "sampling")
+                          if self.injector is not None else None)
+                if sfault is not None:
+                    if sfault.kind == "slow_step":
+                        self.injector.sleep(sfault.seconds)
+                    elif sfault.kind == "exception":
+                        raise InjectedFault(
+                            f"injected sampling exception for rid {req.rid}")
+                tok = int(self._sample(req, logits[:, -1])[0])
+            else:
+                # non-final chunks never sample, but NaN must not reach the
+                # committed pool — LQER-style blow-ups surface here, not
+                # three chunks later in a co-tenant's decode
+                self._check_finite(logits)
         except Exception as e:  # isolated: fails only this request
-            self._slot_failure(i, req, e)
-            return
-        self.slot_caches[i] = cache
+            self._attempt_failed(i, req, e)
+            return True
+        self.pool = new_pool
+        self._prefill_off[i] = off + n
+        self.lengths[i] = off + n
+        self._attempt_streak.pop(req.rid, None)
         self.slot_fail_streak[i] = 0
+        if final:
+            self._finish_prefill(i, req, tok)
+        return True
+
+    def _slot_prefill(self, i: int, req: Request) -> bool:
+        """One guarded whole-prompt B=1 prefill attempt (stacked / slots
+        modes)."""
+        toks = jnp.asarray(np.asarray(req.prompt)[None, :], jnp.int32)
+        fault = (self.injector.poll(req.rid, "prefill")
+                 if self.injector is not None else None)
+        try:
+            cache_in = model_lib.init_cache(self.cfg, 1, self.max_seq,
+                                            dtype=jnp.float32)
+            if fault is not None:
+                if fault.kind == "slow_step":
+                    self.injector.sleep(fault.seconds)
+                elif fault.kind == "exception":
+                    raise InjectedFault(
+                        f"injected prefill exception for rid {req.rid}")
+                elif fault.kind == "cache_corruption":
+                    cache_in = self.injector.corrupt_cache(cache_in)
+            logits, new_cache = self._prefill(self.params, toks, cache_in)
+            if fault is not None and fault.kind in ("nan_logits", "inf_logits"):
+                logits = self.injector.corrupt_logits(logits, fault.kind)
+            sfault = (self.injector.poll(req.rid, "sampling")
+                      if self.injector is not None else None)
+            if sfault is not None:
+                if sfault.kind == "slow_step":
+                    self.injector.sleep(sfault.seconds)
+                elif sfault.kind == "exception":
+                    raise InjectedFault(
+                        f"injected sampling exception for rid {req.rid}")
+            tok = int(self._sample(req, logits[:, -1])[0])
+        except Exception as e:  # isolated: fails only this request
+            self._attempt_failed(i, req, e)
+            return True
+        if self.mode == "stacked":
+            self.stacked_cache = model_lib.insert_cache_row(
+                self.stacked_cache, new_cache, i)
+        else:
+            self.slot_caches[i] = new_cache
+        self._attempt_streak.pop(req.rid, None)
+        self.slot_fail_streak[i] = 0
+        self._finish_prefill(i, req, tok)
+        return True
+
+    def _finish_prefill(self, i: int, req: Request, tok: int):
         req.out_tokens.append(tok)
         req.first_token_at = self.clock()
         # the prefill-sampled token obeys the SAME termination predicate as
@@ -336,52 +611,178 @@ class ServeEngine:
             self._finalize(req, RequestState.FINISHED)
         else:
             req.advance(RequestState.DECODING, self.clock())
-            self.slot_req[i] = req
 
     # -- stepping -----------------------------------------------------------
 
     def _step(self) -> bool:
+        if self.mode == "slots":
+            return self._step_slots()
+        active = [i for i in range(self.b)
+                  if self.slot_req[i] is not None
+                  and self.slot_req[i].state is RequestState.DECODING]
+        if not active:
+            return False
         progressed = False
-        for i, req in enumerate(self.slot_req):
-            if req is None:
+        faults: Dict[int, object] = {}
+        if self.injector is not None:
+            for i in active:
+                f = self.injector.poll(self.slot_req[i].rid, "decode")
+                if f is not None:
+                    faults[i] = f
+                    if f.kind == "slow_step":
+                        self.injector.sleep(f.seconds)
+        if self.mode == "paged":
+            # decode-boundary crossings allocate before the forward; a dry
+            # free list fails ONLY that slot's attempt (deferred retry —
+            # a co-tenant may free pages by the next step)
+            for i in list(active):
+                req = self.slot_req[i]
+                got = self.alloc.ensure(req.rid, int(self.lengths[i]) + 1)
+                if got is None:
+                    active.remove(i)
+                    self._attempt_failed(i, req, PagesExhausted(
+                        f"no free page for rid {req.rid} at position "
+                        f"{int(self.lengths[i])} ({self.alloc.free_pages} "
+                        f"free of {self.alloc.capacity})"))
+                    progressed = True
+                elif got:
+                    self._write_block_row(i, req.rid)
+            if not active:
+                return progressed
+
+        # injected exceptions fire "before the forward": the slot drops out
+        # of the valid mask (paged) / gets its row rolled back (stacked),
+        # so the ONE batched call still runs for everyone else
+        excluded = {i for i in active
+                    if i in faults and faults[i].kind == "exception"}
+        included = [i for i in active if i not in excluded]
+        corrupt = [i for i in included
+                   if i in faults and faults[i].kind == "cache_corruption"]
+
+        tokens = np.zeros((self.b, 1), np.int32)
+        for i in active:
+            tokens[i, 0] = self.slot_req[i].out_tokens[-1]
+
+        self.counters["decode_calls"] += 1
+        try:
+            if self.mode == "paged":
+                pool_in = self.pool
+                for i in corrupt:
+                    pool_in = self.injector.corrupt_pages(
+                        pool_in, self.alloc.pages_of(self.slot_req[i].rid))
+                valid = np.zeros((self.b, 1), bool)
+                for i in included:
+                    valid[i, 0] = True
+                positions = self.lengths.astype(np.int32)[:, None]
+                srow = np.zeros((self.b,), np.int32)
+                logits, new_state = self._paged(
+                    self.params, jnp.asarray(tokens), jnp.asarray(positions),
+                    jnp.asarray(valid), pool_in,
+                    jnp.asarray(self.block_tables), jnp.asarray(srow))
+            else:
+                cache_in = self.stacked_cache
+                for i in corrupt:
+                    cache_in = self.injector.corrupt_rows(cache_in, i)
+                logits, new_state = self._decode(
+                    self.params, jnp.asarray(tokens), cache_in)
+        except Exception as e:
+            # the one batched call itself died: no slot committed anything,
+            # every active request gets a (retryable) failed attempt
+            for i in active:
+                self._attempt_failed(i, self.slot_req[i], e)
+            return True
+
+        # per-row outcomes first (no engine mutation), THEN the state
+        # commit+rollback, THEN the bookkeeping — _slot_failure frees pages,
+        # which must not happen before the rollback reads them
+        outcomes: Dict[int, Tuple[str, object]] = {}
+        for i in active:
+            req = self.slot_req[i]
+            f = faults.get(i)
+            if i in excluded:
+                outcomes[i] = ("fail", InjectedFault(
+                    f"injected decode exception for rid {req.rid}"))
                 continue
-            last = jnp.asarray([[req.out_tokens[-1]]], jnp.int32)
+            row = logits[i:i + 1, -1]
             try:
-                tok, cache = self._attempt(req, "decode", self._decode, last,
-                                           self.slot_caches[i])
+                if f is not None and f.kind in ("nan_logits", "inf_logits"):
+                    row = self.injector.corrupt_logits(row, f.kind)
+                sfault = (self.injector.poll(req.rid, "sampling")
+                          if self.injector is not None else None)
+                if sfault is not None:
+                    if sfault.kind == "slow_step":
+                        self.injector.sleep(sfault.seconds)
+                    elif sfault.kind == "exception":
+                        raise InjectedFault(
+                            f"injected sampling exception for rid {req.rid}")
+                outcomes[i] = ("ok", int(self._sample(req, row)[0]))
             except Exception as e:  # isolated: fails only this request
-                self._slot_failure(i, req, e)
-                progressed = True  # a terminal record IS progress
+                outcomes[i] = ("fail", e)
+
+        failed = [i for i in active if outcomes[i][0] == "fail"]
+        if self.mode == "paged":
+            # a failed attempt commits nothing: corrupted slots get their
+            # pages restored from the pre-step pool (page-disjointness makes
+            # the restore exact); excluded slots were never written (valid
+            # mask → null page); other failures keep their length, so the
+            # retry overwrites the same position
+            rollback = sorted({p for i in failed if i in corrupt
+                               for p in self.alloc.pages_of(self.slot_req[i].rid)})
+            if rollback:
+                ids = jnp.asarray(rollback, jnp.int32)
+                new_state = jax.tree.map(
+                    lambda new, old: new.at[:, ids].set(old[:, ids]),
+                    new_state, self.pool)
+            self.pool = new_state
+        else:
+            # stacked rows all advance in the batched call — roll back every
+            # failed slot's row to the pre-step cache
+            if failed:
+                ids = jnp.asarray(failed, jnp.int32)
+                new_state = jax.tree.map(
+                    lambda new, old: new.at[:, ids].set(old[:, ids]),
+                    new_state, self.stacked_cache)
+            self.stacked_cache = new_state
+
+        for i in active:
+            req = self.slot_req[i]
+            kind, val = outcomes[i]
+            progressed = True  # a token OR a terminal/retry record is progress
+            if kind == "fail":
+                self._attempt_failed(i, req, val)
                 continue
-            self.slot_caches[i] = cache
+            self._attempt_streak.pop(req.rid, None)
             self.slot_fail_streak[i] = 0
-            req.out_tokens.append(tok)
-            progressed = True
-            if self._should_finish(req, tok):
+            req.out_tokens.append(val)
+            if self.mode == "paged":
+                self.lengths[i] += 1
+            if self._should_finish(req, val):
                 self._release_slot(i)
                 self._finalize(req, RequestState.FINISHED)
         return progressed
 
-    def _attempt(self, req: Request, phase: str, fn, tokens, cache):
-        """One guarded forward+sample for one request, with bounded retries
-        and exponential backoff.  Nothing is committed on failure — the
-        caller's cache reference is untouched, so a retry restarts from
-        clean state.  Raises the last error once the budget is spent."""
-        attempt = 0
-        while True:
+    def _step_slots(self) -> bool:
+        """Legacy per-slot decode loop for families whose caches carry a
+        shared scalar offset (vlm/hybrid/moe) — see docs/serving.md."""
+        progressed = False
+        for i, req in enumerate(self.slot_req):
+            if req is None or req.state is not RequestState.DECODING:
+                continue
+            last = jnp.asarray([[req.out_tokens[-1]]], jnp.int32)
+            fault = (self.injector.poll(req.rid, "decode")
+                     if self.injector is not None else None)
+            self.counters["decode_calls"] += 1
             try:
-                fault = (self.injector.poll(req.rid, phase)
-                         if self.injector is not None else None)
-                cache_in = cache
+                cache_in = self.slot_caches[i]
                 if fault is not None:
                     if fault.kind == "slow_step":
                         self.injector.sleep(fault.seconds)
                     elif fault.kind == "exception":
                         raise InjectedFault(
-                            f"injected {phase} exception for rid {req.rid}")
+                            f"injected decode exception for rid {req.rid}")
                     elif fault.kind == "cache_corruption":
-                        cache_in = self.injector.corrupt_cache(cache)
-                logits, new_cache = fn(self.params, tokens, cache_in)
+                        cache_in = self.injector.corrupt_cache(cache_in)
+                logits, new_cache = self._decode(self.params, last, cache_in)
                 if fault is not None and fault.kind in ("nan_logits", "inf_logits"):
                     logits = self.injector.corrupt_logits(logits, fault.kind)
                 sfault = (self.injector.poll(req.rid, "sampling")
@@ -393,20 +794,51 @@ class ServeEngine:
                         raise InjectedFault(
                             f"injected sampling exception for rid {req.rid}")
                 tok = int(self._sample(req, logits[:, -1])[0])
-                return tok, new_cache
-            except Exception:
-                attempt += 1
-                if attempt > self.max_retries:
-                    raise
-                req.retries += 1
-                self.counters["retries"] += 1
-                if self.retry_backoff_s > 0:
-                    self.sleep_fn(self.retry_backoff_s * (2 ** (attempt - 1)))
+            except Exception as e:  # isolated: fails only this request
+                self._attempt_failed(i, req, e)
+                progressed = True
+                continue
+            self.slot_caches[i] = new_cache
+            self._attempt_streak.pop(req.rid, None)
+            self.slot_fail_streak[i] = 0
+            req.out_tokens.append(tok)
+            progressed = True
+            if self._should_finish(req, tok):
+                self._release_slot(i)
+                self._finalize(req, RequestState.FINISHED)
+        return progressed
+
+    # -- shared attempt / sampling helpers ----------------------------------
+
+    def _attempt_failed(self, i: int, req: Request, e: BaseException):
+        """Account one failed attempt.  Within the retry budget the request
+        stays in its slot and the SAME phase replays next engine step from
+        clean committed state (nothing was committed for it); past the
+        budget it becomes a FAILED record via ``_slot_failure``."""
+        streak = self._attempt_streak.get(req.rid, 0)
+        if streak >= self.max_retries:
+            self._attempt_streak.pop(req.rid, None)
+            self._slot_failure(i, req, e)
+            return
+        self._attempt_streak[req.rid] = streak + 1
+        req.retries += 1
+        self.counters["retries"] += 1
+        if self.retry_backoff_s > 0:
+            self.sleep_fn(self.retry_backoff_s * (2 ** streak))
+
+    def _check_finite(self, logits):
+        if not bool(jnp.isfinite(logits).all()):
+            n_nan = int(jnp.isnan(logits).sum())
+            n_inf = int(jnp.isinf(logits).sum())
+            raise NonFiniteLogitsError(
+                f"non-finite logits at prefill-chunk boundary: {n_nan} NaN, "
+                f"{n_inf} Inf of {logits.size} entries")
 
     def _sample(self, req: Request, logits):
         # key depends only on (engine seed, rid, token index): a request's
-        # tokens are invariant to slot placement, co-tenants, and retries —
-        # the property the chaos suite's bitwise-parity asserts rely on
+        # tokens are invariant to slot placement, co-tenants, page layout,
+        # and retries — the property the chaos suite's bitwise-parity
+        # asserts rely on
         key = jax.random.fold_in(
             jax.random.fold_in(self.base_key, req.rid), len(req.out_tokens))
         return sample_token(logits, key, temperature=req.temperature,
@@ -423,9 +855,10 @@ class ServeEngine:
     # -- failure handling / lifecycle ---------------------------------------
 
     def _slot_failure(self, i: int, req: Request, e: BaseException):
-        """Quarantine the slot (reset its cache, bump the failure streak —
-        ``slot_failure_limit`` consecutive request failures kill it) and
-        fail ONLY this request with the captured error."""
+        """Quarantine the slot (release it — paged mode frees the pages —
+        and bump the failure streak; ``slot_failure_limit`` consecutive
+        request failures kill it) and fail ONLY this request with the
+        captured error."""
         kind, msg = _classify_error(e)
         self._release_slot(i)
         self.slot_fail_streak[i] += 1
@@ -434,9 +867,29 @@ class ServeEngine:
             self.slot_dead[i] = True
         self._finalize(req, RequestState.FAILED, kind, msg)
 
+    def _write_block_row(self, i: int, rid: int):
+        row = np.zeros((self.pages_per_slot,), np.int32)
+        pages = self.alloc.pages_of(rid)
+        row[:len(pages)] = pages
+        self.block_tables[i] = row
+
     def _release_slot(self, i: int):
+        req = self.slot_req[i]
         self.slot_req[i] = None
-        self.slot_caches[i] = self._fresh_cache()
+        if req is not None:
+            self._attempt_streak.pop(req.rid, None)
+        if self.mode == "paged":
+            # terminal transition returns the pages; freed pages may hold
+            # stale values, which is safe because a new owner rewrites every
+            # position below its length and the mask hides the rest
+            if req is not None:
+                self.alloc.free(req.rid)
+            self.block_tables[i, :] = 0
+            self.lengths[i] = 0
+            self._prefill_off[i] = 0
+        elif self.mode == "slots":
+            self.slot_caches[i] = self._fresh_cache()
+        # stacked: nothing to reset — admission overwrites the whole row
 
     def _fresh_cache(self):
         return model_lib.init_cache(self.cfg, 1, self.max_seq,
@@ -445,6 +898,7 @@ class ServeEngine:
     def _finalize(self, req: Request, status: RequestState,
                   error_kind: Optional[str] = None,
                   error: Optional[str] = None):
+        self._attempt_streak.pop(req.rid, None)
         req.error_kind = error_kind
         req.error = error
         req.advance(status, self.clock())

@@ -153,6 +153,37 @@ class FaultInjector:
             return leaf
         return jax.tree.map(poison, cache)
 
+    @staticmethod
+    def corrupt_pages(cache, page_ids):
+        """Poison ONLY the given pages of a paged KV pool (leaves shaped
+        (L, NP, P, ...), page id on axis 1) — the page-scoped analogue of
+        :meth:`corrupt_cache` for the shared pool, where poisoning every
+        leaf would corrupt co-tenant requests and break the isolation the
+        fault is meant to test."""
+        ids = jnp.asarray(list(page_ids), jnp.int32)
+
+        def poison(leaf):
+            leaf = jnp.asarray(leaf)
+            if jnp.issubdtype(leaf.dtype, jnp.inexact) and leaf.ndim >= 2:
+                rows = jnp.full((leaf.shape[0], ids.shape[0]) + leaf.shape[2:],
+                                float("nan"), leaf.dtype)
+                return leaf.at[:, ids].set(rows)
+            return leaf
+        return jax.tree.map(poison, cache) if len(ids) else cache
+
+    @staticmethod
+    def corrupt_rows(cache, row: int):
+        """Poison one batch row (axis 1 of every stacked leaf) — the
+        per-request fault surface for stacked recurrent-state caches."""
+        def poison(leaf):
+            leaf = jnp.asarray(leaf)
+            if jnp.issubdtype(leaf.dtype, jnp.inexact) and leaf.ndim >= 2:
+                nan_row = jnp.full((leaf.shape[0],) + leaf.shape[2:],
+                                   float("nan"), leaf.dtype)
+                return leaf.at[:, row].set(nan_row)
+            return leaf
+        return jax.tree.map(poison, cache)
+
     def summary(self) -> Dict[str, object]:
         return {
             "specs": len(self.specs),

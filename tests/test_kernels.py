@@ -195,3 +195,42 @@ def test_flash_attention_gqa_wrapper_matches_model_attention(rng):
     got = flash_attention(q, k, v, 0.25, causal=True, bq=8, bkv=8)
     want = attention(q, k, v, causal_mask(s, s, 0), 0.25)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def test_paged_flash_attention_matches_dense_gather(rng):
+    """The in-kernel page gather == dense attention over the logically
+    contiguous KV, for shuffled non-contiguous page placements and per-
+    sequence lengths; unowned/null pages hold garbage that must not leak."""
+    from repro.kernels.ops import paged_flash_attention
+
+    b, h, kh, d, page, mpb, npages = 3, 4, 2, 16, 4, 6, 16
+    g = h // kh
+    q = jnp.asarray(rng.standard_normal((b, h, d)), jnp.float32)
+    # pool full of garbage; only block-table-owned positions are real
+    k_pages = jnp.asarray(rng.standard_normal((npages, page, kh, d)) * 50,
+                          jnp.float32)
+    v_pages = jnp.asarray(rng.standard_normal((npages, page, kh, d)) * 50,
+                          jnp.float32)
+    lengths = np.asarray([5, 24, 13], np.int32)
+    ids = rng.permutation(np.arange(1, npages))  # non-contiguous, page 0 never owned
+    bt = np.zeros((b, mpb), np.int32)
+    taken = 0
+    for i in range(b):
+        n = -(-int(lengths[i]) // page)
+        bt[i, :n] = ids[taken:taken + n]
+        taken += n
+    got = paged_flash_attention(q, k_pages, v_pages, bt, lengths, 0.25)
+
+    # reference: gather each sequence's pages contiguously, truncate to its
+    # length, plain softmax attention per query head
+    for i in range(b):
+        L = int(lengths[i])
+        kk = k_pages[bt[i]].reshape(mpb * page, kh, d)[:L]
+        vv = v_pages[bt[i]].reshape(mpb * page, kh, d)[:L]
+        for hh in range(h):
+            c = hh // g  # kv head of this query head's group
+            s = (q[i, hh] * 0.25) @ kk[:, c].T
+            want = jax.nn.softmax(s) @ vv[:, c]
+            np.testing.assert_allclose(np.asarray(got[i, hh]),
+                                       np.asarray(want),
+                                       rtol=2e-4, atol=2e-4)

@@ -1,0 +1,265 @@
+"""Paged-KV serving: allocator invariants (property-tested), one-batched-
+decode-call accounting, chunked-prefill interleaving, and the invariance
+guarantees that make paging safe — outputs must not depend on page
+placement, page size, chunking, or batch co-tenancy."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.models import model
+from repro.models.config import reduced
+from repro.serve.engine import Request, RequestState, ServeEngine
+from repro.serve.paging import NULL_PAGE, PageAllocator
+
+
+# ---------------------------------------------------------------------------
+# allocator property tests
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(num_pages=st.integers(2, 48), page_size=st.integers(1, 8),
+       seed=st.integers(0, 2**31 - 1))
+def test_allocator_roundtrip_never_leaks_or_double_frees(
+        num_pages, page_size, seed):
+    """Random ensure/free interleavings: every invariant in paging.py holds
+    after every operation, a refused ensure commits nothing, and freeing
+    everything returns the allocator to full capacity."""
+    alloc = PageAllocator(num_pages, page_size)
+    rng = np.random.default_rng(seed)
+    mirror = {}  # rid -> page count we believe it holds
+    for _ in range(60):
+        rid = int(rng.integers(0, 6))
+        if rng.integers(2) and mirror:
+            victim = int(rng.choice(sorted(mirror)))
+            freed = alloc.free(victim)
+            assert freed == mirror.pop(victim)
+            # double free is a no-op, never a second refund
+            assert alloc.free(victim) == 0
+        else:
+            n_tokens = int(rng.integers(0, 8 * page_size + 1))
+            before = (alloc.free_pages, alloc.holds(rid))
+            got = alloc.ensure(rid, n_tokens)
+            need = alloc.pages_for(n_tokens) - before[1]
+            if got is None:
+                # refused: the request outgrew the free list, and nothing
+                # was committed (no partial allocation)
+                assert need > before[0]
+                assert (alloc.free_pages, alloc.holds(rid)) == before
+            else:
+                assert len(got) == max(need, 0)
+                assert NULL_PAGE not in got
+                if alloc.holds(rid):
+                    mirror[rid] = alloc.holds(rid)
+                # idempotent: re-ensuring a covered length allocates nothing
+                assert alloc.ensure(rid, n_tokens) == []
+        alloc.check()
+        assert alloc.used_pages == sum(mirror.values())
+    for rid in list(mirror):
+        alloc.free(rid)
+    alloc.check()
+    assert alloc.free_pages == alloc.capacity and alloc.used_pages == 0
+
+
+@settings(max_examples=30, deadline=None)
+@given(page_size=st.integers(1, 16), n_tokens=st.integers(0, 200))
+def test_admission_accounting_is_exact_ceil(page_size, n_tokens):
+    """pages_for is exactly the page count a request of n tokens occupies —
+    the quantity admission control charges against the free list."""
+    alloc = PageAllocator(64, page_size)
+    expect = 0 if n_tokens <= 0 else (n_tokens + page_size - 1) // page_size
+    assert alloc.pages_for(n_tokens) == expect
+    got = alloc.ensure(7, n_tokens)
+    if expect <= alloc.capacity:
+        assert len(got) == expect == alloc.holds(7) == alloc.used_pages
+        assert alloc.free_pages == alloc.capacity - expect
+    else:
+        assert got is None and alloc.used_pages == 0
+    alloc.check()
+
+
+# ---------------------------------------------------------------------------
+# engine integration
+# ---------------------------------------------------------------------------
+
+
+def _mk(rng, cfg, n, length):
+    return [np.asarray(rng.integers(0, cfg.vocab_size, (length,)), np.int32)
+            for _ in range(n)]
+
+
+def test_one_decode_call_per_step_and_trace_count(rng):
+    """The tentpole contract: one jitted paged call per engine decode step
+    regardless of how many requests are active, and exactly TWO traces per
+    engine config (one prefill chunk shape, one (B, 1) decode shape)."""
+    cfg = reduced(get_config("smollm-135m"))
+    params = model.init_params(cfg, jax.random.PRNGKey(0))
+    # unique (max_seq, page_size, batch) so this test owns its jit traces
+    eng = ServeEngine(cfg, params, batch_slots=3, max_seq=40, page_size=8)
+    assert eng.mode == "paged"
+    t0 = eng.health()["traces"]["paged"]
+    for i, p in enumerate(_mk(rng, cfg, 3, 7)):
+        eng.submit(Request(rid=i, prompt=p, max_new_tokens=4))
+    done = eng.run()
+    assert all(done[i].ok and len(done[i].out_tokens) == 4 for i in range(3))
+    # 3 requests x 3 decode tokens each ran in 3 batched calls, not 9
+    assert eng.counters["decode_calls"] == 3
+    assert eng.health()["traces"]["paged"] - t0 == 2
+    # terminal transitions returned every page
+    stats = eng.health()["kv_pages"]
+    assert stats["used"] == 0 and stats["free"] == stats["capacity"]
+    eng.alloc.check()
+
+
+def test_outputs_invariant_to_pages_batch_and_chunking(rng):
+    """The serving guarantee that makes paging invisible: tokens depend only
+    on (params, prompt, seed) — not on which pages the request landed on,
+    the page size, co-tenants, or prefill chunking."""
+    cfg = reduced(get_config("smollm-135m"))
+    params = model.init_params(cfg, jax.random.PRNGKey(0))
+    prompts = _mk(rng, cfg, 4, 9)
+
+    def run(batch_slots, page_size, prefill_chunk=None, occupy=0, kv_pages=None):
+        eng = ServeEngine(cfg, params, batch_slots=batch_slots, max_seq=32,
+                          page_size=page_size, prefill_chunk=prefill_chunk,
+                          kv_pages=kv_pages)
+        if occupy:
+            # fragment the pool before any admission: requests land on
+            # different physical pages than in a fresh engine
+            assert eng.alloc.ensure(-1, occupy * page_size) is not None
+        for i, p in enumerate(prompts):
+            eng.submit(Request(rid=i, prompt=p, max_new_tokens=6))
+        done = eng.run()
+        assert all(done[i].ok for i in range(len(prompts))), done
+        return [done[i].out_tokens for i in range(len(prompts))]
+
+    base = run(batch_slots=4, page_size=8)
+    assert run(batch_slots=1, page_size=8) == base          # co-tenancy
+    assert run(batch_slots=2, page_size=5) == base          # page size (non-dividing)
+    assert run(batch_slots=4, page_size=8, occupy=3,
+               kv_pages=4 * 4 + 1 + 3) == base              # page placement
+    assert run(batch_slots=2, page_size=8, prefill_chunk=4) == base  # chunking
+
+
+def test_chunked_prefill_interleaves_with_decode(rng):
+    """A long prompt prefilling in chunks must not stall a co-tenant's
+    decode: the short request keeps emitting tokens between chunks."""
+    cfg = reduced(get_config("smollm-135m"))
+    params = model.init_params(cfg, jax.random.PRNGKey(0))
+    long_p, = _mk(rng, cfg, 1, 20)
+    short_p, = _mk(rng, cfg, 1, 4)
+    eng = ServeEngine(cfg, params, batch_slots=2, max_seq=64, page_size=8,
+                      prefill_chunk=4)
+    eng.submit(Request(rid=0, prompt=long_p, max_new_tokens=5))
+    eng.submit(Request(rid=1, prompt=short_p, max_new_tokens=8))
+    eng._admit()
+    long_req = eng.slot_req[0]
+    short_req = eng.slot_req[1]
+    assert long_req.rid == 0 and long_req.state is RequestState.PREFILLING
+    assert short_req.rid == 1 and short_req.state is RequestState.DECODING
+    for _ in range(2):
+        eng._prefill_tick()
+        eng._step()
+    # 3 of 5 chunks done for the long prompt; the short one decoded twice
+    assert long_req.state is RequestState.PREFILLING
+    assert len(long_req.out_tokens) == 0
+    assert len(short_req.out_tokens) == 3
+    done = eng.run()
+    assert done[0].ok and done[1].ok
+    # and chunking changed nothing about the long prompt's tokens
+    ref = ServeEngine(cfg, params, batch_slots=2, max_seq=64, page_size=8)
+    ref.submit(Request(rid=0, prompt=long_p, max_new_tokens=5))
+    assert ref.run()[0].out_tokens == done[0].out_tokens
+
+
+def test_pool_exhaustion_fails_request_and_frees_pages(rng):
+    """An undersized pool: the decode-boundary allocation runs dry, the
+    request FAILs with kv_pages_exhausted, and its pages come back."""
+    cfg = reduced(get_config("smollm-135m"))
+    params = model.init_params(cfg, jax.random.PRNGKey(0))
+    p, = _mk(rng, cfg, 1, 8)
+    # capacity 3 pages of 4 = positions 0..11; prompt 8 + 5th new token
+    # needs a 4th page
+    eng = ServeEngine(cfg, params, batch_slots=1, max_seq=32, page_size=4,
+                      kv_pages=4, max_retries=0)
+    eng.submit(Request(rid=0, prompt=p, max_new_tokens=8))
+    done = eng.run()
+    assert done[0].status is RequestState.FAILED
+    assert done[0].error_kind == "kv_pages_exhausted"
+    # prefill token + 4 decode tokens (positions 8..11) fit in 3 pages
+    assert len(done[0].out_tokens) == 5
+    assert eng.alloc.free_pages == eng.alloc.capacity
+    eng.alloc.check()
+
+
+def test_admission_backpressure_queues_until_pages_free(rng):
+    """Two requests whose pages cannot coexist: the second waits in queue
+    (FIFO backpressure, not rejection) and completes once the first frees
+    its pages."""
+    cfg = reduced(get_config("smollm-135m"))
+    params = model.init_params(cfg, jax.random.PRNGKey(0))
+    prompts = _mk(rng, cfg, 2, 10)
+    # each needs 3 pages of 4; capacity 4 cannot hold both at once
+    eng = ServeEngine(cfg, params, batch_slots=2, max_seq=32, page_size=4,
+                      kv_pages=5)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p, max_new_tokens=2))
+    done = eng.run()
+    assert done[0].ok and done[1].ok
+    assert eng.alloc.free_pages == eng.alloc.capacity
+
+
+def test_submit_rejects_prompt_exceeding_pool_capacity(rng):
+    """Admission accounting is in PAGES: a prompt that fits max_seq but can
+    never fit the pool is rejected up front, not deadlocked in queue."""
+    cfg = reduced(get_config("smollm-135m"))
+    params = model.init_params(cfg, jax.random.PRNGKey(0))
+    p, = _mk(rng, cfg, 1, 12)  # needs 4 pages of 4; capacity is 2
+    eng = ServeEngine(cfg, params, batch_slots=1, max_seq=32, page_size=4,
+                      kv_pages=3)
+    assert not eng.submit(Request(rid=0, prompt=p, max_new_tokens=2))
+    assert eng.records[0].status is RequestState.REJECTED
+    assert eng.records[0].error_kind == "kv_capacity"
+
+
+def test_health_surfaces_mode_pages_and_decode_plan():
+    cfg = reduced(get_config("smollm-135m"))
+    params = model.init_params(cfg, jax.random.PRNGKey(0))
+    h = ServeEngine(cfg, params, batch_slots=2, max_seq=32).health()
+    assert h["mode"] == "paged"
+    assert h["kv_pages"]["capacity"] == h["kv_pages"]["free"]
+    assert h["decode_plan"] is None  # FP params resolve no kernel plan
+
+    ssm = reduced(get_config("mamba2-370m"))
+    h2 = ServeEngine(ssm, model.init_params(ssm, jax.random.PRNGKey(0)),
+                     batch_slots=2, max_seq=32).health()
+    assert h2["mode"] == "stacked" and h2["kv_pages"] is None
+
+    with pytest.raises(ValueError, match="prefill_chunk"):
+        ServeEngine(ssm, model.init_params(ssm, jax.random.PRNGKey(0)),
+                    batch_slots=2, max_seq=32, prefill_chunk=4)
+
+
+def test_decode_plan_resolved_at_real_batched_m():
+    """The decode-regime bugfix: QLinear decode GEMMs run at M=batch_slots
+    (one batched step), so health() must report the plan at that M, not the
+    per-slot M=1 the old engine implied."""
+    from repro.quant.qlinear import make_qlinear
+
+    cfg = reduced(get_config("smollm-135m"))
+    params = model.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    q = make_qlinear(
+        jnp.asarray(rng.integers(-7, 8, (cfg.d_model, cfg.d_model)), jnp.int8),
+        jnp.ones((cfg.d_model, 1), jnp.float32), impl="sim")
+    params = dict(params, probe=q)
+    eng = ServeEngine(cfg, params, batch_slots=16, max_seq=32,
+                      kernel_impl=None)
+    plan = eng.health()["decode_plan"]
+    assert plan["m"] == 16 and plan["regime"] == "decode"
+    assert plan["k"] == cfg.d_model and plan["n"] == cfg.d_model
+    assert plan["path"] in ("fused", "chained", "unfused")
