@@ -1,14 +1,25 @@
 """Fault-tolerant checkpointing (no orbax in this container — pure numpy).
 
  - per-leaf ``.npy`` files + a JSON manifest with the pytree structure,
- - ATOMIC: written to ``<dir>.tmp`` then os.rename'd — a crash mid-save never
-   corrupts the latest checkpoint,
- - keep-k rotation,
+ - ATOMIC: written to ``<dir>/.tmp_step_*`` then os.rename'd — a crash
+   mid-save never corrupts the latest checkpoint,
+ - keep-k rotation, with **crash-debris hygiene**: stray non-``step_*``
+   entries and malformed ``step_<garbage>`` names never break the scan, and
+   orphaned ``.tmp_step_*`` directories left by a mid-save crash are garbage
+   -collected on the next rotation,
+ - incomplete checkpoints (missing manifest, missing leaf files, manifest
+   missing an expected leaf) raise a structured :class:`CheckpointError`;
+   ``CheckpointManager.restore_latest`` falls back step by step to the
+   newest checkpoint that loads cleanly,
  - **mesh-elastic restore**: leaves are saved as full logical arrays
    (device_get) and resharded onto the CURRENT mesh/sharding at load — a
    restart on a different device count re-lowers and resumes (tested on
    resized host-device meshes),
  - resume-from-latest scanning.
+
+The serving engine's crash-recovery snapshots (``ServeEngine.snapshot`` /
+``restore``) ride on this exact path: the same atomic ``.tmp``-rename save,
+the same keep-k rotation, the same incomplete-checkpoint fallback.
 
 At real multi-pod scale the device_get/put pair becomes a per-host sharded
 read/write (same manifest format); the single-process container exercises the
@@ -20,12 +31,20 @@ from __future__ import annotations
 import json
 import os
 import shutil
+import warnings
 from pathlib import Path
-from typing import Any, Optional
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+class CheckpointError(RuntimeError):
+    """A checkpoint directory exists but cannot be loaded (missing
+    manifest, missing leaf file, manifest missing an expected leaf) —
+    typically debris from a crash mid-save that slipped past the atomic
+    rename (e.g. a partially deleted directory)."""
 
 
 def _flatten_with_names(tree):
@@ -45,6 +64,39 @@ def _flatten_with_names(tree):
         names.append("__".join(parts) or "leaf")
         leaves.append(leaf)
     return names, leaves, treedef
+
+
+def _step_dirs(ckpt_dir) -> Dict[int, Path]:
+    """Map step -> checkpoint dir, skipping crash debris: non-``step_*``
+    entries, ``step_<non-integer>`` strays, and plain files."""
+    d = Path(ckpt_dir)
+    if not d.exists():
+        return {}
+    out: Dict[int, Path] = {}
+    for p in d.iterdir():
+        if not p.is_dir() or not p.name.startswith("step_"):
+            continue
+        try:
+            step = int(p.name.split("_", 1)[1])
+        except ValueError:
+            continue  # "step_garbage" debris — never a checkpoint we wrote
+        out[step] = p
+    return out
+
+
+def _gc_orphan_tmp(ckpt_dir) -> int:
+    """Remove orphaned ``.tmp_step_*`` directories (a crash mid-save left
+    them behind; the atomic rename means they are never the latest state).
+    Returns the number removed."""
+    d = Path(ckpt_dir)
+    if not d.exists():
+        return 0
+    n = 0
+    for p in d.iterdir():
+        if p.is_dir() and p.name.startswith(".tmp_step_"):
+            shutil.rmtree(p, ignore_errors=True)
+            n += 1
+    return n
 
 
 def save_checkpoint(ckpt_dir: str, step: int, tree: Any) -> str:
@@ -71,12 +123,47 @@ def save_checkpoint(ckpt_dir: str, step: int, tree: Any) -> str:
     return str(final)
 
 
+def _read_manifest(path: Path) -> dict:
+    mf = path / "manifest.json"
+    if not mf.exists():
+        raise CheckpointError(
+            f"checkpoint {path} is incomplete: no manifest.json "
+            f"(crash debris?)")
+    try:
+        return json.loads(mf.read_text())
+    except (json.JSONDecodeError, OSError) as e:
+        raise CheckpointError(
+            f"checkpoint {path} has an unreadable manifest: {e}") from None
+
+
+def load_leaf(path, name: str) -> np.ndarray:
+    """Load ONE named leaf from a checkpoint without reconstructing the
+    whole tree (used for variable-shape metadata leaves the ``like``-tree
+    protocol cannot express, e.g. the serving snapshot's JSON blob)."""
+    path = Path(path)
+    manifest = _read_manifest(path)
+    for entry in manifest["leaves"]:
+        if entry["name"] == name:
+            try:
+                return np.load(path / entry["file"])
+            except (OSError, ValueError) as e:
+                raise CheckpointError(
+                    f"checkpoint {path} leaf {name!r} is unreadable: {e}"
+                ) from None
+    raise CheckpointError(
+        f"checkpoint {path} is incomplete: manifest has no leaf {name!r}")
+
+
 def load_checkpoint(path: str, like: Any, shardings: Any = None) -> Any:
     """Restore a pytree saved by :func:`save_checkpoint` into the structure
     of ``like`` (ShapeDtypeStructs or arrays).  ``shardings``: optional tree
-    of NamedShardings for the CURRENT mesh — elastic restore."""
+    of NamedShardings for the CURRENT mesh — elastic restore.
+
+    Manifest entries not named by ``like`` are ignored; a leaf ``like``
+    expects but the manifest lacks raises :class:`CheckpointError` (the
+    "checkpoint incomplete" signal ``restore_latest`` falls back on)."""
     path = Path(path)
-    manifest = json.loads((path / "manifest.json").read_text())
+    manifest = _read_manifest(path)
     names, like_leaves, treedef = _flatten_with_names(like)
     by_name = {e["name"]: e for e in manifest["leaves"]}
     shard_leaves = (
@@ -88,8 +175,17 @@ def load_checkpoint(path: str, like: Any, shardings: Any = None) -> Any:
     )
     out = []
     for name, like_leaf, shard in zip(names, like_leaves, shard_leaves):
-        entry = by_name[name]
-        arr = np.load(path / entry["file"])
+        entry = by_name.get(name)
+        if entry is None:
+            raise CheckpointError(
+                f"checkpoint {path} is incomplete: manifest is missing "
+                f"leaf {name!r} ({len(by_name)} leaves present)")
+        try:
+            arr = np.load(path / entry["file"])
+        except (OSError, ValueError) as e:
+            raise CheckpointError(
+                f"checkpoint {path} leaf {name!r} is unreadable: {e}"
+            ) from None
         expect = tuple(like_leaf.shape)
         if tuple(arr.shape) != expect:
             raise ValueError(f"{name}: checkpoint shape {arr.shape} != {expect}")
@@ -101,18 +197,13 @@ def load_checkpoint(path: str, like: Any, shardings: Any = None) -> Any:
 
 
 def latest_step(ckpt_dir: str) -> Optional[int]:
-    d = Path(ckpt_dir)
-    if not d.exists():
-        return None
-    steps = sorted(
-        int(p.name.split("_")[1]) for p in d.iterdir()
-        if p.is_dir() and p.name.startswith("step_")
-    )
+    steps = sorted(_step_dirs(ckpt_dir))
     return steps[-1] if steps else None
 
 
 class CheckpointManager:
-    """save-every-N + keep-k rotation + resume-from-latest."""
+    """save-every-N + keep-k rotation + resume-from-latest (with fallback
+    past incomplete checkpoints and crash-debris garbage collection)."""
 
     def __init__(self, ckpt_dir: str, every: int = 100, keep: int = 3):
         self.dir = Path(ckpt_dir)
@@ -122,21 +213,41 @@ class CheckpointManager:
     def maybe_save(self, step: int, tree) -> Optional[str]:
         if step % self.every != 0:
             return None
+        return self.save(step, tree)
+
+    def save(self, step: int, tree) -> str:
+        """Unconditional atomic save + rotation (``maybe_save`` without the
+        every-N gate — the serving engine snapshots on its own schedule)."""
         path = save_checkpoint(self.dir, step, tree)
         self._gc()
         return path
 
     def _gc(self):
-        steps = sorted(
-            int(p.name.split("_")[1]) for p in self.dir.iterdir()
-            if p.is_dir() and p.name.startswith("step_")
-        )
-        for s in steps[: -self.keep]:
-            shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)
+        _gc_orphan_tmp(self.dir)
+        by_step = _step_dirs(self.dir)
+        for s in sorted(by_step)[: -self.keep]:
+            shutil.rmtree(by_step[s], ignore_errors=True)
 
     def restore_latest(self, like, shardings=None):
-        step = latest_step(self.dir)
-        if step is None:
-            return None, None
-        tree = load_checkpoint(self.dir / f"step_{step:08d}", like, shardings)
-        return step, tree
+        """Load the newest checkpoint that restores cleanly.  An incomplete
+        checkpoint (``CheckpointError``) is skipped with a warning naming
+        the fallback step; if every candidate is damaged the last error is
+        re-raised.  No checkpoints at all -> ``(None, None)``."""
+        by_step = _step_dirs(self.dir)
+        last_err: Optional[CheckpointError] = None
+        for step in sorted(by_step, reverse=True):
+            try:
+                tree = load_checkpoint(by_step[step], like, shardings)
+                return step, tree
+            except CheckpointError as e:
+                older = [s for s in by_step if s < step]
+                fallback = (f"falling back to step {max(older)}" if older
+                            else "no older checkpoint to fall back to")
+                warnings.warn(f"checkpoint incomplete at step {step} "
+                              f"({e}); {fallback}")
+                last_err = e
+        if last_err is not None:
+            raise CheckpointError(
+                f"no restorable checkpoint under {self.dir}: every step in "
+                f"{sorted(by_step)} is incomplete ({last_err})")
+        return None, None

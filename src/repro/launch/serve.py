@@ -29,10 +29,31 @@ the structured split — exactly K FAILED/TIMED_OUT records, N-K FINISHED
 additionally replays the same requests fault-free and asserts the
 untargeted completions are bitwise identical.  CI runs this as the
 chaos-smoke step.
+
+Crash-recovery chaos (docs/serving.md, "Crash recovery")::
+
+    PYTHONPATH=src python -m repro.launch.serve --requests 8 \
+        --journal /tmp/rec/journal.wal --ckpt-dir /tmp/rec \
+        --snapshot-every 4 --crash-after 2 [--crash-phase decode] \
+        --parity-check
+
+``--crash-after K`` schedules one seeded ``process_crash`` fault: the
+engine dies (``SimulatedCrash`` unwinds ``run()``) on the K-th hit of the
+chosen phase for a seed-picked rid, mid-flight, leaving only the
+write-ahead journal and the last snapshot.  The launcher then calls
+``ServeEngine.restore`` and asserts the recovery contract: the journal
+replays cleanly, every request terminates EXACTLY once (``collate``
+rejects double delivery or double terminals), and — with
+``--parity-check`` — every token stream is bitwise identical to an
+uninterrupted fault-free run.  Exits non-zero (and dumps
+``results/serve_recovery_failure.json``) on any violation.  ``--journal``
+and ``--ckpt-dir`` also work without ``--crash-after`` to journal /
+snapshot a normal serve run.
 """
 
 import argparse
 import json
+import os
 import sys
 import time
 
@@ -73,6 +94,119 @@ def _print_failure_summary(done, health, injector=None):
           f"steps={counters['steps']} stalled={health['stalled']}")
     if injector is not None:
         print(f"fault injector: {json.dumps(injector.summary())}")
+
+
+def _dump_recovery_failure(path, payload):
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, default=str)
+    print(f"wrote failure report to {path}", file=sys.stderr)
+
+
+def _crash_recovery_harness(args, cfg, params, ctx, run_engine) -> int:
+    """Kill the engine mid-run with a seeded process_crash, restore from
+    journal+snapshot, and assert the recovery contract (exactly-once
+    terminals; bitwise-equal streams with --parity-check).  Returns the
+    process exit code."""
+    import tempfile
+
+    import numpy as np
+    from repro.serve.engine import ServeEngine
+    from repro.serve.faults import FaultInjector, FaultSpec, SimulatedCrash
+    from repro.serve.journal import (JournalCorruption, JournalWriter,
+                                     collate, read_journal)
+    from repro.serve.lifecycle import RequestState
+
+    workdir = args.ckpt_dir or tempfile.mkdtemp(prefix="serve_recovery_")
+    jpath = args.journal or os.path.join(workdir, "journal.wal")
+    snap_dir = os.path.join(workdir, "snapshots")
+    snap_every = args.snapshot_every or 4
+    rng = np.random.default_rng(args.fault_seed)
+    crash_rid = int(rng.integers(0, args.requests))
+    spec = FaultSpec(kind="process_crash", phase=args.crash_phase,
+                     rid=crash_rid, at_call=args.crash_after)
+    print(f"recovery chaos: scheduled process_crash at {args.crash_phase} "
+          f"hit {args.crash_after} of rid {crash_rid} "
+          f"(seed {args.fault_seed}); journal={jpath} "
+          f"snapshots={snap_dir} every {snap_every} steps")
+
+    crashed = None
+    try:
+        run_engine(FaultInjector([spec]),
+                   journal=JournalWriter(jpath, overwrite=True),
+                   snapshot_dir=snap_dir, snapshot_every=snap_every)
+    except SimulatedCrash as e:
+        crashed = e
+    if crashed is None:
+        print(f"RECOVERY CHAOS MISBEHAVED: the crash point was never hit "
+              f"(rid {crash_rid} finished in fewer than "
+              f"{args.crash_after + 1} {args.crash_phase} calls?)",
+              file=sys.stderr)
+        return 1
+    print(f"engine died as scheduled: {crashed}")
+
+    t0 = time.time()
+    try:
+        eng = ServeEngine.restore(cfg, params, jpath, snapshot_dir=snap_dir,
+                                  snapshot_every=snap_every,
+                                  kernel_impl=args.impl, ctx=ctx,
+                                  max_retries=args.retries,
+                                  stall_patience=args.stall_patience)
+        done = eng.run()
+        eng.journal.close()
+        col = collate(read_journal(jpath).records)
+    except JournalCorruption as e:
+        print(f"RECOVERY FAILED: {e}", file=sys.stderr)
+        _dump_recovery_failure("results/serve_recovery_failure.json",
+                               {"error": str(e), "journal": jpath})
+        return 1
+    dt = time.time() - t0
+    n_resumed = len(col.recovers)
+    print(f"restored + drained in {dt:.2f}s "
+          f"({len(done)} records, {n_resumed} recover marker(s))")
+
+    problems = []
+    # exactly-once termination: collate() above already raised on a double
+    # terminal or a non-contiguous token stream; what remains is coverage
+    missing = [rid for rid in range(args.requests) if rid not in col.terminals]
+    if missing:
+        problems.append(f"rids {missing} never reached a journaled terminal")
+    not_finished = [r.rid for r in done.values()
+                    if r.status is not RequestState.FINISHED]
+    if not_finished:
+        problems.append(f"rids {not_finished} did not finish cleanly: "
+                        f"{[str(done[r].status) for r in not_finished]}")
+    for rid, rec in done.items():
+        if col.tokens.get(rid, []) != rec.out_tokens:
+            problems.append(f"rid {rid}: journal stream != record stream")
+
+    if args.parity_check:
+        _, clean = run_engine(None)
+        mismatched = [rid for rid in sorted(clean)
+                      if done[rid].out_tokens != clean[rid].out_tokens]
+        if mismatched:
+            problems.append(f"streams for rids {mismatched} are not "
+                            f"bitwise equal to the uninterrupted run")
+        else:
+            print(f"parity OK: all {len(clean)} recovered streams bitwise "
+                  f"identical to the uninterrupted run (crash target "
+                  f"rid {crash_rid} included)")
+
+    if problems:
+        for p in problems:
+            print(f"RECOVERY VIOLATION: {p}", file=sys.stderr)
+        _dump_recovery_failure(
+            "results/serve_recovery_failure.json",
+            {"problems": problems, "journal": jpath,
+             "health": eng.health(),
+             "records": {rid: {"status": str(r.status),
+                               "tokens": r.out_tokens,
+                               "error_kind": r.error_kind}
+                         for rid, r in sorted(done.items())}})
+        return 1
+    print(f"recovery chaos OK: {len(done)} requests terminated exactly "
+          f"once across the crash")
+    return 0
 
 
 def main():
@@ -153,7 +287,33 @@ def main():
     ap.add_argument("--parity-check", action="store_true",
                     help="replay the same requests fault-free and assert "
                          "the untargeted completions are bitwise identical")
+    # -- crash recovery (serve/journal.py + engine snapshot/restore) --------
+    ap.add_argument("--journal", default=None, metavar="PATH",
+                    help="write-ahead request journal path; every submit/"
+                         "token/terminal is fsync'd here before it becomes "
+                         "visible (enables crash recovery)")
+    ap.add_argument("--ckpt-dir", default=None, metavar="DIR",
+                    help="engine snapshot directory (atomic tmp-rename "
+                         "checkpoints of the paged pool / caches + "
+                         "allocator + lifecycle state)")
+    ap.add_argument("--snapshot-every", type=int, default=0, metavar="N",
+                    help="snapshot the engine every N steps (step "
+                         "boundaries only); requires --ckpt-dir")
+    ap.add_argument("--crash-after", type=int, default=None, metavar="K",
+                    help="crash-recovery chaos: kill the engine with a "
+                         "seeded process_crash on the K-th --crash-phase "
+                         "hit of a seed-picked rid, then restore from "
+                         "journal+snapshot and assert every request "
+                         "terminates exactly once (bitwise-equal streams "
+                         "with --parity-check)")
+    ap.add_argument("--crash-phase", default="decode",
+                    choices=("prefill", "decode", "sampling"))
     args = ap.parse_args()
+    if args.crash_after is not None and args.crash_after < 0:
+        ap.error("--crash-after must be >= 0")
+    if args.crash_after is not None and args.inject_faults:
+        ap.error("--crash-after and --inject-faults are separate chaos "
+                 "harnesses; pick one")
 
     import jax
     import numpy as np
@@ -203,7 +363,7 @@ def main():
     prompts = [rng.integers(0, cfg.vocab_size, 12).astype(np.int32)
                for _ in range(args.requests)]
 
-    def run_engine(inj):
+    def run_engine(inj, **crash_safety):
         eng = ServeEngine(
             cfg, params, batch_slots=args.slots, max_seq=args.max_seq,
             page_size=args.page_size, kv_pages=args.kv_pages,
@@ -213,14 +373,29 @@ def main():
             queue_limit=args.queue_bound, queue_policy=args.queue_policy,
             default_deadline_s=args.deadline_s,
             stall_patience=args.stall_patience, injector=inj,
+            **crash_safety,
         )
         for i, p in enumerate(prompts):
             eng.submit(Request(rid=i, prompt=p.copy(),
                                max_new_tokens=args.new_tokens))
         return eng, eng.run()
 
+    if args.crash_after is not None:
+        sys.exit(_crash_recovery_harness(args, cfg, params, ctx, run_engine))
+
+    crash_safety = {}
+    if args.journal:
+        from repro.serve.journal import JournalWriter
+
+        crash_safety["journal"] = JournalWriter(args.journal, overwrite=True)
+    if args.ckpt_dir:
+        crash_safety.update(snapshot_dir=args.ckpt_dir,
+                            snapshot_every=args.snapshot_every)
+
     t0 = time.time()
-    eng, done = run_engine(injector)
+    eng, done = run_engine(injector, **crash_safety)
+    if eng.journal is not None:
+        eng.journal.close()
     dt = time.time() - t0
     total = sum(len(r.out_tokens) for r in done.values())
     finished = [r for r in done.values() if r.ok]

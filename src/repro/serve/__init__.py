@@ -1,6 +1,25 @@
+"""Public serving API.
+
+The error-kind taxonomy every ``RequestRecord.error_kind`` draws from is
+:class:`~repro.serve.lifecycle.ErrorKind` — a documented str-enum (members
+compare equal to their literal values, e.g. ``ErrorKind.DEADLINE ==
+"deadline"``), with :data:`~repro.serve.lifecycle.RETRYABLE_KINDS` marking
+the subset the engine retries before failing a request.
+
+Crash safety lives in :mod:`repro.serve.journal` (the write-ahead request
+journal) plus ``ServeEngine.snapshot`` / ``ServeEngine.restore``; the
+``process_crash`` fault kind (:class:`~repro.serve.faults.SimulatedCrash`)
+drives the recovery chaos harness in ``launch/serve.py``.
+"""
+
 from repro.serve.engine import PagesExhausted, ServeEngine
-from repro.serve.faults import FaultInjector, FaultSpec, InjectedFault
-from repro.serve.lifecycle import (IllegalTransition, Request, RequestRecord,
-                                   RequestState)
+from repro.serve.faults import (FaultInjector, FaultSpec, InjectedFault,
+                                SimulatedCrash)
+from repro.serve.journal import (Collated, JournalCorruption, JournalError,
+                                 JournalReplay, JournalWriter, collate,
+                                 read_journal)
+from repro.serve.lifecycle import (ErrorKind, IllegalTransition, Request,
+                                   RequestRecord, RequestState,
+                                   RETRYABLE_KINDS)
 from repro.serve.paging import NULL_PAGE, PageAllocator
 from repro.serve.sampling import NonFiniteLogitsError, sample_token

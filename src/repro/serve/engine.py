@@ -61,6 +61,24 @@ the chaos suite's strongest assert hold: untargeted requests are bitwise
 identical to a fault-free run, regardless of WHICH pages a request lands
 on, which slot it occupies, or what its co-tenants are doing.
 
+**Crash safety** (``journal=`` / ``snapshot_dir=`` / ``snapshot_every=``;
+full guide in docs/serving.md, "Crash recovery"):
+
+- every externally visible effect — an accepted submit, a committed token,
+  a terminal record — is appended (fsync'd) to the write-ahead journal
+  BEFORE the in-memory effect happens, so the journal is always at or
+  ahead of engine state;
+- ``snapshot()`` persists the full decode state (paged pool + allocator +
+  block tables, or the stacked/slot caches) atomically through the
+  checkpoint path, at engine-step boundaries only;
+- ``ServeEngine.restore`` = latest restorable snapshot + journal replay:
+  slots whose journaled token count matches the snapshot resume in place;
+  anything newer than the snapshot (or with no usable snapshot at all)
+  re-prefills over ``prompt + journaled tokens`` — and because sampling
+  keys depend only on (seed, rid, token index), the recovered continuation
+  is bitwise identical to the uninterrupted run, with every journaled
+  token delivered exactly once.
+
 ``run()`` returns ``{rid: RequestRecord}`` — structured terminal records,
 not live request objects.  Works with FP or quantized (QLinear) params.
 """
@@ -68,7 +86,9 @@ not live request objects.  Works with FP or quantized (QLinear) params.
 from __future__ import annotations
 
 import functools
+import json
 import time
+import warnings
 from types import SimpleNamespace
 from typing import Callable, Dict, List, Optional, Tuple
 
@@ -76,10 +96,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint.ckpt import (CheckpointError, CheckpointManager,
+                                   load_leaf)
 from repro.models import model as model_lib
-from repro.serve.faults import FaultInjector, InjectedFault
-from repro.serve.lifecycle import (Request, RequestRecord, RequestState,
-                                   TERMINAL_STATES)
+from repro.serve.faults import FaultInjector, InjectedFault, SimulatedCrash
+from repro.serve.journal import (JournalError, JournalWriter, collate,
+                                 read_journal)
+from repro.serve.lifecycle import (ErrorKind, Request, RequestRecord,
+                                   RequestState, TERMINAL_STATES)
 from repro.serve.paging import PageAllocator
 from repro.serve.sampling import NonFiniteLogitsError, sample_token
 
@@ -125,15 +149,19 @@ def _model_fns(cfg) -> SimpleNamespace:
                            traces=traces)
 
 
-def _classify_error(e: BaseException) -> Tuple[str, str]:
+def _classify_error(e: BaseException) -> Tuple[ErrorKind, str]:
     if isinstance(e, InjectedFault):
-        kind = "injected"
+        kind = ErrorKind.INJECTED
     elif isinstance(e, NonFiniteLogitsError):
-        kind = "non_finite_logits"
+        kind = ErrorKind.NON_FINITE_LOGITS
     elif isinstance(e, PagesExhausted):
-        kind = "kv_pages_exhausted"
+        kind = ErrorKind.KV_PAGES_EXHAUSTED
+    elif isinstance(e, SimulatedCrash):
+        # a crash normally unwinds run() entirely; this only fires if a
+        # caller catches it and asks for a post-mortem classification
+        kind = ErrorKind.SIMULATED_CRASH
     else:
-        kind = "exception"
+        kind = ErrorKind.EXCEPTION
     msg = f"{type(e).__name__}: {e}"
     return kind, msg[:500]
 
@@ -151,7 +179,10 @@ class ServeEngine:
                  slot_failure_limit: int = 3, stall_patience: int = 64,
                  injector: Optional[FaultInjector] = None,
                  clock: Callable[[], float] = time.monotonic,
-                 sleep_fn: Callable[[float], None] = time.sleep):
+                 sleep_fn: Callable[[float], None] = time.sleep,
+                 journal: Optional[JournalWriter] = None,
+                 snapshot_dir: Optional[str] = None,
+                 snapshot_every: int = 0, snapshot_keep: int = 3):
         assert cfg.family in ("dense", "vlm", "ssm", "hybrid", "moe"), cfg.family
         if queue_policy not in ("reject_new", "drop_oldest"):
             raise ValueError(f"unknown queue_policy {queue_policy!r}; "
@@ -162,6 +193,10 @@ class ServeEngine:
             raise ValueError(f"page_size must be >= 1, got {page_size}")
         if prefill_chunk is not None and prefill_chunk < 1:
             raise ValueError(f"prefill_chunk must be >= 1, got {prefill_chunk}")
+        if snapshot_every < 0:
+            raise ValueError(f"snapshot_every must be >= 0, got {snapshot_every}")
+        if snapshot_every and snapshot_dir is None:
+            raise ValueError("snapshot_every > 0 requires snapshot_dir")
         # Decode runs W4A4+LRC through the pallas kernels (single-kernel
         # fused forward at decode/mixed shapes, prologue→GEMM chain past the
         # VMEM gate) whenever a compiled backend is attached; "auto" keeps
@@ -186,7 +221,19 @@ class ServeEngine:
         self.b = batch_slots
         self.max_seq = max_seq
         self.eos_id = eos_id
+        self.seed = seed
         self.base_key = jax.random.PRNGKey(seed)
+
+        # crash safety: write-ahead journal + snapshot schedule.  The open
+        # record (below, once the mode is known) pins the shape config a
+        # restored engine must be rebuilt with.
+        self.journal = journal
+        self.snapshot_every = snapshot_every
+        self._ckpt = (CheckpointManager(snapshot_dir, every=1,
+                                        keep=snapshot_keep)
+                      if snapshot_dir is not None else None)
+        self._journaled_submits: set = set()
+        self._journaled_terminals: set = set()
 
         self.max_retries = max_retries
         self.retry_backoff_s = retry_backoff_s
@@ -259,6 +306,13 @@ class ServeEngine:
         self._paged = self._fns.paged
         self.decode_plan = self._resolve_decode_plan()
 
+        self._journal("open", mode=self.mode, family=cfg.family,
+                      batch_slots=batch_slots, max_seq=max_seq,
+                      eos_id=eos_id, seed=seed, page_size=page_size,
+                      kv_pages=(None if self.alloc is None
+                                else self.alloc.num_pages),
+                      prefill_chunk=prefill_chunk)
+
     # -- public API ---------------------------------------------------------
 
     def submit(self, req: Request) -> bool:
@@ -270,7 +324,7 @@ class ServeEngine:
             req.deadline_s = self.default_deadline_s
         err = self._validate(req)
         if err is not None:
-            if err[0] == "duplicate_rid":
+            if err[0] is ErrorKind.DUPLICATE_RID:
                 # a second record cannot be indexed under the same rid —
                 # reject the duplicate in place, leaving the original
                 # request's record/queue entry untouched
@@ -283,13 +337,28 @@ class ServeEngine:
         if self.queue_limit is not None and len(self.queue) >= self.queue_limit:
             if self.queue_policy == "drop_oldest":
                 oldest = self.queue.pop(0)
-                self._finalize(oldest, RequestState.REJECTED, "queue_evicted",
+                self._finalize(oldest, RequestState.REJECTED,
+                               ErrorKind.QUEUE_EVICTED,
                                f"evicted by rid {req.rid} under drop_oldest "
                                f"(queue_limit={self.queue_limit})")
             else:
-                self._finalize(req, RequestState.REJECTED, "queue_full",
+                self._finalize(req, RequestState.REJECTED,
+                               ErrorKind.QUEUE_FULL,
                                f"queue at limit {self.queue_limit}")
                 return False
+        # WAL: the submit record is durable BEFORE the request becomes
+        # engine state — a crash one instruction later replays it.
+        # Rejected submits are deliberately NOT journaled: their REJECTED
+        # record was already returned synchronously, so recovery owes them
+        # nothing (and must not emit a second terminal for the rid).
+        if self.journal is not None:
+            self.journal.append(
+                "submit", rid=req.rid,
+                prompt=[int(t) for t in np.asarray(req.prompt)],
+                max_new_tokens=int(req.max_new_tokens),
+                temperature=float(req.temperature),
+                deadline_s=req.deadline_s)
+            self._journaled_submits.add(req.rid)
         self.counters["submitted"] += 1
         self.queue.append(req)
         return True
@@ -299,16 +368,16 @@ class ServeEngine:
         for qi, req in enumerate(self.queue):
             if req.rid == rid:
                 self.queue.pop(qi)
-                self._finalize(req, RequestState.CANCELLED, "cancelled",
-                               "cancelled while queued")
+                self._finalize(req, RequestState.CANCELLED,
+                               ErrorKind.CANCELLED, "cancelled while queued")
                 return True
         for i, req in enumerate(self.slot_req):
             if req is not None and req.rid == rid:
                 # applied immediately: free the slot (and its pages), keep
                 # emitted tokens
                 self._release_slot(i)
-                self._finalize(req, RequestState.CANCELLED, "cancelled",
-                               "cancelled in flight")
+                self._finalize(req, RequestState.CANCELLED,
+                               ErrorKind.CANCELLED, "cancelled in flight")
                 return True
         return False
 
@@ -331,11 +400,18 @@ class ServeEngine:
             stall = self._stall_reason()
             if stall is not None:
                 self.stall_report = {"reason": stall, "health": self.health()}
-                self._drain_unfinished("stall", f"run() aborted: {stall}")
+                self._drain_unfinished(ErrorKind.STALL,
+                                       f"run() aborted: {stall}")
                 return self.records
+            # snapshot at the step boundary ONLY: no forward is in flight,
+            # lengths/pool/allocator are mutually consistent
+            if (self.snapshot_every and self._ckpt is not None
+                    and self.counters["steps"] % self.snapshot_every == 0):
+                self.snapshot()
         else:
             self._drain_unfinished(
-                "step_limit", f"engine step budget ({max_steps}) exhausted")
+                ErrorKind.STEP_LIMIT,
+                f"engine step budget ({max_steps}) exhausted")
         return self.records
 
     def health(self) -> dict:
@@ -364,6 +440,7 @@ class ServeEngine:
             "kv_pages": None if self.alloc is None else self.alloc.stats(),
             "traces": dict(self._fns.traces),
             "decode_plan": self.decode_plan,
+            "journal_seq": None if self.journal is None else self.journal.seq,
         }
 
     # -- kernel-plan introspection ------------------------------------------
@@ -400,25 +477,28 @@ class ServeEngine:
 
     # -- admission ----------------------------------------------------------
 
-    def _validate(self, req: Request) -> Optional[Tuple[str, str]]:
+    def _validate(self, req: Request) -> Optional[Tuple[ErrorKind, str]]:
         if (req.rid in self.records
                 or any(q.rid == req.rid for q in self.queue)
                 or any(r is not None and r.rid == req.rid for r in self.slot_req)):
-            return ("duplicate_rid", f"rid {req.rid} already known to the engine")
+            return (ErrorKind.DUPLICATE_RID,
+                    f"rid {req.rid} already known to the engine")
         prompt = np.asarray(req.prompt)
         if prompt.ndim != 1 or prompt.size == 0:
-            return ("empty_prompt", f"prompt must be a non-empty 1-D token "
-                                    f"array, got shape {prompt.shape}")
+            return (ErrorKind.EMPTY_PROMPT,
+                    f"prompt must be a non-empty 1-D token "
+                    f"array, got shape {prompt.shape}")
         if not np.issubdtype(prompt.dtype, np.integer):
-            return ("bad_token_ids", f"prompt dtype {prompt.dtype} is not integral")
+            return (ErrorKind.BAD_TOKEN_IDS,
+                    f"prompt dtype {prompt.dtype} is not integral")
         if prompt.min() < 0 or prompt.max() >= self.cfg.vocab_size:
-            return ("bad_token_ids",
+            return (ErrorKind.BAD_TOKEN_IDS,
                     f"token ids outside [0, {self.cfg.vocab_size})")
         if len(prompt) >= self.max_seq:
             # max_seq bounds the position space (block-table width in paged
             # mode, contiguous cache region otherwise) — an oversized prompt
             # can never be admitted
-            return ("prompt_too_long",
+            return (ErrorKind.PROMPT_TOO_LONG,
                     f"prompt length {len(prompt)} >= max_seq {self.max_seq}")
         if self.mode == "paged":
             # pool accounting: a prompt that needs more pages than the pool
@@ -426,14 +506,15 @@ class ServeEngine:
             # shortage is handled by FIFO backpressure in _admit instead)
             need = self.alloc.pages_for(len(prompt) + 1)
             if need > self.alloc.capacity:
-                return ("kv_capacity",
+                return (ErrorKind.KV_CAPACITY,
                         f"prompt needs {need} KV pages; pool capacity is "
                         f"{self.alloc.capacity} pages of {self.page_size}")
         if req.max_new_tokens < 1:
-            return ("bad_token_budget",
+            return (ErrorKind.BAD_TOKEN_BUDGET,
                     f"max_new_tokens must be >= 1, got {req.max_new_tokens}")
         if req.deadline_s is not None and req.deadline_s <= 0:
-            return ("bad_deadline", f"deadline_s must be > 0, got {req.deadline_s}")
+            return (ErrorKind.BAD_DEADLINE,
+                    f"deadline_s must be > 0, got {req.deadline_s}")
         return None
 
     def _admit(self) -> bool:
@@ -446,7 +527,10 @@ class ServeEngine:
                    and self.queue):
                 if self.mode == "paged":
                     head = self.queue[0]
-                    need = self.alloc.pages_for(len(head.prompt) + 1)
+                    # a recovery-resumed request re-prefills over prompt +
+                    # already-committed tokens, so charge the extended length
+                    need = self.alloc.pages_for(
+                        len(head.prompt) + len(head.out_tokens) + 1)
                     if need > self.alloc.free_pages:
                         # page-accounting backpressure: hold the queue in
                         # FIFO order until co-tenants free enough pages
@@ -462,6 +546,9 @@ class ServeEngine:
         req.advance(RequestState.PREFILLING, self.clock())
         self.counters["admitted"] += 1
         self.slot_req[i] = req
+        # audit only: slot placement never affects outputs, so replay
+        # ignores admit records — but post-mortems want the mapping
+        self._journal("admit", rid=req.rid, slot=i)
         if self.mode == "paged":
             self._prefill_off[i] = 0
             self.lengths[i] = 0
@@ -492,6 +579,14 @@ class ServeEngine:
         clean state."""
         req = self.slot_req[i]
         prompt = np.asarray(req.prompt, np.int32)
+        if req.out_tokens:
+            # recovery resume: requests restored mid-stream re-prefill over
+            # prompt + every journaled token, so the KV pool covers positions
+            # [0, n+k) and the final chunk samples token index k = len(out)
+            # — exactly the key the uninterrupted run would have used.  In
+            # normal operation out_tokens is always empty while PREFILLING.
+            prompt = np.concatenate(
+                [prompt, np.asarray(req.out_tokens, np.int32)])
         n_prompt = int(prompt.size)
         got = self.alloc.ensure(req.rid, n_prompt)
         if got is None:
@@ -514,6 +609,10 @@ class ServeEngine:
             if fault is not None:
                 if fault.kind == "slow_step":
                     self.injector.sleep(fault.seconds)
+                elif fault.kind == "process_crash":
+                    raise SimulatedCrash(
+                        f"simulated crash at prefill of rid {req.rid} "
+                        f"(chunk offset {off})")
                 elif fault.kind == "exception":
                     raise InjectedFault(
                         f"injected prefill exception for rid {req.rid}")
@@ -537,6 +636,9 @@ class ServeEngine:
                 if sfault is not None:
                     if sfault.kind == "slow_step":
                         self.injector.sleep(sfault.seconds)
+                    elif sfault.kind == "process_crash":
+                        raise SimulatedCrash(
+                            f"simulated crash at sampling of rid {req.rid}")
                     elif sfault.kind == "exception":
                         raise InjectedFault(
                             f"injected sampling exception for rid {req.rid}")
@@ -561,7 +663,12 @@ class ServeEngine:
     def _slot_prefill(self, i: int, req: Request) -> bool:
         """One guarded whole-prompt B=1 prefill attempt (stacked / slots
         modes)."""
-        toks = jnp.asarray(np.asarray(req.prompt)[None, :], jnp.int32)
+        stream = np.asarray(req.prompt, np.int32)
+        if req.out_tokens:
+            # recovery resume — see _prefill_advance for the arithmetic
+            stream = np.concatenate(
+                [stream, np.asarray(req.out_tokens, np.int32)])
+        toks = jnp.asarray(stream[None, :], jnp.int32)
         fault = (self.injector.poll(req.rid, "prefill")
                  if self.injector is not None else None)
         try:
@@ -570,6 +677,9 @@ class ServeEngine:
             if fault is not None:
                 if fault.kind == "slow_step":
                     self.injector.sleep(fault.seconds)
+                elif fault.kind == "process_crash":
+                    raise SimulatedCrash(
+                        f"simulated crash at prefill of rid {req.rid}")
                 elif fault.kind == "exception":
                     raise InjectedFault(
                         f"injected prefill exception for rid {req.rid}")
@@ -583,6 +693,9 @@ class ServeEngine:
             if sfault is not None:
                 if sfault.kind == "slow_step":
                     self.injector.sleep(sfault.seconds)
+                elif sfault.kind == "process_crash":
+                    raise SimulatedCrash(
+                        f"simulated crash at sampling of rid {req.rid}")
                 elif sfault.kind == "exception":
                     raise InjectedFault(
                         f"injected sampling exception for rid {req.rid}")
@@ -601,7 +714,7 @@ class ServeEngine:
         return True
 
     def _finish_prefill(self, i: int, req: Request, tok: int):
-        req.out_tokens.append(tok)
+        self._commit_token(req, tok)
         req.first_token_at = self.clock()
         # the prefill-sampled token obeys the SAME termination predicate as
         # decode tokens: max_new_tokens=1 means one token, and an EOS
@@ -631,6 +744,10 @@ class ServeEngine:
                     faults[i] = f
                     if f.kind == "slow_step":
                         self.injector.sleep(f.seconds)
+                    elif f.kind == "process_crash":
+                        raise SimulatedCrash(
+                            f"simulated crash at decode of rid "
+                            f"{self.slot_req[i].rid}")
         if self.mode == "paged":
             # decode-boundary crossings allocate before the forward; a dry
             # free list fails ONLY that slot's attempt (deferred retry —
@@ -712,6 +829,11 @@ class ServeEngine:
                 if sfault is not None:
                     if sfault.kind == "slow_step":
                         self.injector.sleep(sfault.seconds)
+                    elif sfault.kind == "process_crash":
+                        # BaseException: escapes this per-request guard AND
+                        # the step — nothing below commits
+                        raise SimulatedCrash(
+                            f"simulated crash at sampling of rid {req.rid}")
                     elif sfault.kind == "exception":
                         raise InjectedFault(
                             f"injected sampling exception for rid {req.rid}")
@@ -753,7 +875,7 @@ class ServeEngine:
                 continue
             self._attempt_streak.pop(req.rid, None)
             self.slot_fail_streak[i] = 0
-            req.out_tokens.append(val)
+            self._commit_token(req, val)
             if self.mode == "paged":
                 self.lengths[i] += 1
             if self._should_finish(req, val):
@@ -777,6 +899,9 @@ class ServeEngine:
                 if fault is not None:
                     if fault.kind == "slow_step":
                         self.injector.sleep(fault.seconds)
+                    elif fault.kind == "process_crash":
+                        raise SimulatedCrash(
+                            f"simulated crash at decode of rid {req.rid}")
                     elif fault.kind == "exception":
                         raise InjectedFault(
                             f"injected decode exception for rid {req.rid}")
@@ -790,6 +915,9 @@ class ServeEngine:
                 if sfault is not None:
                     if sfault.kind == "slow_step":
                         self.injector.sleep(sfault.seconds)
+                    elif sfault.kind == "process_crash":
+                        raise SimulatedCrash(
+                            f"simulated crash at sampling of rid {req.rid}")
                     elif sfault.kind == "exception":
                         raise InjectedFault(
                             f"injected sampling exception for rid {req.rid}")
@@ -801,7 +929,7 @@ class ServeEngine:
             self.slot_caches[i] = new_cache
             self._attempt_streak.pop(req.rid, None)
             self.slot_fail_streak[i] = 0
-            req.out_tokens.append(tok)
+            self._commit_token(req, tok)
             progressed = True
             if self._should_finish(req, tok):
                 self._release_slot(i)
@@ -852,6 +980,298 @@ class ServeEngine:
             or total >= self.max_seq - 1
         )
 
+    # -- crash safety: journal hooks, snapshot, restore ----------------------
+
+    def _journal(self, kind: str, **fields):
+        if self.journal is not None:
+            self.journal.append(kind, **fields)
+
+    def _commit_token(self, req: Request, tok: int):
+        """Durably journal the token at its stream index, THEN append it to
+        the request — the WAL ordering that makes delivery exactly-once:
+        a crash between the two replays the journaled token; a crash before
+        the journal write never shows the token anywhere."""
+        tok = int(tok)
+        if self.journal is not None and req.rid in self._journaled_submits:
+            self.journal.append("token", rid=req.rid,
+                                idx=len(req.out_tokens), token=tok)
+        req.out_tokens.append(tok)
+
+    def _state_tree(self):
+        """The mode-specific array state a snapshot persists (and the
+        ``like`` tree a restore loads against)."""
+        if self.mode == "paged":
+            return {"pool": self.pool,
+                    "block_tables": np.array(self.block_tables),
+                    "lengths": np.array(self.lengths)}
+        if self.mode == "stacked":
+            return {"cache": self.stacked_cache}
+        return {"slot_caches": self.slot_caches}
+
+    def snapshot(self) -> Optional[str]:
+        """Persist the full decode state through the atomic checkpoint path
+        (``.tmp``-rename, keep-``snapshot_keep`` rotation): the KV pool /
+        caches, the page allocator + block tables, slot lifecycle states,
+        chunked-prefill offsets, queue order and counters.  Must run at an
+        engine-step boundary — ``run()`` calls it every ``snapshot_every``
+        steps, when no forward is in flight and lengths / pool / allocator
+        are mutually consistent.  Returns the checkpoint path, or None when
+        no ``snapshot_dir`` is configured."""
+        if self._ckpt is None:
+            return None
+        meta = {
+            "mode": self.mode,
+            "seed": self.seed,
+            "batch_slots": self.b,
+            "max_seq": self.max_seq,
+            "page_size": self.page_size,
+            "prefill_chunk": self.prefill_chunk,
+            "counters": dict(self.counters),
+            "slot_dead": [bool(x) for x in self.slot_dead],
+            "slot_fail_streak": [int(x) for x in self.slot_fail_streak],
+            "queue": [q.rid for q in self.queue],
+            "journal_seq": None if self.journal is None else self.journal.seq,
+            "slots": [
+                None if req is None else {
+                    "rid": req.rid,
+                    "state": req.state.value,
+                    "n_out": len(req.out_tokens),
+                    "prefill_off": (self._prefill_off[i]
+                                    if self.mode == "paged" else 0),
+                }
+                for i, req in enumerate(self.slot_req)
+            ],
+        }
+        if self.mode == "paged":
+            meta["alloc"] = self.alloc.to_state()
+        tree = {
+            "state": self._state_tree(),
+            # the variable-length JSON rides as a uint8 leaf; restore reads
+            # it back via load_leaf because the like-tree protocol needs
+            # fixed shapes
+            "meta": np.frombuffer(json.dumps(meta).encode(), np.uint8),
+        }
+        step = self.counters["steps"]
+        path = self._ckpt.save(step, tree)
+        self._journal("snapshot", step=step, path=str(path))
+        return path
+
+    def _clear_slot_state(self, i: int, rid: int):
+        """Drop a restored slot whose snapshot KV cannot be reused (its
+        owner terminated after the snapshot, or the journal is ahead of the
+        snapshot for this rid)."""
+        if self.mode == "paged":
+            if self.alloc.holds(rid):
+                self.alloc.free(rid)
+            self.block_tables[i, :] = 0
+            self.lengths[i] = 0
+            self._prefill_off[i] = 0
+        elif self.mode == "slots":
+            self.slot_caches[i] = self._fresh_cache()
+
+    @classmethod
+    def restore(cls, cfg, params, journal_path, *,
+                snapshot_dir: Optional[str] = None,
+                snapshot_every: int = 0, snapshot_keep: int = 3,
+                fsync: bool = True, **engine_kwargs) -> "ServeEngine":
+        """Recover a crashed engine: replay the write-ahead journal (the
+        request truth — what exists, what was delivered, what terminated),
+        then graft on the newest restorable snapshot (the KV accelerator).
+
+        - A slot whose journaled token count equals the snapshot's resumes
+          IN PLACE from the restored pool/caches; mid-prefill slots resume
+          at their chunk offset.
+        - Anything the journal knows that the snapshot does not — tokens
+          committed after the snapshot, requests still queued, no usable
+          snapshot at all — re-enqueues for a re-prefill over ``prompt +
+          journaled tokens``.  Sampling keys depend only on (seed, rid,
+          token index), so the continuation is bitwise identical either
+          way; already-journaled tokens are never re-delivered.
+        - A missing / stale / corrupt snapshot degrades to journal-only
+          recovery with a warning; a corrupt journal interior raises
+          :class:`~repro.serve.journal.JournalCorruption` instead (replay
+          past lost records could double-deliver).
+
+        ``engine_kwargs`` passes through operational knobs (injector,
+        clock, retry budgets, kernel_impl, ...); the shape config
+        (batch_slots, max_seq, seed, paging) always comes from the
+        journal's ``open`` record — recovery with mismatched shapes cannot
+        be bitwise and is refused at the source."""
+        if "journal" in engine_kwargs:
+            raise JournalError("restore() owns the journal; do not pass one")
+        replay = read_journal(journal_path)
+        col = collate(replay.records)
+        if not col.opens:
+            raise JournalError(
+                f"journal {journal_path} has no open record — not a serve "
+                f"journal (or its head was lost)")
+        opened = col.opens[0]
+        eng = cls(cfg, params,
+                  batch_slots=int(opened["batch_slots"]),
+                  max_seq=int(opened["max_seq"]),
+                  eos_id=opened["eos_id"],
+                  seed=int(opened["seed"]),
+                  page_size=int(opened["page_size"]),
+                  kv_pages=opened["kv_pages"],
+                  prefill_chunk=opened["prefill_chunk"],
+                  snapshot_dir=snapshot_dir,
+                  snapshot_every=snapshot_every,
+                  snapshot_keep=snapshot_keep,
+                  **engine_kwargs)
+        if opened["mode"] != eng.mode:
+            raise JournalError(
+                f"journal was written by a {opened['mode']!r}-mode engine "
+                f"but cfg {cfg.name!r} resolves to {eng.mode!r}")
+        now = eng.clock()
+
+        def make_req(rid: int) -> Request:
+            sub = col.submits[rid]
+            req = Request(rid=rid,
+                          prompt=np.asarray(sub["prompt"], np.int32),
+                          max_new_tokens=int(sub["max_new_tokens"]),
+                          temperature=float(sub["temperature"]),
+                          deadline_s=sub.get("deadline_s"))
+            req.out_tokens = list(col.tokens.get(rid, []))
+            # deadlines re-anchor at restore: the crash was the engine's
+            # fault, so a recovered request gets its full budget back
+            req.submitted_at = now
+            return req
+
+        # terminal records journaled before the crash re-materialize as
+        # records (their phase timings died with the process)
+        for rid, term in col.terminals.items():
+            toks = col.tokens.get(rid, [])
+            eng.records[rid] = RequestRecord(
+                rid=rid, status=RequestState(term["status"]),
+                out_tokens=list(toks),
+                prompt_tokens=len(col.submits[rid]["prompt"]),
+                new_tokens=len(toks), retries=int(term.get("retries", 0)),
+                error_kind=term.get("error_kind"), error=term.get("error"),
+                timings={})
+        eng._journaled_submits = set(col.submits)
+        eng._journaled_terminals = set(col.terminals)
+        # re-attach the journal (truncating any torn tail) BEFORE any
+        # restore-time finalization, so e.g. an already-satisfied request
+        # journals its terminal record like any other
+        eng.journal = JournalWriter.reopen(journal_path, replay, fsync=fsync)
+
+        def settle(req: Request) -> bool:
+            """A journaled stream that already satisfies the termination
+            predicate (the crash fell between the last token commit and
+            its terminal record) finalizes now — never re-decodes."""
+            if req.out_tokens and eng._should_finish(req,
+                                                     req.out_tokens[-1]):
+                req.advance(RequestState.PREFILLING, now)
+                req.first_token_at = now
+                eng._finalize(req, RequestState.FINISHED)
+                return True
+            return False
+
+        # -- snapshot graft: best effort; any damage degrades to journal-
+        # only recovery (slower — full re-prefills — never incorrect)
+        snap_step, state, meta = None, None, None
+        if snapshot_dir is not None:
+            try:
+                step, tree = eng._ckpt.restore_latest(
+                    {"state": eng._state_tree()})
+                if step is not None:
+                    raw = load_leaf(eng._ckpt.dir / f"step_{step:08d}",
+                                    "meta")
+                    meta = json.loads(np.asarray(raw, np.uint8)
+                                      .tobytes().decode())
+                    state = tree["state"]
+                    snap_step = step
+            except (CheckpointError, ValueError) as e:
+                warnings.warn(f"snapshot restore failed ({e}); recovering "
+                              f"from the journal alone")
+                snap_step, state, meta = None, None, None
+        if meta is not None and (meta.get("mode") != eng.mode
+                                 or meta.get("seed") != eng.seed
+                                 or meta.get("batch_slots") != eng.b):
+            warnings.warn("snapshot belongs to a different engine config; "
+                          "recovering from the journal alone")
+            snap_step, state, meta = None, None, None
+        if meta is not None and eng.mode == "paged":
+            try:
+                restored_alloc = PageAllocator.from_state(meta["alloc"])
+            except (KeyError, ValueError, TypeError) as e:
+                warnings.warn(f"snapshot allocator state is corrupt ({e}); "
+                              f"recovering from the journal alone")
+                snap_step, state, meta = None, None, None
+
+        placed = set()
+        if meta is not None:
+            eng.counters = dict(meta["counters"])
+            eng.slot_dead = [bool(x) for x in meta["slot_dead"]]
+            eng.slot_fail_streak = [int(x) for x in meta["slot_fail_streak"]]
+            if eng.mode == "paged":
+                eng.alloc = restored_alloc
+                eng.pool = state["pool"]
+                eng.block_tables = np.asarray(state["block_tables"],
+                                              np.int32).copy()
+                eng.lengths = np.asarray(state["lengths"], np.int32).copy()
+            elif eng.mode == "stacked":
+                eng.stacked_cache = state["cache"]
+            else:
+                eng.slot_caches = list(state["slot_caches"])
+            for i, s in enumerate(meta["slots"]):
+                if s is None:
+                    continue
+                rid = int(s["rid"])
+                k = len(col.tokens.get(rid, []))
+                if rid in col.terminals:
+                    # terminated after the snapshot — only its pages matter
+                    eng._clear_slot_state(i, rid)
+                elif (s["state"] == RequestState.DECODING.value
+                        and s["n_out"] == k and k > 0):
+                    req = make_req(rid)
+                    if settle(req):
+                        eng._clear_slot_state(i, rid)
+                        placed.add(rid)
+                        continue
+                    # journal and snapshot agree: continue decoding in place
+                    req.advance(RequestState.PREFILLING, now)
+                    req.first_token_at = now
+                    req.advance(RequestState.DECODING, now)
+                    eng.slot_req[i] = req
+                    if eng.mode == "paged":
+                        eng._prefill_off[i] = int(s.get("prefill_off", 0))
+                    placed.add(rid)
+                elif (s["state"] == RequestState.PREFILLING.value
+                        and s["n_out"] == 0 and k == 0):
+                    # mid-prefill at the snapshot: the pool already holds
+                    # chunks [0, prefill_off); resume the next chunk
+                    req = make_req(rid)
+                    req.advance(RequestState.PREFILLING, now)
+                    eng.slot_req[i] = req
+                    if eng.mode == "paged":
+                        eng._prefill_off[i] = int(s.get("prefill_off", 0))
+                    placed.add(rid)
+                else:
+                    # journal is AHEAD of the snapshot for this rid (tokens
+                    # committed after it): the snapshot KV is stale — drop
+                    # it and re-prefill prompt + journaled tokens
+                    eng._clear_slot_state(i, rid)
+
+        # everything pending and not resumed in place re-enqueues in the
+        # original submission order (includes the journal-only path);
+        # already-satisfied streams finalize instead
+        requeued = []
+        for rid in col.pending():
+            if rid in placed:
+                continue
+            req = make_req(rid)
+            if settle(req):
+                placed.add(rid)
+            else:
+                eng.queue.append(req)
+                requeued.append(rid)
+
+        eng._journal(
+            "recover", snapshot_step=snap_step, torn_tail=replay.torn_tail,
+            resumed=sorted(placed), requeued=requeued)
+        return eng
+
     # -- failure handling / lifecycle ---------------------------------------
 
     def _slot_failure(self, i: int, req: Request, e: BaseException):
@@ -901,6 +1321,17 @@ class ServeEngine:
         self._attempt_streak.pop(req.rid, None)
         req.error_kind = error_kind
         req.error = error
+        # WAL: the terminal record is durable before it becomes visible in
+        # self.records — and a rid terminates in the journal exactly once,
+        # even if it was already terminal at restore time
+        if (self.journal is not None and req.rid in self._journaled_submits
+                and req.rid not in self._journaled_terminals):
+            self._journaled_terminals.add(req.rid)
+            self.journal.append(
+                "terminal", rid=req.rid, status=status.value,
+                error_kind=(None if error_kind is None else str(error_kind)),
+                error=error, retries=req.retries,
+                n_tokens=len(req.out_tokens))
         req.advance(status, self.clock())
         self.records[req.rid] = RequestRecord.from_request(req)
         self.counters[status.value] = self.counters.get(status.value, 0) + 1
@@ -912,7 +1343,8 @@ class ServeEngine:
             at = req.deadline_at()
             if at is not None and now >= at:
                 self.queue.remove(req)
-                self._finalize(req, RequestState.TIMED_OUT, "deadline",
+                self._finalize(req, RequestState.TIMED_OUT,
+                               ErrorKind.DEADLINE,
                                f"deadline ({req.deadline_s:.3f}s) expired "
                                f"while queued")
                 progressed = True
@@ -922,7 +1354,8 @@ class ServeEngine:
             at = req.deadline_at()
             if at is not None and now >= at:
                 self._release_slot(i)
-                self._finalize(req, RequestState.TIMED_OUT, "deadline",
+                self._finalize(req, RequestState.TIMED_OUT,
+                               ErrorKind.DEADLINE,
                                f"deadline ({req.deadline_s:.3f}s) expired "
                                f"after {len(req.out_tokens)} tokens")
                 progressed = True

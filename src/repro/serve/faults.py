@@ -19,6 +19,14 @@ Fault kinds:
                         the forward (NaN), surfacing as non-finite logits
                         at the decode boundary — LQER-style activation
                         blow-ups in miniature
+- ``process_crash``     raise :class:`SimulatedCrash` (a ``BaseException``)
+                        at the seeded (rid, phase, hit) point — it escapes
+                        the engine's per-request ``except Exception``
+                        isolation ON PURPOSE, killing ``run()`` mid-step
+                        exactly like a process death.  Pairs with the
+                        write-ahead journal + snapshots (serve/journal.py,
+                        ``ServeEngine.restore``) to drive the crash-chaos
+                        recovery harness.
 
 The low-rank-corrected W4A4 regime this repo serves is exactly where
 activation outliers stress quantized numerics, so ``nan_logits`` /
@@ -36,18 +44,32 @@ import jax.numpy as jnp
 import numpy as np
 
 FAULT_KINDS = ("exception", "nan_logits", "inf_logits", "slow_step",
-               "cache_corruption")
+               "cache_corruption", "process_crash")
 FAULT_PHASES = ("prefill", "decode", "sampling")
 # sampling sees a token id, not logits or a cache — only control-flow
 # faults make sense there
-_SAMPLING_KINDS = ("exception", "slow_step")
+_SAMPLING_KINDS = ("exception", "slow_step", "process_crash")
 # hard kinds deterministically fail a request once they outlast the retry
-# budget; slow_step only fails via a deadline
+# budget; slow_step only fails via a deadline, and process_crash kills the
+# whole engine rather than failing one request, so neither is sampled by
+# the K-of-N chaos targeting
 HARD_KINDS = ("exception", "nan_logits", "inf_logits", "cache_corruption")
 
 
 class InjectedFault(RuntimeError):
     """Raised by the injector at an ``exception`` fault site."""
+
+
+class SimulatedCrash(BaseException):
+    """A simulated process death, raised at a ``process_crash`` fault site.
+
+    Deliberately a ``BaseException``: the engine's per-request isolation
+    catches ``Exception``, so a simulated crash — like a real SIGKILL —
+    cannot be retried, quarantined, or converted into a FAILED record.  It
+    unwinds straight out of ``ServeEngine.run()`` mid-step, leaving only
+    what the write-ahead journal and the last snapshot persisted; the
+    crash-chaos harness then proves ``ServeEngine.restore`` finishes every
+    request exactly once, bitwise identical to an uninterrupted run."""
 
 
 @dataclasses.dataclass(frozen=True)

@@ -46,6 +46,65 @@ class RequestState(enum.Enum):
         return self.value
 
 
+class ErrorKind(str, enum.Enum):
+    """The error-kind taxonomy for ``RequestRecord.error_kind``.
+
+    One documented vocabulary instead of string literals scattered through
+    ``_classify_error`` and the tests.  Members are ``str`` subclasses, so
+    ``record.error_kind == "kv_pages_exhausted"`` keeps working and the
+    values serialize verbatim into journal terminal records.
+
+    Admission kinds (``REJECTED`` at ``submit()`` time, never retried):
+    ``duplicate_rid``, ``empty_prompt``, ``bad_token_ids``,
+    ``prompt_too_long``, ``kv_capacity``, ``bad_token_budget``,
+    ``bad_deadline``, ``queue_full``, ``queue_evicted``.
+
+    Attempt-failure kinds (**retryable** within the engine's bounded retry
+    budget — see :data:`RETRYABLE_KINDS` — then terminal as ``FAILED``):
+    ``injected``, ``non_finite_logits``, ``kv_pages_exhausted``,
+    ``exception``.
+
+    Terminal-cause kinds (stamped directly on CANCELLED / TIMED_OUT /
+    crash-drained records, never retried): ``cancelled``, ``deadline``,
+    ``stall``, ``step_limit``, ``simulated_crash``.
+    """
+
+    # -- admission (REJECTED) ------------------------------------------------
+    DUPLICATE_RID = "duplicate_rid"
+    EMPTY_PROMPT = "empty_prompt"
+    BAD_TOKEN_IDS = "bad_token_ids"
+    PROMPT_TOO_LONG = "prompt_too_long"
+    KV_CAPACITY = "kv_capacity"
+    BAD_TOKEN_BUDGET = "bad_token_budget"
+    BAD_DEADLINE = "bad_deadline"
+    QUEUE_FULL = "queue_full"
+    QUEUE_EVICTED = "queue_evicted"
+    # -- attempt failures (retryable, then FAILED) ---------------------------
+    INJECTED = "injected"
+    NON_FINITE_LOGITS = "non_finite_logits"
+    KV_PAGES_EXHAUSTED = "kv_pages_exhausted"
+    EXCEPTION = "exception"
+    # -- terminal causes -----------------------------------------------------
+    CANCELLED = "cancelled"
+    DEADLINE = "deadline"
+    STALL = "stall"
+    STEP_LIMIT = "step_limit"
+    SIMULATED_CRASH = "simulated_crash"
+
+    # plain-string rendering ("deadline", not "ErrorKind.DEADLINE") in
+    # reports, f-strings and json payloads
+    __str__ = str.__str__
+    __format__ = str.__format__
+
+
+RETRYABLE_KINDS: FrozenSet[ErrorKind] = frozenset({
+    ErrorKind.INJECTED,
+    ErrorKind.NON_FINITE_LOGITS,
+    ErrorKind.KV_PAGES_EXHAUSTED,
+    ErrorKind.EXCEPTION,
+})
+
+
 TERMINAL_STATES: FrozenSet[RequestState] = frozenset({
     RequestState.FINISHED,
     RequestState.FAILED,

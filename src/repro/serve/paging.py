@@ -100,12 +100,58 @@ class PageAllocator:
 
     def free(self, rid: int) -> int:
         """Return ALL of ``rid``'s pages to the free list (the terminal-state
-        transition).  Unknown rid is a no-op; returns the page count freed."""
-        pages = self._owned.pop(rid, None)
+        transition).  Unknown rid is a no-op; returns the page count freed.
+
+        Raises ``ValueError`` if any page being returned is already on the
+        free list or out of range — pushing such a page would silently break
+        the conservation invariant (``free + held == capacity``) the fuzz
+        suite checks, and the very next double allocation would hand one
+        physical page to two requests.  This can only happen through state
+        corruption (e.g. a damaged snapshot restored into ``from_state``),
+        so it is an error, never a no-op."""
+        pages = self._owned.get(rid)
         if not pages:
+            self._owned.pop(rid, None)
             return 0
+        on_free = set(self._free)
+        bad = [p for p in pages
+               if p in on_free or not NULL_PAGE < p < self.num_pages]
+        if bad:
+            raise ValueError(
+                f"double free: rid {rid} page list {pages} contains page(s) "
+                f"{bad} already on the free list or out of range "
+                f"[1, {self.num_pages}) — allocator state is corrupt")
+        del self._owned[rid]
         self._free.extend(reversed(pages))
         return len(pages)
+
+    # -- snapshot / restore -------------------------------------------------
+
+    def to_state(self) -> dict:
+        """JSON-serializable snapshot of the full allocator state (free
+        list order included — LIFO recycling survives a restore)."""
+        return {
+            "num_pages": self.num_pages,
+            "page_size": self.page_size,
+            "free": list(self._free),
+            "owned": {str(rid): list(pages)
+                      for rid, pages in self._owned.items()},
+        }
+
+    @classmethod
+    def from_state(cls, state: dict) -> "PageAllocator":
+        """Rebuild an allocator from :meth:`to_state`, validating every
+        conservation invariant — a corrupt snapshot raises ``ValueError``
+        instead of silently double-allocating pages later."""
+        alloc = cls(int(state["num_pages"]), int(state["page_size"]))
+        alloc._free = [int(p) for p in state["free"]]
+        alloc._owned = {int(rid): [int(p) for p in pages]
+                        for rid, pages in state["owned"].items()}
+        try:
+            alloc.check()
+        except AssertionError as e:
+            raise ValueError(f"corrupt allocator snapshot: {e}") from None
+        return alloc
 
     # -- diagnostics --------------------------------------------------------
 

@@ -66,7 +66,9 @@ def test_spec_validation():
         FaultSpec("exception", "decode", 0, repeat=0)
     with pytest.raises(ValueError, match="seconds"):
         FaultSpec("slow_step", "decode", 0, seconds=-1.0)
-    assert set(HARD_KINDS) == set(FAULT_KINDS) - {"slow_step"}
+    # slow_step is soft (latency only); process_crash kills the process
+    # outright — neither is a retryable per-request "hard" failure
+    assert set(HARD_KINDS) == set(FAULT_KINDS) - {"slow_step", "process_crash"}
 
 
 def test_poll_schedule_is_positional():

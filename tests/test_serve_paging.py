@@ -244,6 +244,75 @@ def test_health_surfaces_mode_pages_and_decode_plan():
                     batch_slots=2, max_seq=32, prefill_chunk=4)
 
 
+@pytest.mark.parametrize("arch,want_mode", [
+    ("smollm-135m", "paged"),       # dense -> paged KV pool
+    ("mamba2-370m", "stacked"),     # ssm -> stacked recurrent rows
+    ("paligemma-3b", "slots"),      # vlm -> legacy per-slot caches
+    ("zamba2-7b", "slots"),         # hybrid -> legacy per-slot caches
+    ("deepseek-v2-236b", "slots"),  # moe -> legacy per-slot caches
+])
+def test_health_mode_covers_every_cache_family(arch, want_mode):
+    """Every family maps to exactly one decode-state layout, and health()
+    names it: paged pools surface page stats, the others report None."""
+    cfg = reduced(get_config(arch))
+    eng = ServeEngine(cfg, model.init_params(cfg, jax.random.PRNGKey(0)),
+                      batch_slots=2, max_seq=32)
+    h = eng.health()
+    assert h["mode"] == want_mode
+    if want_mode == "paged":
+        assert h["kv_pages"]["capacity"] > 0
+    else:
+        assert h["kv_pages"] is None
+    if want_mode == "slots":
+        assert len(eng.slot_caches) == 2
+    assert h["journal_seq"] is None  # no journal configured
+
+
+@settings(max_examples=25, deadline=None)
+@given(num_pages=st.integers(3, 32), page_size=st.integers(1, 4),
+       seed=st.integers(0, 2**31 - 1), stale_or_oob=st.booleans())
+def test_free_rejects_corrupt_page_lists(num_pages, page_size, seed,
+                                         stale_or_oob):
+    """The double-free guard: freeing a rid whose page list holds a page
+    already on the free list (or out of range) must raise — silently
+    pushing it would break conservation and hand one physical page to two
+    requests on the next allocation.  Freeing an unknown rid stays a
+    benign no-op."""
+    alloc = PageAllocator(num_pages, page_size)
+    rng = np.random.default_rng(seed)
+    rid = int(rng.integers(0, 4))
+    n_tokens = int(rng.integers(1, (num_pages - 1) * page_size + 1))
+    got = alloc.ensure(rid, n_tokens)
+    assert got, "setup: allocation must succeed for this range"
+    if stale_or_oob and alloc.free_pages:
+        # a page still on the free list sneaks into the owned list
+        alloc._owned[rid].append(alloc._free[-1])
+    else:
+        # an out-of-range page id (also covers the null page for size-1)
+        alloc._owned[rid].append(num_pages + 3)
+    with pytest.raises(ValueError, match="double free"):
+        alloc.free(rid)
+    # unknown rid stays a no-op even with the guard in place
+    assert alloc.free(rid + 100) == 0
+
+
+def test_allocator_snapshot_roundtrip_and_corruption():
+    """to_state/from_state preserve the exact free-list order (LIFO
+    recycling survives restore); a tampered snapshot is rejected instead
+    of silently double-allocating later."""
+    alloc = PageAllocator(16, 2)
+    alloc.ensure(1, 5)
+    alloc.ensure(2, 3)
+    alloc.free(1)
+    state = alloc.to_state()
+    clone = PageAllocator.from_state(state)
+    assert clone._free == alloc._free and clone._owned == alloc._owned
+    bad = alloc.to_state()
+    bad["owned"]["2"].append(bad["free"][0])  # page in two places
+    with pytest.raises(ValueError, match="corrupt allocator snapshot"):
+        PageAllocator.from_state(bad)
+
+
 def test_decode_plan_resolved_at_real_batched_m():
     """The decode-regime bugfix: QLinear decode GEMMs run at M=batch_slots
     (one batched step), so health() must report the plan at that M, not the

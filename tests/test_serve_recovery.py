@@ -1,0 +1,406 @@
+"""Crash-safe serving: write-ahead journal integrity, engine snapshot /
+restore, and the recovery contract — after a mid-flight crash, every
+request terminates exactly once with a token stream bitwise identical to
+an uninterrupted run (sampling keys depend only on (seed, rid, token
+index), so recovery can re-derive any suffix).
+
+Covers the failure surfaces the tentpole names: torn journal tails
+(salvaged), mid-journal corruption (refused), stale snapshots (journal
+wins; re-prefill), journal-only recovery (no snapshot at all), crashes
+mid-decode and mid-prefill under both whole-prompt and chunked prefill,
+and the idempotency edges (terminal before crash; stream already
+satisfying termination at restore)."""
+
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import model
+from repro.models.config import reduced
+from repro.serve import (ErrorKind, FaultInjector, FaultSpec,
+                         JournalCorruption, JournalError, JournalWriter,
+                         Request, RequestState, ServeEngine, SimulatedCrash,
+                         collate, read_journal)
+
+
+# ---------------------------------------------------------------------------
+# journal unit tests (no engine, no jax)
+# ---------------------------------------------------------------------------
+
+
+def _write_records(path, n=5, fsync=False):
+    with JournalWriter(path, fsync=fsync) as w:
+        w.append("open", mode="paged", seed=0)
+        for i in range(n - 1):
+            w.append("submit", rid=i, prompt=[1, 2], max_new_tokens=4,
+                     temperature=0.0, deadline_s=None)
+    return path
+
+
+def test_journal_roundtrip_and_seq(tmp_path):
+    p = _write_records(tmp_path / "wal.log")
+    rep = read_journal(p)
+    assert rep.torn_tail is None
+    assert [r["seq"] for r in rep.records] == list(range(5))
+    assert rep.next_seq == 5 and rep.good_bytes == p.stat().st_size
+    # reopen resumes the numbering and appends verifiably
+    w = JournalWriter.reopen(p, rep, fsync=False)
+    assert w.append("terminal", rid=0, status="finished", error_kind=None,
+                    error=None, retries=0, n_tokens=0) == 5
+    w.close()
+    assert len(read_journal(p).records) == 6
+
+
+def test_journal_refuses_clobber_but_overwrites_on_request(tmp_path):
+    p = _write_records(tmp_path / "wal.log")
+    with pytest.raises(JournalError, match="already exists"):
+        JournalWriter(p, fsync=False)
+    w = JournalWriter(p, fsync=False, overwrite=True)
+    w.close()
+    assert read_journal(p).records == []
+
+
+def test_torn_tail_is_salvaged_and_truncated(tmp_path):
+    """The classic crash shape: the final record is cut mid-write.  Replay
+    keeps every intact record, reports the tear, and reopen() truncates
+    back to the salvage point so appending continues cleanly."""
+    p = _write_records(tmp_path / "wal.log")
+    whole = p.read_bytes()
+    last = whole.splitlines(keepends=True)[-1]
+    for cut in (1, 10, len(last) - 1):  # tear anywhere inside the tail
+        p.write_bytes(whole[:-cut])
+        rep = read_journal(p)
+        assert rep.torn_tail is not None
+        assert len(rep.records) == 4
+        w = JournalWriter.reopen(p, fsync=False)
+        assert w.seq == 4
+        w.close()
+        assert p.stat().st_size == rep.good_bytes
+        p.write_bytes(whole)  # restore for the next cut
+    # a corrupt-but-terminated final record is the same salvageable tear
+    lines = whole.splitlines(keepends=True)
+    p.write_bytes(b"".join(lines[:-1]) + b"deadbeef garbage\n")
+    rep = read_journal(p)
+    assert rep.torn_tail is not None and len(rep.records) == 4
+
+
+def test_mid_journal_corruption_refuses_replay(tmp_path):
+    """Damage BEFORE the final record is not a torn tail — replaying past
+    lost records could double-deliver, so recovery refuses, naming the
+    salvage point."""
+    p = _write_records(tmp_path / "wal.log")
+    lines = p.read_bytes().splitlines(keepends=True)
+    # flip a payload byte in record 2 (CRC now mismatches)
+    bad = lines[2][:20] + b"X" + lines[2][21:]
+    p.write_bytes(b"".join(lines[:2] + [bad] + lines[3:]))
+    with pytest.raises(JournalCorruption, match="salvage point"):
+        read_journal(p)
+    # a vanished whole record is a seq gap, also mid-file damage
+    p.write_bytes(b"".join(lines[:2] + lines[3:]))
+    with pytest.raises(JournalCorruption, match="sequence gap"):
+        read_journal(p)
+
+
+def test_collate_enforces_delivery_invariants(tmp_path):
+    def recs(*events):
+        return [dict(seq=i, **e) for i, e in enumerate(events)]
+
+    sub = {"kind": "submit", "rid": 1, "prompt": [1], "max_new_tokens": 4,
+           "temperature": 0.0, "deadline_s": None}
+    tok = lambda idx: {"kind": "token", "rid": 1, "idx": idx, "token": 9}
+    term = {"kind": "terminal", "rid": 1, "status": "finished",
+            "error_kind": None, "error": None, "retries": 0, "n_tokens": 1}
+    col = collate(recs(sub, tok(0), tok(1), term))
+    assert col.tokens[1] == [9, 9] and col.pending() == []
+    with pytest.raises(JournalCorruption, match="contiguity"):
+        collate(recs(sub, tok(0), tok(2)))
+    with pytest.raises(JournalCorruption, match="exactly once"):
+        collate(recs(sub, term, dict(term)))
+    with pytest.raises(JournalCorruption, match="after its terminal"):
+        collate(recs(sub, term, tok(0)))
+    with pytest.raises(JournalCorruption, match="unknown rid"):
+        collate(recs(tok(0)))
+    with pytest.raises(JournalCorruption, match="duplicate submit"):
+        collate(recs(sub, dict(sub)))
+
+
+# ---------------------------------------------------------------------------
+# engine crash / restore
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def dense():
+    cfg = reduced(get_config("smollm-135m"))
+    return cfg, model.init_params(cfg, jax.random.PRNGKey(0))
+
+
+def _requests(cfg, n=4, base_len=5, new=6):
+    rng = np.random.default_rng(11)
+    return [Request(rid=i,
+                    prompt=rng.integers(1, cfg.vocab_size,
+                                        base_len + i).astype(np.int32),
+                    max_new_tokens=new)
+            for i in range(n)]
+
+
+def _engine(cfg, params, tmp_path, *, injector=None, journal=True,
+            snapshots=True, snapshot_every=2, **kw):
+    return ServeEngine(
+        cfg, params, batch_slots=2, max_seq=64, seed=3, injector=injector,
+        journal=(JournalWriter(tmp_path / "wal.log", fsync=False,
+                               overwrite=True) if journal else None),
+        snapshot_dir=(str(tmp_path / "snaps") if snapshots else None),
+        snapshot_every=(snapshot_every if snapshots else 0), **kw)
+
+
+def _tick(eng, n=1):
+    """Advance the engine loop body n steps WITHOUT run()'s drain-on-
+    step-budget semantics — partial progress for snapshot tests."""
+    for _ in range(n):
+        eng.counters["steps"] += 1
+        eng._expire_deadlines()
+        eng._admit()
+        eng._prefill_tick()
+        eng._step()
+
+
+def _clean_streams(cfg, params, **kw):
+    eng = ServeEngine(cfg, params, batch_slots=2, max_seq=64, seed=3, **kw)
+    for r in _requests(cfg):
+        eng.submit(r)
+    recs = eng.run()
+    assert all(r.status is RequestState.FINISHED for r in recs.values())
+    return {rid: r.out_tokens for rid, r in recs.items()}
+
+
+def _crash_restore_and_check(cfg, params, tmp_path, spec, clean,
+                             snapshots=True, **engine_kw):
+    eng = _engine(cfg, params, tmp_path,
+                  injector=FaultInjector([spec]), snapshots=snapshots,
+                  **engine_kw)
+    for r in _requests(cfg):
+        eng.submit(r)
+    with pytest.raises(SimulatedCrash):
+        eng.run()
+    eng2 = ServeEngine.restore(
+        cfg, params, tmp_path / "wal.log",
+        snapshot_dir=(str(tmp_path / "snaps") if snapshots else None),
+        fsync=False)
+    recs = eng2.run()
+    eng2.journal.close()
+    assert set(recs) == set(clean)
+    for rid, toks in clean.items():
+        assert recs[rid].status is RequestState.FINISHED
+        assert recs[rid].out_tokens == toks, f"rid {rid} diverged"
+    col = collate(read_journal(tmp_path / "wal.log").records)
+    assert sorted(col.terminals) == sorted(clean)  # exactly once each
+    for rid, toks in clean.items():
+        assert col.tokens[rid] == toks
+    assert len(col.recovers) == 1
+    return eng2
+
+
+def test_crash_mid_decode_recovers_bitwise(dense, tmp_path):
+    cfg, params = dense
+    clean = _clean_streams(cfg, params)
+    _crash_restore_and_check(
+        cfg, params, tmp_path,
+        FaultSpec(kind="process_crash", phase="decode", rid=2, at_call=2),
+        clean)
+
+
+def test_crash_mid_prefill_chunked_recovers_bitwise(dense, tmp_path):
+    """Crash inside a chunked prefill: the snapshot may hold a partial
+    prompt (prefill_off > 0); recovery resumes the remaining chunks."""
+    cfg, params = dense
+    clean = _clean_streams(cfg, params)  # chunking never changes outputs
+    _crash_restore_and_check(
+        cfg, params, tmp_path,
+        FaultSpec(kind="process_crash", phase="prefill", rid=3, at_call=1),
+        clean, prefill_chunk=4, snapshot_every=1)
+
+
+def test_crash_recovers_without_any_snapshot(dense, tmp_path):
+    """Journal-only recovery: no snapshot directory at all — every pending
+    request re-prefills prompt + journaled tokens from scratch."""
+    cfg, params = dense
+    clean = _clean_streams(cfg, params)
+    eng2 = _crash_restore_and_check(
+        cfg, params, tmp_path,
+        FaultSpec(kind="process_crash", phase="decode", rid=1, at_call=3),
+        clean, snapshots=False)
+    assert eng2._ckpt is None
+
+
+def test_stale_snapshot_degrades_to_reprefill(dense, tmp_path):
+    """A snapshot far behind the journal: requests whose streams advanced
+    after it must NOT resume from the stale KV — they re-prefill the full
+    journaled stream, and the outputs still match bitwise."""
+    cfg, params = dense
+    clean = _clean_streams(cfg, params)
+    eng = _engine(cfg, params, tmp_path, snapshot_every=0)
+    for r in _requests(cfg):
+        eng.submit(r)
+    _tick(eng, 2)
+    eng.snapshot()  # an EARLY snapshot ...
+    _tick(eng, 2)   # ... that the journal then outruns
+    assert any(r is not None and r.out_tokens for r in eng.slot_req)
+    eng.journal.close()  # abandon mid-flight: the "crash"
+    eng2 = ServeEngine.restore(cfg, params, tmp_path / "wal.log",
+                               snapshot_dir=str(tmp_path / "snaps"),
+                               fsync=False)
+    recs = eng2.run()
+    eng2.journal.close()
+    for rid, toks in clean.items():
+        assert recs[rid].out_tokens == toks
+        assert recs[rid].status is RequestState.FINISHED
+    # the stale path really ran: in-flight rids were re-enqueued, not
+    # resumed from the outdated KV
+    col = collate(read_journal(tmp_path / "wal.log").records)
+    assert col.recovers and col.recovers[0]["requeued"]
+
+
+def test_terminal_before_crash_is_not_replayed(dense, tmp_path):
+    """Requests whose terminal record predates the crash re-materialize as
+    records without re-running — and keep their original status."""
+    cfg, params = dense
+    clean = _clean_streams(cfg, params)
+    eng = _engine(cfg, params, tmp_path,
+                  injector=FaultInjector([FaultSpec(
+                      kind="process_crash", phase="decode", rid=3,
+                      at_call=4)]))
+    reqs = _requests(cfg)
+    for r in reqs:
+        eng.submit(r)
+    eng.cancel(1)  # terminal (CANCELLED) journaled long before the crash
+    with pytest.raises(SimulatedCrash):
+        eng.run()
+    assert 1 in eng.records
+    eng2 = ServeEngine.restore(cfg, params, tmp_path / "wal.log",
+                               snapshot_dir=str(tmp_path / "snaps"),
+                               fsync=False)
+    assert eng2.records[1].status is RequestState.CANCELLED
+    assert eng2.records[1].error_kind == ErrorKind.CANCELLED
+    recs = eng2.run()
+    eng2.journal.close()
+    assert recs[1].status is RequestState.CANCELLED  # never re-run
+    for rid in (0, 2, 3):
+        assert recs[rid].out_tokens == clean[rid]
+    col = collate(read_journal(tmp_path / "wal.log").records)
+    assert len(col.terminals) == 4  # one each, across crash + recovery
+
+
+def test_already_satisfied_stream_finalizes_without_decoding(dense, tmp_path):
+    """If the crash fell between the last token commit and the terminal
+    record, the journaled stream already satisfies the termination
+    predicate — restore finalizes it immediately instead of decoding an
+    extra token."""
+    cfg, params = dense
+    clean = _clean_streams(cfg, params)
+    # build a journal by hand: rid 0's full stream, no terminal
+    jpath = tmp_path / "wal.log"
+    eng0 = _engine(cfg, params, tmp_path, snapshots=False)
+    for r in _requests(cfg):
+        eng0.submit(r)
+    eng0.run()
+    eng0.journal.close()
+    rep = read_journal(jpath)
+    keep = [r for r in rep.records
+            if not (r["kind"] == "terminal" and r["rid"] == 0)]
+    # rewrite the journal without rid 0's terminal, reseq'd
+    with JournalWriter(jpath, fsync=False, overwrite=True) as w:
+        for r in keep:
+            fields = {k: v for k, v in r.items() if k not in ("seq", "kind")}
+            w.append(r["kind"], **fields)
+    eng2 = ServeEngine.restore(cfg, params, jpath, fsync=False)
+    # finalized at restore: no queue entry, record present, nothing decoded
+    assert 0 in eng2.records
+    assert eng2.records[0].status is RequestState.FINISHED
+    assert eng2.records[0].out_tokens == clean[0]
+    assert all(q.rid != 0 for q in eng2.queue)
+    recs = eng2.run()
+    eng2.journal.close()
+    assert recs[0].out_tokens == clean[0]
+    col = collate(read_journal(jpath).records)
+    assert sorted(col.terminals) == [0, 1, 2, 3]
+
+
+def test_snapshot_restore_roundtrip_preserves_engine_state(dense, tmp_path):
+    """Snapshot -> restore with no crash in between: allocator state, slot
+    placement, counters and the paged pool all survive byte-for-byte (the
+    restored engine finishes identically)."""
+    cfg, params = dense
+    clean = _clean_streams(cfg, params)
+    eng = _engine(cfg, params, tmp_path, snapshot_every=0)
+    for r in _requests(cfg):
+        eng.submit(r)
+    _tick(eng, 3)   # partial progress ...
+    eng.snapshot()  # ... snapshotted right at the step boundary
+    eng.journal.close()
+    eng2 = ServeEngine.restore(cfg, params, tmp_path / "wal.log",
+                               snapshot_dir=str(tmp_path / "snaps"),
+                               fsync=False)
+    # in-place resume: the snapshot and journal agree, so decoding slots
+    # carry straight on from the restored pool
+    resumed = [r for r in eng2.slot_req if r is not None]
+    assert resumed, "expected at least one slot resumed in place"
+    eng2.alloc.check()
+    recs = eng2.run()
+    eng2.journal.close()
+    for rid, toks in clean.items():
+        assert recs[rid].out_tokens == toks
+
+
+def test_restore_requires_open_record_and_matching_mode(dense, tmp_path):
+    cfg, params = dense
+    jpath = tmp_path / "wal.log"
+    with JournalWriter(jpath, fsync=False) as w:
+        w.append("submit", rid=0, prompt=[1], max_new_tokens=1,
+                 temperature=0.0, deadline_s=None)
+    with pytest.raises(JournalError, match="no open record"):
+        ServeEngine.restore(cfg, params, jpath, fsync=False)
+    ssm = reduced(get_config("mamba2-370m"))
+    ssm_params = model.init_params(ssm, jax.random.PRNGKey(0))
+    eng = ServeEngine(ssm, ssm_params, batch_slots=2, max_seq=64, seed=3,
+                      journal=JournalWriter(tmp_path / "ssm.log",
+                                            fsync=False))
+    eng.journal.close()
+    with pytest.raises(JournalError, match="mode"):
+        ServeEngine.restore(cfg, params, tmp_path / "ssm.log", fsync=False)
+
+
+def test_stacked_mode_crash_recovery(tmp_path):
+    """The recovery contract is family-agnostic: a stacked (ssm) engine
+    crashes mid-decode and recovers bitwise too."""
+    cfg = reduced(get_config("mamba2-370m"))
+    params = model.init_params(cfg, jax.random.PRNGKey(0))
+    clean = _clean_streams(cfg, params)
+    _crash_restore_and_check(
+        cfg, params, tmp_path,
+        FaultSpec(kind="process_crash", phase="decode", rid=2, at_call=1),
+        clean)
+
+
+def test_error_kind_taxonomy_is_strings(dense, tmp_path):
+    """ErrorKind members serialize and compare as their literal values —
+    the property that keeps old string-comparison call sites working and
+    journal payloads readable."""
+    assert ErrorKind.DEADLINE == "deadline"
+    assert str(ErrorKind.SIMULATED_CRASH) == "simulated_crash"
+    assert f"{ErrorKind.KV_PAGES_EXHAUSTED}" == "kv_pages_exhausted"
+    assert json.loads(json.dumps(ErrorKind.STALL)) == "stall"
+    cfg, params = dense
+    eng = _engine(cfg, params, tmp_path, snapshots=False)
+    bad = Request(rid=9, prompt=np.asarray([1, 2], np.int32),
+                  max_new_tokens=0)
+    assert not eng.submit(bad)
+    assert eng.records[9].error_kind == ErrorKind.BAD_TOKEN_BUDGET
+    assert eng.records[9].error_kind == "bad_token_budget"
+    eng.journal.close()
+    # rejected submits never reach the journal: no submit, no terminal
+    col = collate(read_journal(tmp_path / "wal.log").records)
+    assert 9 not in col.submits and 9 not in col.terminals

@@ -14,9 +14,11 @@ from repro.train.trainer import StragglerWatchdog, train
 from repro.train.optimizer import adamw_init, adamw_update, cosine_lr
 from repro.train.steps import init_train_state, make_train_step
 from repro.checkpoint.ckpt import (
+    CheckpointError,
     CheckpointManager,
     latest_step,
     load_checkpoint,
+    load_leaf,
     save_checkpoint,
 )
 
@@ -64,6 +66,72 @@ def test_keep_k_rotation(tmp_path, tiny_cfg):
     import os
     kept = [d for d in os.listdir(tmp_path / "ck") if d.startswith("step_")]
     assert len(kept) == 2
+
+
+def test_debris_never_breaks_the_step_scan(tmp_path):
+    """Crash debris in a checkpoint dir — stray files, ``step_<garbage>``
+    names, orphaned ``.tmp_step_*`` — must not confuse the scan or the
+    rotation."""
+    tree = {"w": jnp.arange(4.0)}
+    ck = tmp_path / "ck"
+    mgr = CheckpointManager(ck, every=1, keep=2)
+    for s in (1, 2, 3):
+        mgr.maybe_save(s, tree)
+    # plant every debris shape a crash can leave behind
+    (ck / "step_garbage").mkdir()
+    (ck / "step_00000099").write_text("a FILE named like a step dir")
+    (ck / "notes.txt").write_text("unrelated")
+    (ck / ".tmp_step_00000044").mkdir()
+    (ck / ".tmp_step_00000044" / "00000.npy").write_text("partial leaf")
+    assert latest_step(ck) == 3
+    mgr.maybe_save(4, tree)  # rotation runs the GC
+    assert not (ck / ".tmp_step_00000044").exists()
+    assert (ck / "step_garbage").exists()  # unknown dirs are left alone
+    assert latest_step(ck) == 4
+    step, got = mgr.restore_latest({"w": jnp.zeros(4)})
+    assert step == 4
+    np.testing.assert_array_equal(np.asarray(got["w"]), np.arange(4.0))
+
+
+def test_restore_latest_falls_back_past_incomplete(tmp_path):
+    """Deleting the newest manifest (a sneaky partial-delete crash) makes
+    restore_latest warn and fall back to the newest clean step; with every
+    step damaged it raises CheckpointError."""
+    tree = {"w": jnp.arange(3.0)}
+    mgr = CheckpointManager(tmp_path / "ck", every=1, keep=3)
+    for s in (1, 2, 3):
+        mgr.maybe_save(s, {"w": jnp.arange(3.0) + s})
+    (tmp_path / "ck" / "step_00000003" / "manifest.json").unlink()
+    with pytest.warns(UserWarning, match="incomplete at step 3"):
+        step, got = mgr.restore_latest({"w": jnp.zeros(3)})
+    assert step == 2
+    np.testing.assert_array_equal(np.asarray(got["w"]), np.arange(3.0) + 2)
+    (tmp_path / "ck" / "step_00000002" / "manifest.json").unlink()
+    (tmp_path / "ck" / "step_00000001" / "manifest.json").unlink()
+    with pytest.warns(UserWarning):
+        with pytest.raises(CheckpointError, match="no restorable checkpoint"):
+            mgr.restore_latest({"w": jnp.zeros(3)})
+    # an EMPTY dir is not an error: resume-from-scratch signal
+    empty = CheckpointManager(tmp_path / "nothing", every=1)
+    assert empty.restore_latest({"w": jnp.zeros(3)}) == (None, None)
+
+
+def test_load_leaf_and_missing_leaf_errors(tmp_path):
+    """load_leaf pulls one named leaf (the serving snapshot's JSON blob
+    rides this); a leaf the like-tree expects but the manifest lacks is
+    the structured incomplete signal."""
+    p = save_checkpoint(tmp_path / "ck", 1,
+                        {"meta": np.arange(7, dtype=np.uint8),
+                         "state": {"w": jnp.ones((2, 2))}})
+    np.testing.assert_array_equal(load_leaf(p, "meta"),
+                                  np.arange(7, dtype=np.uint8))
+    with pytest.raises(CheckpointError, match="no leaf 'nope'"):
+        load_leaf(p, "nope")
+    # extra manifest entries are ignored (how restore skips the meta blob)
+    got = load_checkpoint(p, {"state": {"w": jnp.zeros((2, 2))}})
+    np.testing.assert_array_equal(np.asarray(got["state"]["w"]), np.ones((2, 2)))
+    with pytest.raises(CheckpointError, match="missing leaf"):
+        load_checkpoint(p, {"absent": jnp.zeros(1)})
 
 
 def test_straggler_watchdog_flags_slow_steps():
