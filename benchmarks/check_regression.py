@@ -17,9 +17,11 @@ With ``--serve`` the gate instead compares a freshly measured serving run
 --smoke``) against the committed ``results/BENCH_serve.json``.  Wall-clock
 columns are informational (CI runners are too noisy); the gate guards the
 DETERMINISTIC efficiency columns — ``decode_calls_per_token`` (must stay
-exactly ``1/batch``: one batched decode call per engine step) and
-``prefill_chunks_per_prompt`` — which are token-count invariant, so smoke
-rows compare against the full baseline directly.
+exactly ``1/batch``: one batched decode call per engine step),
+``prefill_chunks_per_prompt`` and ``kv_bytes_per_token`` (the quantized-KV
+footprint per cached token; growth means the paged pools or scale planes
+got fatter) — which are token-count invariant, so smoke rows compare
+against the full baseline directly.
 
 Exit status 1 on any violation — wire this after the bench-smoke step in CI.
 
@@ -38,13 +40,14 @@ from pathlib import Path
 
 from benchmarks.latency_kernels import HEADER, analytic_rows
 
-# columns the gate protects: every predicted-latency and activation-byte
-# column the CURRENT code emits (lower is better, >tolerance growth fails).
-# Derived from HEADER so a new column added by a kernel change is guarded
-# automatically — and a baseline that predates it fails with a clear
-# "regenerate" message instead of a KeyError.
+# columns the gate protects: every predicted-latency, activation-byte and
+# attention-KV-byte column the CURRENT code emits (lower is better,
+# >tolerance growth fails).  Derived from HEADER so a new column added by a
+# kernel change is guarded automatically — and a baseline that predates it
+# fails with a clear "regenerate" message instead of a KeyError.
 _GUARDED = [h for h in HEADER
-            if h.startswith("us_") or h.startswith("act_prologue_kb_")]
+            if h.startswith("us_") or h.startswith("act_prologue_kb_")
+            or h.startswith("attn_kb_")]
 
 
 def check(baseline_path: Path, tolerance: float) -> list[str]:
@@ -110,8 +113,9 @@ def check(baseline_path: Path, tolerance: float) -> list[str]:
 # consequences of the engine's batching structure (see
 # benchmarks/serve_latency.py), so ANY growth over baseline is a structural
 # regression — but the shared --tolerance still applies for symmetry.
-_SERVE_GUARDED = ["decode_calls_per_token", "prefill_chunks_per_prompt"]
-_SERVE_KEY = ["batch", "page_size", "prefill_chunk"]
+_SERVE_GUARDED = ["decode_calls_per_token", "prefill_chunks_per_prompt",
+                  "kv_bytes_per_token"]
+_SERVE_KEY = ["batch", "page_size", "prefill_chunk", "kv_dtype"]
 _SERVE_REGEN = ("regenerate them with: PYTHONPATH=src python -m "
                 "benchmarks.serve_latency (baseline) and "
                 "PYTHONPATH=src python -m benchmarks.serve_latency --smoke "
@@ -153,7 +157,7 @@ def check_serve(baseline_path: Path, current_path: Path,
     matched = 0
     for row in c_rows:
         key = tuple(row[c_idx[k]] for k in _SERVE_KEY)
-        tag = f"B={key[0]} page={key[1]} chunk={key[2]}"
+        tag = f"B={key[0]} page={key[1]} chunk={key[2]} kv={key[3]}"
         # structural invariant: ONE batched decode call per engine step,
         # independent of any baseline — 1/batch exactly
         cpt = row[c_idx["decode_calls_per_token"]]

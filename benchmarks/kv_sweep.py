@@ -1,0 +1,104 @@
+"""KV-cache quantization accuracy sweep: PPL/ACC deltas of serving the
+bench model out of f32 vs int8 vs int4-g128 paged KV pools.
+
+The weight path stays FP — this isolates the KV cache as the only
+quantized tensor, so the delta columns are attributable to
+``repro.serve.kvquant`` alone (quantize-at-append + dequant fused into the
+flash kernels), not to weight quantization.  Each sweep point runs the
+REAL serving forward (``model.paged_step`` over a paged pool with per-row
+block tables) on the full eval sequences, so quantization error compounds
+across positions exactly as it does in the engine; the f32 paged row is
+the numerical control — it must sit at the dense-forward reference PPL up
+to kernel accumulation order.
+
+Note the bench model's head_dim (32) clamps the requested int4 g=128 to
+per-head scales (``KVSpec.group_for``); at real geometries (head_dim >=
+128) the same spec yields true 128-wide groups.  The bytes/reduction
+columns are reported at BOTH geometries so the accuracy rows and the
+acceptance-ratio rows stay in one table.
+
+    PYTHONPATH=src python -m benchmarks.kv_sweep
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import (eval_batches, get_bench_model, ppl_and_acc,
+                               record)
+from repro.models import model as model_lib
+from repro.serve.kvquant import KVSpec
+
+PAGE_SIZE = 16
+# reference serving geometry for the reduction column (matches the
+# attn_kb_ columns in benchmarks/latency_kernels.py)
+REF_KV_HEADS, REF_HEAD_DIM = 8, 128
+
+SWEEP = [
+    ("f32", KVSpec()),
+    ("int8", KVSpec(dtype="int8")),
+    ("int4-g128", KVSpec(dtype="int4", group=128)),
+]
+
+HEADER = ["kv", "ppl", "acc", "delta_ppl", "delta_acc",
+          "kv_bytes_per_token", "ref_bytes_per_token", "ref_reduction_vs_f32"]
+
+
+def paged_ppl_and_acc(cfg, params, evals, spec: KVSpec):
+    """PPL/ACC of the serving path: one full-sequence paged_step per batch
+    (chunked prefill with chunk == seq), logits at every position scored as
+    next-token CE — the paged analogue of ``benchmarks.common.ppl_and_acc``."""
+    step = jax.jit(lambda p, t, pos, v, c, bt: model_lib.paged_step(
+        cfg, p, t, pos, v, c, bt, kv_spec=spec)[0])
+    total_ll, total_acc, total_n = 0.0, 0.0, 0
+    for batch in evals:
+        toks = jnp.asarray(batch["tokens"])
+        b, s = toks.shape
+        per_row = -(-s // PAGE_SIZE)
+        num_pages = b * per_row + 1  # page 0 is the reserved null page
+        cache = model_lib.init_paged_cache(cfg, num_pages, PAGE_SIZE,
+                                           dtype=jnp.float32, kv_spec=spec)
+        block_table = jnp.arange(1, num_pages,
+                                 dtype=jnp.int32).reshape(b, per_row)
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        valid = jnp.ones((b, s), bool)
+        logits = step(params, toks, positions, valid, cache, block_table)
+        lp = jax.nn.log_softmax(logits[:, :-1].astype(jnp.float32), axis=-1)
+        labels = toks[:, 1:]
+        ll = jnp.take_along_axis(lp, labels[..., None], axis=-1)[..., 0]
+        pred = jnp.argmax(lp, axis=-1)
+        total_ll += float(jnp.sum(ll))
+        total_acc += float(jnp.sum(pred == labels))
+        total_n += labels.size
+    return float(np.exp(-total_ll / total_n)), total_acc / total_n
+
+
+def run():
+    cfg, params = get_bench_model()
+    evals = eval_batches(cfg)
+    fp_ppl, fp_acc = ppl_and_acc(cfg, params, evals)
+    ref_f32 = KVSpec().kv_bytes_per_token(REF_KV_HEADS, REF_HEAD_DIM)
+    rows = [["fp-forward", round(fp_ppl, 4), round(fp_acc, 4), 0.0, 0.0,
+             "", "", ""]]
+    results = {}
+    for name, spec in SWEEP:
+        ppl, acc = paged_ppl_and_acc(cfg, params, evals, spec)
+        bpt = cfg.n_layers * spec.kv_bytes_per_token(cfg.n_kv_heads,
+                                                     cfg.head_dim)
+        ref = spec.kv_bytes_per_token(REF_KV_HEADS, REF_HEAD_DIM)
+        rows.append([name, round(ppl, 4), round(acc, 4),
+                     round(ppl - fp_ppl, 4), round(acc - fp_acc, 4),
+                     bpt, ref, round(ref_f32 / ref, 2)])
+        results[name] = (ppl, acc)
+    # the f32 paged row is a numerical control, not a quantization point:
+    # it must land on the dense-forward reference up to accumulation order
+    assert abs(results["f32"][0] - fp_ppl) < 0.05 * fp_ppl, \
+        (results["f32"], fp_ppl)
+    record("kv_sweep", rows, HEADER)
+    return results
+
+
+if __name__ == "__main__":
+    run()

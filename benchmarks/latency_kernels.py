@@ -37,6 +37,7 @@ import numpy as np
 
 from benchmarks.common import record
 from repro.launch.roofline import (HBM_BW, PEAK_FLOPS,
+                                   attention_kv_bytes,
                                    prologue_activation_bytes,
                                    prologue_intermediate_bytes)
 
@@ -69,9 +70,38 @@ HEADER = [
     # VMEM (bytes unchanged), making these the columns where granularity
     # costs show.  Guarded by check_regression like every us_/act_ column.
     "us_chained_g128", "act_prologue_kb_chained_g128",
+    # Attention KV bytes at context length M (the row's M doubles as the
+    # sequence length) for the serving-side quantized KV cache
+    # (repro.serve.kvquant.KVSpec), at the reference attention geometry
+    # below: f32 pages, int8 per-head, int4 with g=128 scale groups.  The
+    # int8/int4 columns include the f32 scale-plane term, so the ratios
+    # they imply (~3.8x / ~7x vs f32) are the honest HBM numbers the
+    # paged decode kernel streams.  Guarded by check_regression via the
+    # attn_kb_ prefix.
+    "attn_kb_f32", "attn_kb_int8", "attn_kb_int4_g128",
 ]
 
 GROUP_COLUMN_G = 128  # the paper's headline group size for the _g128 columns
+
+# Reference attention geometry for the attn_kb_ columns (Llama-2-70B-style
+# GQA: 8 KV heads x 128 head dim) — fixed so the columns compare across rows
+# on context length alone.
+KV_REF_HEADS = 8
+KV_REF_HEAD_DIM = 128
+KV_GROUP_G = 128
+
+
+def _attn_kb_cols(context_len):
+    """The three attn_kb_ column values for one row (KiB, rounded)."""
+    return [
+        round(attention_kv_bytes(context_len, KV_REF_HEADS, KV_REF_HEAD_DIM,
+                                 kv_dtype="f32") / 1024, 1),
+        round(attention_kv_bytes(context_len, KV_REF_HEADS, KV_REF_HEAD_DIM,
+                                 kv_dtype="int8") / 1024, 1),
+        round(attention_kv_bytes(context_len, KV_REF_HEADS, KV_REF_HEAD_DIM,
+                                 kv_dtype="int4", kv_group=KV_GROUP_G)
+              / 1024, 1),
+    ]
 
 
 def _roofline_time(m, k, n, r, path: str, bm: int = None, ctx=None,
@@ -149,6 +179,7 @@ def analytic_rows(ms=MS, sizes=SIZES, ranks=RANKS):
                     round(act["fused_stream"] / 1024, 1),
                     round(t_ch_g * 1e6, 1),
                     round(act_ch_g / 1024, 1),
+                    *_attn_kb_cols(m),
                 ])
     return rows
 
@@ -229,6 +260,7 @@ def smoke_rows(ctx=None):
                                             path="fused_stream") / 1024, 1),
             "",
             round(act_ch_g / 1024, 1),
+            *_attn_kb_cols(m),
         ])
     return rows
 

@@ -38,36 +38,43 @@ from repro.configs import get_config
 from repro.models import model as model_lib
 from repro.models.config import reduced
 from repro.serve.engine import Request, RequestState, ServeEngine
+from repro.serve.kvquant import KVSpec
 
 HEADER = [
-    "batch", "page_size", "prefill_chunk", "requests", "prompt_len",
-    "new_tokens",
+    "batch", "page_size", "prefill_chunk", "kv_dtype", "requests",
+    "prompt_len", "new_tokens",
     "prefill_ms_per_token", "decode_ms_per_token",
     "decode_calls", "decode_calls_per_token", "prefill_chunks_per_prompt",
-    "paged_traces",
+    "paged_traces", "kv_bytes_per_token",
 ]
 
 PROMPT_LEN = 24
 MAX_SEQ = 64
-# (batch, page_size, prefill_chunk) — the acceptance grid: decode ms/token
-# at B in {1, 4, 16}, plus a page-size point and a chunked-prefill point
-CASES = [(1, 16, None), (4, 16, None), (16, 16, None),
-         (4, 8, None), (4, 16, 8)]
-SMOKE_CASES = [(1, 16, None), (4, 16, None), (4, 16, 8)]
+# (batch, page_size, prefill_chunk, kv_dtype) — the acceptance grid: decode
+# ms/token at B in {1, 4, 16}, a page-size point, a chunked-prefill point,
+# and the quantized-KV points (int8 per-head, int4 per-head) whose
+# kv_bytes_per_token column the regression gate holds at the >=3x / >=5x
+# reductions the paged pools deliver
+CASES = [(1, 16, None, "f32"), (4, 16, None, "f32"), (16, 16, None, "f32"),
+         (4, 8, None, "f32"), (4, 16, 8, "f32"),
+         (4, 16, None, "int8"), (4, 16, None, "int4")]
+SMOKE_CASES = [(1, 16, None, "f32"), (4, 16, None, "f32"),
+               (4, 16, 8, "f32"), (4, 16, None, "int8")]
 
 
-def _mk_engine(cfg, params, batch, page_size, chunk):
+def _mk_engine(cfg, params, batch, page_size, chunk, kv_dtype):
     return ServeEngine(cfg, params, batch_slots=batch, max_seq=MAX_SEQ,
-                       page_size=page_size, prefill_chunk=chunk)
+                       page_size=page_size, prefill_chunk=chunk,
+                       kv_spec=KVSpec.from_flags(kv_dtype, None))
 
 
-def _drive(cfg, params, batch, page_size, chunk, new_tokens):
+def _drive(cfg, params, batch, page_size, chunk, kv_dtype, new_tokens):
     """One wave of ``batch`` identical-length requests; returns timings and
     the engine for counter inspection."""
     rng = np.random.default_rng(0)
     prompts = [np.asarray(rng.integers(0, cfg.vocab_size, (PROMPT_LEN,)),
                           np.int32) for _ in range(batch)]
-    eng = _mk_engine(cfg, params, batch, page_size, chunk)
+    eng = _mk_engine(cfg, params, batch, page_size, chunk, kv_dtype)
     for i, p in enumerate(prompts):
         eng.submit(Request(rid=i, prompt=p, max_new_tokens=new_tokens))
 
@@ -91,13 +98,13 @@ def _drive(cfg, params, batch, page_size, chunk, new_tokens):
     return eng, t_prefill, t_decode
 
 
-def bench_case(cfg, params, batch, page_size, chunk, new_tokens):
+def bench_case(cfg, params, batch, page_size, chunk, kv_dtype, new_tokens):
     fns_traces = None
     # run twice: the first run compiles (the jitted fns are shared
     # process-wide per config, so the second run is pure execution)
     for it in range(2):
         eng, t_prefill, t_decode = _drive(cfg, params, batch, page_size,
-                                          chunk, new_tokens)
+                                          chunk, kv_dtype, new_tokens)
         if it == 0:
             fns_traces = dict(eng.health()["traces"])
     # retracing on the measured run would mean the engine's shapes are not
@@ -110,14 +117,15 @@ def bench_case(cfg, params, batch, page_size, chunk, new_tokens):
     assert decode_calls == new_tokens - 1, (decode_calls, new_tokens)
     chunks = -(-PROMPT_LEN // (chunk or PROMPT_LEN))
     return [
-        batch, page_size, 0 if chunk is None else chunk, batch, PROMPT_LEN,
-        new_tokens,
+        batch, page_size, 0 if chunk is None else chunk, kv_dtype, batch,
+        PROMPT_LEN, new_tokens,
         round(t_prefill * 1e3 / prefill_tokens, 4),
         round(t_decode * 1e3 / decode_tokens, 4),
         decode_calls,
         round(decode_calls / decode_tokens, 6),
         chunks,
         eng.health()["traces"]["paged"],
+        eng.health()["kv"]["bytes_per_token"],
     ]
 
 
@@ -126,7 +134,8 @@ def bench_rows(smoke: bool = False):
     params = model_lib.init_params(cfg, jax.random.PRNGKey(0))
     cases = SMOKE_CASES if smoke else CASES
     new_tokens = 6 if smoke else 16
-    return [bench_case(cfg, params, b, p, c, new_tokens) for b, p, c in cases]
+    return [bench_case(cfg, params, b, p, c, d, new_tokens)
+            for b, p, c, d in cases]
 
 
 def main(argv=None):

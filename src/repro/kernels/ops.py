@@ -78,14 +78,17 @@ from repro.kernels.rowops import (project_rows_tiled,
                                   snap_bk_to_group)
 from repro.kernels.w4a4 import w4a4_lowrank_matmul_kernel
 from repro.kernels.flash_attn import (flash_attention_kernel,
-                                      paged_flash_attention_kernel)
+                                      flash_attention_quant_kernel,
+                                      paged_flash_attention_kernel,
+                                      paged_flash_attention_quant_kernel)
 
 __all__ = [
     "KernelContext", "Plan", "gemm_regime", "default_context",
     "set_default_context", "select_plan", "select_blocks", "resolve_plan",
     "fused_variant", "fused_vmem_budget", "prologue_vmem_budget",
     "w4a4_lrc_forward", "w4a4_lowrank_matmul", "act_quant", "fwht",
-    "fused_prologue", "flash_attention",
+    "fused_prologue", "flash_attention", "flash_attention_quant",
+    "paged_flash_attention", "paged_flash_attention_quant",
     # process-default reset (alias of set_default_context(None), used by
     # tests and legacy scripts)
     "reset_block_table",
@@ -478,4 +481,49 @@ def paged_flash_attention(q, k_pages, v_pages, block_table, lengths,
     contiguous per-request KV copy is materialized.  Returns (B, H, Dv)."""
     return paged_flash_attention_kernel(
         q, k_pages, v_pages, block_table, lengths, scale,
+        interpret=_interpret(ctx))
+
+
+def flash_attention_quant(q, k_quant, k_scales, v_quant, v_scales,
+                          scale: float, kv_spec, causal: bool = True,
+                          bq: int = 128, bkv: int = 128,
+                          ctx: KernelContext = None):
+    """``flash_attention`` over quantized K/V (dense prefill layout).
+    q: (B, Sq, H, D); k/v_quant: (B, Skv, KH, D | D//2) int8/packed uint8
+    with f32 scale planes (B, Skv, KH, D // group).  ``kv_spec`` is a
+    :class:`repro.serve.kvquant.KVSpec`; dequant happens per tile inside
+    the kernel, so f32 KV never round-trips HBM."""
+    b, sq, h, d = q.shape
+    kh = k_quant.shape[2]
+    g = h // kh
+    skv = k_quant.shape[1]
+    group = kv_spec.group_for(d)
+    packed = kv_spec.dtype == "int4"
+
+    def fold(t):
+        return jnp.repeat(t.transpose(0, 2, 1, 3), g, axis=1) \
+            .reshape(b * h, skv, t.shape[-1])
+
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, sq, d)
+    bq = min(bq, sq)
+    bkv = min(bkv, skv)
+    out = flash_attention_quant_kernel(
+        qf, fold(k_quant), fold(k_scales), fold(v_quant), fold(v_scales),
+        scale, group, packed, causal=causal, bq=bq, bkv=bkv,
+        interpret=_interpret(ctx))
+    return out.reshape(b, h, sq, d).transpose(0, 2, 1, 3)
+
+
+def paged_flash_attention_quant(q, k_pages, k_scales, v_pages, v_scales,
+                                block_table, lengths, scale: float, kv_spec,
+                                ctx: KernelContext = None):
+    """``paged_flash_attention`` over a QUANTIZED page pool.  q: (B, H, D);
+    k/v_pages: (NP, P, KH, D | D//2) int8/packed uint8; k/v_scales: the f32
+    (NP, P, KH, D // group) scale-plane sidecar indexed by the SAME block
+    table.  Pages dequantize per gather inside the kernel (the
+    ``gemm_chunk_grouped`` in-loop rescale pattern).  Returns (B, H, D)."""
+    d = q.shape[-1]
+    return paged_flash_attention_quant_kernel(
+        q, k_pages, k_scales, v_pages, v_scales, block_table, lengths,
+        scale, kv_spec.group_for(d), kv_spec.dtype == "int4",
         interpret=_interpret(ctx))

@@ -278,6 +278,21 @@ def prologue_rows(x, v, qmax: int, clip_ratio: float, rotate: bool, d: int,
     return q, s, xv
 
 
+def dequant_rows_grouped(q: jnp.ndarray, s: jnp.ndarray,
+                         group: int) -> jnp.ndarray:
+    """THE canonical group dequant body: int rows (bm, d) + the (bm,
+    d // group) scale plane → f32 rows, as ONE elementwise multiply over
+    the group reshape.  The KV-cache path is built on this — the jnp
+    paged serving gather (via ``serve.kvquant.dequantize_kv``) and the
+    dequant-fused flash-attention kernels all call it, so the dequantized
+    operands entering their attention math are bitwise identical (the
+    same single-spelling discipline as :func:`gemm_chunk_grouped`)."""
+    bm, d = q.shape
+    assert d % group == 0, (d, group)
+    x = q.astype(jnp.float32).reshape(bm, d // group, group) * s[..., None]
+    return x.reshape(bm, d)
+
+
 def unpack_int4_rows(wp: jnp.ndarray) -> jnp.ndarray:
     """(BK//2, BN) uint8 -> (BK, BN) int8 in [-8, 7]; even rows = low nibble.
     Packed rows interleave (2i, 2i+1): stack on a new axis, then fold."""

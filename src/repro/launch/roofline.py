@@ -247,6 +247,24 @@ def prologue_activation_bytes(m: int, k: int, r: int = 0, *,
     return total
 
 
+def attention_kv_bytes(context_len: int, n_kv_heads: int, head_dim: int,
+                       kv_dtype: str = "f32", kv_group: int = None) -> int:
+    """HBM bytes ONE decode token's attention reads from the KV stream of a
+    ``context_len``-token context, for one layer: K and V pages (at the
+    spec's storage width) plus, for quantized specs, their f32 scale
+    planes.  THE one spelling of the attention-byte model — derived from
+    ``KVSpec.kv_bytes_per_token`` (the same function ``health()["kv"]``
+    reports), so the roofline columns in benchmarks/latency_kernels.py and
+    the serving telemetry can never disagree.  The flash gather streams
+    each page exactly once (online softmax), so read bytes = stored bytes.
+    """
+    from repro.serve.kvquant import KVSpec
+
+    spec = KVSpec(dtype=kv_dtype,
+                  group=kv_group if kv_dtype in ("int8", "int4") else None)
+    return context_len * spec.kv_bytes_per_token(n_kv_heads, head_dim)
+
+
 def model_flops(cfg, shape) -> float:
     """MODEL_FLOPS = 6·N·D (train) / 2·N·D (inference); N = active matmul
     params (embedding lookup excluded), D = tokens processed."""

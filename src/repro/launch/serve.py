@@ -3,6 +3,7 @@
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m \
         [--quantize] [--requests 8] [--new-tokens 16] \
         [--page-size 16] [--kv-pages N] [--prefill-chunk C] \
+        [--kv-dtype int8|int4 --kv-group G] \
         [--block-table results/block_table.json] [--vmem-budget BYTES] \
         [--deadline-s 30] [--retries 2] [--queue-bound 64] \
         [--inject-faults K --fault-seed S --parity-check]
@@ -11,6 +12,11 @@ KV-cache knobs (docs/serving.md): ``--page-size`` sets the paged-KV page
 granularity, ``--kv-pages`` shrinks the shared page pool (admission then
 accounts in available pages, not max_seq), ``--prefill-chunk`` enables
 chunked prefill so long prompts interleave with ongoing decode.
+``--kv-dtype int8|int4`` stores pages quantized (plus f32 scale planes
+under the same block tables; ``--kv-group`` sets the scale granularity
+along head_dim) with dequant fused into the attention inner loop — see
+docs/serving.md "KV quantization".  Crash recovery reads the KV spec back
+from the journal's open record, so a restore never needs the flags.
 
 The kernel execution config (--block-table / --vmem-budget) is assembled
 into one immutable ``KernelContext`` handed to the engine — no
@@ -235,6 +241,17 @@ def main():
                          "prefill one chunk per engine step, interleaved "
                          "with ongoing batched decode (default: whole "
                          "prompt in one forward)")
+    ap.add_argument("--kv-dtype", default="f32",
+                    choices=("f32", "bf16", "int8", "int4"),
+                    help="KV-cache storage dtype (serve/kvquant.KVSpec): "
+                         "int8/int4 store quantized pages plus f32 scale "
+                         "planes under the same block tables, with dequant "
+                         "fused into the attention gather; f32 (default) "
+                         "is bitwise identical to the pre-KVSpec engine")
+    ap.add_argument("--kv-group", type=_positive_int, default=None,
+                    help="scale-group size along head_dim for quantized "
+                         "--kv-dtype (e.g. 128); default: one scale per "
+                         "(token, kv-head)")
     ap.add_argument("--impl", default="auto",
                     choices=("auto", "sim", "int8", "pallas", "fused"),
                     help="QLinear execution path for decode; auto = pallas "
@@ -322,6 +339,7 @@ def main():
     from repro.models.config import reduced as reduce_cfg
     from repro.serve.engine import ServeEngine
     from repro.serve.faults import FaultInjector
+    from repro.serve.kvquant import KVSpec
     from repro.serve.lifecycle import Request, RequestState
 
     ctx = build_context(args.block_table, args.vmem_budget)
@@ -363,11 +381,16 @@ def main():
     prompts = [rng.integers(0, cfg.vocab_size, 12).astype(np.int32)
                for _ in range(args.requests)]
 
+    kv_spec = KVSpec.from_flags(args.kv_dtype, args.kv_group)
+    if kv_spec.is_quantized:
+        print(f"KV cache stored as {kv_spec.describe()} "
+              f"(dequant fused into the attention gather)")
+
     def run_engine(inj, **crash_safety):
         eng = ServeEngine(
             cfg, params, batch_slots=args.slots, max_seq=args.max_seq,
             page_size=args.page_size, kv_pages=args.kv_pages,
-            prefill_chunk=args.prefill_chunk,
+            prefill_chunk=args.prefill_chunk, kv_spec=kv_spec,
             kernel_impl=args.impl, ctx=ctx,
             max_retries=args.retries, retry_backoff_s=args.retry_backoff_s,
             queue_limit=args.queue_bound, queue_policy=args.queue_policy,
@@ -401,6 +424,11 @@ def main():
     finished = [r for r in done.values() if r.ok]
     print(f"{len(done)} requests ({len(finished)} finished), {total} tokens, "
           f"{dt:.2f}s -> {total / max(dt, 1e-9):.1f} tok/s")
+    kv = eng.health()["kv"]
+    if "bytes_per_token" in kv:
+        print(f"kv cache: {kv['layout']}, "
+              f"{kv['bytes_per_token']} B/token (all layers, K+V incl. "
+              f"scale planes)")
     _print_failure_summary(done, eng.health(), injector)
 
     ok = True

@@ -197,6 +197,38 @@ def paged_cache_update(
         update.astype(pages.dtype).reshape(b * s, *update.shape[2:]))
 
 
+def paged_cache_update_quantized(
+    pages: jnp.ndarray,      # (NP, P, K, hd_packed) quantized page pool
+    scales: jnp.ndarray,     # (NP, P, K, n_groups) f32 scale-plane sidecar
+    update: jnp.ndarray,     # (B, S, K, hd) new k or v rows (float)
+    block_table: jnp.ndarray,
+    positions: jnp.ndarray,
+    valid: jnp.ndarray,
+    kv_spec,
+):
+    """Quantize-then-scatter: this step's k/v rows quantize through the
+    canonical ``serve.kvquant`` spelling and land — data bytes AND scale
+    plane — under exactly the :func:`paged_cache_update` page/slot
+    indexing.  Quantization happens per token row BEFORE placement, so the
+    stored bytes are invariant to which page a token lands in; the
+    engine's bitwise page-placement/co-tenancy invariances carry over to
+    quantized specs unchanged."""
+    from repro.serve.kvquant import quantize_kv
+
+    b, s = positions.shape
+    page_size = pages.shape[1]
+    page = jnp.take_along_axis(block_table, positions // page_size, axis=1)
+    page = jnp.where(valid, page, 0)
+    within = positions % page_size
+    q, sc = quantize_kv(update, kv_spec)
+    flat_p, flat_w = page.reshape(-1), within.reshape(-1)
+    pages = pages.at[flat_p, flat_w].set(
+        q.astype(pages.dtype).reshape(b * s, *q.shape[2:]))
+    scales = scales.at[flat_p, flat_w].set(
+        sc.astype(scales.dtype).reshape(b * s, *sc.shape[2:]))
+    return pages, scales
+
+
 def paged_gqa_attention_block(
     p: dict,
     x: jnp.ndarray,          # (B, S, D)
@@ -228,6 +260,58 @@ def paged_gqa_attention_block(
     out = attention(q, kc, vc, mask, scale=1.0 / (hd**0.5))
     out = apply_linear(p["wo"], out.reshape(b, s, h * hd))
     return out, pages_k, pages_v
+
+
+def paged_gqa_attention_block_quantized(
+    p: dict,
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    valid: jnp.ndarray,
+    cfg,
+    mask,
+    pages_k: jnp.ndarray,       # (NP, P, K, hd_packed) quantized pool
+    pages_v: jnp.ndarray,
+    scales_k: jnp.ndarray,      # (NP, P, K, n_groups) f32 sidecar
+    scales_v: jnp.ndarray,
+    block_table: jnp.ndarray,
+    kv_spec,
+):
+    """The quantized-KV sibling of :func:`paged_gqa_attention_block`: k/v
+    quantize at append time (``paged_cache_update_quantized``), the gather
+    dequantizes each row's pages through THE canonical
+    ``serve.kvquant.dequantize_kv`` spelling, and the identical
+    :func:`attention` math runs on the dequantized f32 values — so the jnp
+    serving path and the dequant-fused flash kernels attend over bitwise
+    the same operands.  The f32/bf16 path stays in the separate function
+    above, untouched: a float spec traces exactly the pre-KVSpec graph.
+
+    Returns (out, new_pages_k, new_pages_v, new_scales_k, new_scales_v)."""
+    from repro.serve.kvquant import dequantize_kv
+
+    b, s, _ = x.shape
+    h, kh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = apply_linear(p["wq"], x).reshape(b, s, h, hd)
+    k = apply_linear(p["wk"], x).reshape(b, s, kh, hd)
+    v = apply_linear(p["wv"], x).reshape(b, s, kh, hd)
+    q, k, v = attn_qkv_hints(q, k, v)
+    if cfg.rope_theta > 0:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    pages_k, scales_k = paged_cache_update_quantized(
+        pages_k, scales_k, k, block_table, positions, valid, kv_spec)
+    pages_v, scales_v = paged_cache_update_quantized(
+        pages_v, scales_v, v, block_table, positions, valid, kv_spec)
+    phd = kv_spec.packed_head_dim(hd)
+    n_g = kv_spec.n_groups(hd)
+    kc = dequantize_kv(pages_k[block_table].reshape(b, -1, kh, phd),
+                       scales_k[block_table].reshape(b, -1, kh, n_g),
+                       kv_spec, hd).astype(x.dtype)
+    vc = dequantize_kv(pages_v[block_table].reshape(b, -1, kh, phd),
+                       scales_v[block_table].reshape(b, -1, kh, n_g),
+                       kv_spec, hd).astype(x.dtype)
+    out = attention(q, kc, vc, mask, scale=1.0 / (hd**0.5))
+    out = apply_linear(p["wo"], out.reshape(b, s, h * hd))
+    return out, pages_k, pages_v, scales_k, scales_v
 
 
 def gqa_attention_block(

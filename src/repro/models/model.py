@@ -150,8 +150,20 @@ def loss_fn(cfg, params, batch):
     return loss
 
 
-def init_cache(cfg, batch: int, max_seq: int, dtype=jnp.bfloat16, enc_len: int = 0):
+def init_cache(cfg, batch: int, max_seq: int, dtype=jnp.bfloat16,
+               enc_len: int = 0, kv_spec=None):
+    """``kv_spec`` is the ONE source of truth for cache storage width when
+    given: a float spec routes its dtype to every family's contiguous
+    cache (the old split — ssm defaulting bf16 while the engine pinned
+    dense caches f32 — is gone); quantized specs apply only to the paged
+    pool (recurrent/contiguous state is not int-quantizable) and raise."""
     fam = cfg.family
+    if kv_spec is not None:
+        if kv_spec.is_quantized:
+            raise ValueError(
+                f"kv dtype {kv_spec.dtype!r} requires the paged cache "
+                f"layout; contiguous/{fam!r} caches support f32/bf16 only")
+        dtype = kv_spec.cache_dtype
     if fam in ("dense", "vlm"):
         return transformer.init_cache(cfg, batch, max_seq, dtype)
     if fam == "moe":
@@ -175,9 +187,11 @@ PAGED_FAMILIES = ("dense",)
 STACKED_FAMILIES = ("ssm",)
 
 
-def init_paged_cache(cfg, num_pages: int, page_size: int, dtype=jnp.bfloat16):
+def init_paged_cache(cfg, num_pages: int, page_size: int, dtype=jnp.bfloat16,
+                     kv_spec=None):
     if cfg.family in PAGED_FAMILIES:
-        return transformer.init_paged_cache(cfg, num_pages, page_size, dtype)
+        return transformer.init_paged_cache(cfg, num_pages, page_size, dtype,
+                                            kv_spec=kv_spec)
     raise NotImplementedError(
         f"paged KV serving supports families {PAGED_FAMILIES}, not "
         f"{cfg.family!r} (hybrid/moe caches carry a shared scalar offset; "
@@ -185,12 +199,13 @@ def init_paged_cache(cfg, num_pages: int, page_size: int, dtype=jnp.bfloat16):
 
 
 def paged_step(cfg, params, tokens, positions, valid, cache, block_table,
-               sample_row=None):
+               sample_row=None, kv_spec=None):
     """Chunked-prefill / batched-decode step against a paged KV pool; see
     ``transformer.paged_step`` for the contract."""
     if cfg.family in PAGED_FAMILIES:
         return transformer.paged_step(cfg, params, tokens, positions, valid,
-                                      cache, block_table, sample_row)
+                                      cache, block_table, sample_row,
+                                      kv_spec=kv_spec)
     raise NotImplementedError(cfg.family)
 
 

@@ -15,6 +15,7 @@ from repro.models.common import (
     gqa_attention_block,
     mlp_block,
     paged_gqa_attention_block,
+    paged_gqa_attention_block_quantized,
     prefix_lm_mask,
     rms_norm,
 )
@@ -160,17 +161,36 @@ def prefill(cfg, params, tokens, cache, prefix_len: int = 0, embeds=None):
     return unembed(cfg, params, x[:, -1:]), cache
 
 
-def init_paged_cache(cfg, num_pages: int, page_size: int, dtype=jnp.bfloat16):
+def init_paged_cache(cfg, num_pages: int, page_size: int, dtype=jnp.bfloat16,
+                     kv_spec=None):
     """A paged KV pool shared by every in-flight request: page id indexes
     axis 1, page 0 is the reserved null page (never allocated; padding and
-    inactive-slot writes are redirected there)."""
+    inactive-slot writes are redirected there).
+
+    A quantized ``kv_spec`` stores int8 (or pack_int4'd uint8) pages plus
+    f32 scale-plane leaves ``k_scale``/``v_scale`` shaped
+    ``(L, NP, P, kh, n_groups)`` — same page axis (1), so the engine's
+    page-id rollback and the page-scoped fault surface
+    (``FaultInjector.corrupt_pages``) cover the sidecar for free.  A float
+    spec routes its dtype and builds exactly the two-leaf pool below."""
     kh, hd = cfg.n_kv_heads, cfg.head_dim
+    if kv_spec is not None and kv_spec.is_quantized:
+        shape = (cfg.n_layers, num_pages, page_size, kh,
+                 kv_spec.packed_head_dim(hd))
+        sshape = (cfg.n_layers, num_pages, page_size, kh,
+                  kv_spec.n_groups(hd))
+        return dict(k=jnp.zeros(shape, kv_spec.pool_dtype),
+                    v=jnp.zeros(shape, kv_spec.pool_dtype),
+                    k_scale=jnp.zeros(sshape, jnp.float32),
+                    v_scale=jnp.zeros(sshape, jnp.float32))
+    if kv_spec is not None:
+        dtype = kv_spec.cache_dtype
     shape = (cfg.n_layers, num_pages, page_size, kh, hd)
     return dict(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))
 
 
 def paged_step(cfg, params, tokens, positions, valid, cache, block_table,
-               sample_row=None):
+               sample_row=None, kv_spec=None):
     """One forward step against the paged KV pool — the single entry point
     for BOTH chunked prefill (B=1, S=chunk) and batched decode (B=slots,
     S=1), so the serving engine compiles exactly two traces per config.
@@ -189,22 +209,48 @@ def paged_step(cfg, params, tokens, positions, valid, cache, block_table,
     kj = jnp.arange(kv_len)
     mask = (kj[None, None, :] <= positions[:, :, None]) & valid[:, :, None]
 
-    def body(xc, xs):
-        lp, pk, pv = xs
-        h = rms_norm(xc, lp["attn_norm"], cfg.norm_eps)
-        a, npk, npv = paged_gqa_attention_block(
-            lp["attn"], h, positions, valid, cfg, mask, pk, pv, block_table)
-        xc = xc + a
-        h = rms_norm(xc, lp["mlp_norm"], cfg.norm_eps)
-        xc = xc + mlp_block(lp["mlp"], h, cfg.act)
-        return xc, (npk, npv)
+    # The spec branch happens HERE, at Python trace time: a float (or
+    # absent) kv_spec traces exactly the pre-KVSpec graph — no scale
+    # leaves, no extra ops — which is what keeps f32 serving bitwise
+    # identical under the chaos + crash-recovery contract.
+    if kv_spec is not None and kv_spec.is_quantized:
 
-    x, (nk, nv) = scan_layers(cfg, body, x, (params["layers"], cache["k"], cache["v"]))
+        def qbody(xc, xs):
+            lp, pk, pv, sk, sv = xs
+            h = rms_norm(xc, lp["attn_norm"], cfg.norm_eps)
+            a, npk, npv, nsk, nsv = paged_gqa_attention_block_quantized(
+                lp["attn"], h, positions, valid, cfg, mask, pk, pv, sk, sv,
+                block_table, kv_spec)
+            xc = xc + a
+            h = rms_norm(xc, lp["mlp_norm"], cfg.norm_eps)
+            xc = xc + mlp_block(lp["mlp"], h, cfg.act)
+            return xc, (npk, npv, nsk, nsv)
+
+        x, (nk, nv, nks, nvs) = scan_layers(
+            cfg, qbody, x, (params["layers"], cache["k"], cache["v"],
+                            cache["k_scale"], cache["v_scale"]))
+        new_cache = dict(k=nk, v=nv, k_scale=nks, v_scale=nvs)
+    else:
+
+        def body(xc, xs):
+            lp, pk, pv = xs
+            h = rms_norm(xc, lp["attn_norm"], cfg.norm_eps)
+            a, npk, npv = paged_gqa_attention_block(
+                lp["attn"], h, positions, valid, cfg, mask, pk, pv,
+                block_table)
+            xc = xc + a
+            h = rms_norm(xc, lp["mlp_norm"], cfg.norm_eps)
+            xc = xc + mlp_block(lp["mlp"], h, cfg.act)
+            return xc, (npk, npv)
+
+        x, (nk, nv) = scan_layers(
+            cfg, body, x, (params["layers"], cache["k"], cache["v"]))
+        new_cache = dict(k=nk, v=nv)
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     if sample_row is not None:
         x = jax.vmap(
             lambda xb, r: jax.lax.dynamic_slice_in_dim(xb, r, 1))(x, sample_row)
-    return unembed(cfg, params, x), dict(k=nk, v=nv)
+    return unembed(cfg, params, x), new_cache
 
 
 def decode_step(cfg, params, tokens, cache):

@@ -18,6 +18,8 @@ from repro.serve.faults import (FaultInjector, FaultSpec, InjectedFault,
 from repro.serve.journal import (Collated, JournalCorruption, JournalError,
                                  JournalReplay, JournalWriter, collate,
                                  read_journal)
+from repro.serve.kvquant import (KV_DTYPES, KVSpec, dequantize_kv,
+                                 quantize_kv)
 from repro.serve.lifecycle import (ErrorKind, IllegalTransition, Request,
                                    RequestRecord, RequestState,
                                    RETRYABLE_KINDS)

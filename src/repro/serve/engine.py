@@ -100,6 +100,7 @@ from repro.checkpoint.ckpt import (CheckpointError, CheckpointManager,
                                    load_leaf)
 from repro.models import model as model_lib
 from repro.serve.faults import FaultInjector, InjectedFault, SimulatedCrash
+from repro.serve.kvquant import KVSpec
 from repro.serve.journal import (JournalError, JournalWriter, collate,
                                  read_journal)
 from repro.serve.lifecycle import (ErrorKind, Request, RequestRecord,
@@ -117,15 +118,17 @@ class PagesExhausted(RuntimeError):
 
 
 @functools.lru_cache(maxsize=16)
-def _model_fns(cfg) -> SimpleNamespace:
-    """Per-config jitted step functions, shared by every engine instance in
-    the process (cfg is a hashable static dataclass) — N engines over the
-    same config stop paying N compilations.
+def _model_fns(cfg, kv_spec: KVSpec = KVSpec()) -> SimpleNamespace:
+    """Per-(config, kv-spec) jitted step functions, shared by every engine
+    instance in the process (cfg and KVSpec are hashable static values) —
+    N engines over the same config stop paying N compilations.
 
     ``traces`` counts retracings (incremented at trace time, not per call):
-    the paged engine compiles exactly two ``paged`` traces per config —
-    one (1, chunk) prefill shape, one (B, 1) decode shape — and the test
-    suite asserts that."""
+    the paged engine compiles exactly two ``paged`` traces per (config,
+    kv spec) — one (1, chunk) prefill shape, one (B, 1) decode shape — and
+    the test suite asserts that.  The f32 spec selects the pre-KVSpec trace
+    verbatim (``transformer.paged_step`` branches at Python trace time), so
+    its serving stays bitwise identical."""
     traces = {"prefill": 0, "decode": 0, "paged": 0}
 
     @jax.jit
@@ -143,7 +146,8 @@ def _model_fns(cfg) -> SimpleNamespace:
                sample_row):
         traces["paged"] += 1
         return model_lib.paged_step(cfg, params, tokens, positions, valid,
-                                    cache, block_table, sample_row)
+                                    cache, block_table, sample_row,
+                                    kv_spec=kv_spec)
 
     return SimpleNamespace(prefill=_prefill, decode=_decode, paged=_paged,
                            traces=traces)
@@ -170,6 +174,7 @@ class ServeEngine:
     def __init__(self, cfg, params, batch_slots: int = 4, max_seq: int = 256,
                  eos_id: Optional[int] = None, seed: int = 0,
                  kernel_impl: Optional[str] = "auto", ctx=None, *,
+                 kv_spec: Optional[KVSpec] = None,
                  page_size: int = 16, kv_pages: Optional[int] = None,
                  prefill_chunk: Optional[int] = None,
                  max_retries: int = 2, retry_backoff_s: float = 0.0,
@@ -257,6 +262,22 @@ class ServeEngine:
             raise ValueError(
                 f"prefill_chunk requires a paged family "
                 f"{model_lib.PAGED_FAMILIES}, not {cfg.family!r}")
+        # KV storage spec: ONE axis of the cache layout for every mode.
+        # The default (f32) reproduces the pre-KVSpec engine bitwise; float
+        # specs route the storage dtype everywhere (paged pool, stacked and
+        # per-slot caches alike); quantized specs need the paged layout —
+        # recurrent / offset-carrying caches have no pages to quantize.
+        self.kv_spec = kv_spec if kv_spec is not None else KVSpec()
+        if self.kv_spec.is_quantized:
+            if self.mode != "paged":
+                raise ValueError(
+                    f"kv dtype {self.kv_spec.dtype!r} requires the paged KV "
+                    f"cache (families {model_lib.PAGED_FAMILIES}); "
+                    f"{cfg.family!r} serves in {self.mode!r} mode")
+            # surface bad geometry (odd head_dim for int4, group that does
+            # not divide head_dim) at construction, not at first prefill
+            self.kv_spec.packed_head_dim(cfg.head_dim)
+            self.kv_spec.group_for(cfg.head_dim)
         self.page_size = page_size
         self.prefill_chunk = prefill_chunk
         self.alloc: Optional[PageAllocator] = None
@@ -268,16 +289,19 @@ class ServeEngine:
             self.pages_per_slot = -(-max_seq // page_size)
             num_pages = (kv_pages if kv_pages is not None
                          else batch_slots * self.pages_per_slot + 1)
-            self.alloc = PageAllocator(num_pages, page_size)
+            self.alloc = PageAllocator(
+                num_pages, page_size, sidecar=self.kv_spec.is_quantized)
             self.pool = model_lib.init_paged_cache(
-                cfg, num_pages, page_size, dtype=jnp.float32)
+                cfg, num_pages, page_size, dtype=jnp.float32,
+                kv_spec=self.kv_spec)
             self.block_tables = np.zeros(
                 (batch_slots, self.pages_per_slot), np.int32)
             self.lengths = np.zeros((batch_slots,), np.int32)
             self._prefill_off = [0] * batch_slots
         elif self.mode == "stacked":
             self.stacked_cache = model_lib.init_cache(
-                cfg, batch_slots, max_seq, dtype=jnp.float32)
+                cfg, batch_slots, max_seq, dtype=jnp.float32,
+                kv_spec=self.kv_spec)
         else:
             # per-slot caches (B=1 each): these families' caches carry a
             # shared scalar offset, so slots cannot share a batched cache
@@ -300,7 +324,7 @@ class ServeEngine:
         self._steps_since_progress = 0
         self.stall_report: Optional[dict] = None
 
-        self._fns = _model_fns(cfg)
+        self._fns = _model_fns(cfg, self.kv_spec)
         self._prefill = self._fns.prefill
         self._decode = self._fns.decode
         self._paged = self._fns.paged
@@ -311,7 +335,8 @@ class ServeEngine:
                       eos_id=eos_id, seed=seed, page_size=page_size,
                       kv_pages=(None if self.alloc is None
                                 else self.alloc.num_pages),
-                      prefill_chunk=prefill_chunk)
+                      prefill_chunk=prefill_chunk,
+                      **self.kv_spec.to_meta())
 
     # -- public API ---------------------------------------------------------
 
@@ -437,11 +462,31 @@ class ServeEngine:
             "steps_since_progress": self._steps_since_progress,
             "stalled": self.stall_report is not None,
             "mode": self.mode,
+            "kv": self._kv_health(),
             "kv_pages": None if self.alloc is None else self.alloc.stats(),
             "traces": dict(self._fns.traces),
             "decode_plan": self.decode_plan,
             "journal_seq": None if self.journal is None else self.journal.seq,
         }
+
+    def _kv_health(self) -> dict:
+        """``health()["kv"]``: the effective KV storage scheme and its HBM
+        cost.  ``bytes_per_token`` (paged mode) is the all-layer K+V
+        footprint of one token — data plus scale planes — computed by the
+        canonical ``KVSpec.kv_bytes_per_token`` spelling; stacked mode has
+        no per-token cache, so it reports the per-slot recurrent-state
+        bytes its spec actually produced instead."""
+        info = {"dtype": self.kv_spec.dtype, "group": self.kv_spec.group,
+                "layout": self.kv_spec.describe()}
+        if self.mode == "paged":
+            info["bytes_per_token"] = (
+                self.cfg.n_layers * self.kv_spec.kv_bytes_per_token(
+                    self.cfg.n_kv_heads, self.cfg.head_dim))
+        elif self.mode == "stacked":
+            leaves = jax.tree.leaves(self.stacked_cache)
+            info["state_bytes_per_slot"] = int(
+                sum(l.size * l.dtype.itemsize for l in leaves)) // self.b
+        return info
 
     # -- kernel-plan introspection ------------------------------------------
 
@@ -672,8 +717,7 @@ class ServeEngine:
         fault = (self.injector.poll(req.rid, "prefill")
                  if self.injector is not None else None)
         try:
-            cache_in = model_lib.init_cache(self.cfg, 1, self.max_seq,
-                                            dtype=jnp.float32)
+            cache_in = self._fresh_cache()
             if fault is not None:
                 if fault.kind == "slow_step":
                     self.injector.sleep(fault.seconds)
@@ -1026,6 +1070,7 @@ class ServeEngine:
             "max_seq": self.max_seq,
             "page_size": self.page_size,
             "prefill_chunk": self.prefill_chunk,
+            **self.kv_spec.to_meta(),
             "counters": dict(self.counters),
             "slot_dead": [bool(x) for x in self.slot_dead],
             "slot_fail_streak": [int(x) for x in self.slot_fail_streak],
@@ -1099,6 +1144,10 @@ class ServeEngine:
         be bitwise and is refused at the source."""
         if "journal" in engine_kwargs:
             raise JournalError("restore() owns the journal; do not pass one")
+        if "kv_spec" in engine_kwargs:
+            raise JournalError(
+                "restore() reads the KV spec from the journal's open "
+                "record; do not pass kv_spec")
         replay = read_journal(journal_path)
         col = collate(replay.records)
         if not col.opens:
@@ -1114,6 +1163,7 @@ class ServeEngine:
                   page_size=int(opened["page_size"]),
                   kv_pages=opened["kv_pages"],
                   prefill_chunk=opened["prefill_chunk"],
+                  kv_spec=KVSpec.from_meta(opened),
                   snapshot_dir=snapshot_dir,
                   snapshot_every=snapshot_every,
                   snapshot_keep=snapshot_keep,
@@ -1187,7 +1237,8 @@ class ServeEngine:
                 snap_step, state, meta = None, None, None
         if meta is not None and (meta.get("mode") != eng.mode
                                  or meta.get("seed") != eng.seed
-                                 or meta.get("batch_slots") != eng.b):
+                                 or meta.get("batch_slots") != eng.b
+                                 or KVSpec.from_meta(meta) != eng.kv_spec):
             warnings.warn("snapshot belongs to a different engine config; "
                           "recovering from the journal alone")
             snap_step, state, meta = None, None, None
@@ -1313,7 +1364,7 @@ class ServeEngine:
 
     def _fresh_cache(self):
         return model_lib.init_cache(self.cfg, 1, self.max_seq,
-                                    dtype=jnp.float32)
+                                    dtype=jnp.float32, kv_spec=self.kv_spec)
 
     def _finalize(self, req: Request, status: RequestState,
                   error_kind: Optional[str] = None,

@@ -1,0 +1,224 @@
+"""KV-cache quantization: the ``KVSpec`` axis of the cache layout.
+
+The paged KV pool (docs/serving.md "Paged KV cache") stores pages at full
+f32 width by default; at long context that stream — not the W4A4 weight
+stream — is the memory wall.  A :class:`KVSpec` makes the storage width a
+first-class, static axis of the layout:
+
+* ``dtype``  ∈ {``f32``, ``bf16``, ``int8``, ``int4``} — the pool's storage
+  width.  ``int4`` packs two values per byte along ``head_dim`` (the
+  ``core.quantizers.pack_int4`` nibble layout).
+* ``group`` — scale granularity along ``head_dim``: ``None`` = one scale
+  per (token, kv-head) (per-head absmax), or an integer ``g`` (paper
+  Table 2 style, g = 128) giving ``head_dim // g`` scales per head.  ``g``
+  is clamped to ``head_dim`` at use, so ``group=128`` on a 64-wide head
+  degenerates to per-head exactly.
+
+Quantized pools carry an f32 **scale-plane sidecar** — leaves
+``k_scale`` / ``v_scale`` shaped ``(L, num_pages, page_size, n_kv_heads,
+n_groups)`` — indexed by the SAME page ids as the data pool (one block
+table, one allocator; ``PageAllocator`` asserts the sidecar accounting
+stays in lockstep).  The scale planes are deliberately float: the engine's
+page-scoped fault surface (``FaultInjector.corrupt_pages``) poisons float
+leaves on the page axis, so a cache-corruption fault still reaches a
+quantized pool through its scales.
+
+``quantize_kv`` / ``dequantize_kv`` below are THE canonical spellings —
+the jnp serving path (``models/common.py``), both flash-attention kernels
+(``kernels/flash_attn.py``), and the accuracy harness all import these,
+the same single-source discipline that keeps the three W4A4 GEMM paths
+bitwise identical (``rowops.gemm_chunk_grouped``).  The reductions and the
+scale-then-round operation order match ``kernels/rowops.py``'s group
+bodies (``group_amax`` → ``amax_to_scale`` → clip(round(x/s))), applied
+over ``head_dim`` instead of the GEMM's K axis.
+
+The ``f32`` spec is the identity: no scale leaves, no extra ops, the pool
+init/append/gather code paths are the exact pre-KVSpec code — bitwise
+identical serving, which the chaos + crash-recovery contract relies on.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.core.quantizers import pack_int4, unpack_int4
+from repro.kernels.rowops import amax_to_scale, dequant_rows_grouped
+
+KV_DTYPES = ("f32", "bf16", "int8", "int4")
+_FLOAT_DTYPES = {"f32": jnp.float32, "bf16": jnp.bfloat16}
+_BITS = {"int8": 8, "int4": 4}
+
+
+@dataclasses.dataclass(frozen=True)
+class KVSpec:
+    """Static description of the KV-cache storage scheme.
+
+    Frozen + hashable on purpose: the spec rides as a jit-static argument
+    and as part of the ``_model_fns`` cache key, exactly like
+    ``KernelContext``."""
+
+    dtype: str = "f32"
+    # Scale group along head_dim (quantized dtypes only); None = per-head.
+    group: Optional[int] = None
+
+    def __post_init__(self):
+        if self.dtype not in KV_DTYPES:
+            raise ValueError(
+                f"unknown kv dtype {self.dtype!r}; one of {KV_DTYPES}")
+        if self.group is not None:
+            if not self.is_quantized:
+                raise ValueError(
+                    f"kv group={self.group} only applies to quantized kv "
+                    f"dtypes, not {self.dtype!r}")
+            if not (isinstance(self.group, int) and self.group > 0):
+                raise ValueError(f"kv group must be a positive int, "
+                                 f"got {self.group!r}")
+
+    # -- classification ------------------------------------------------------
+
+    @property
+    def is_quantized(self) -> bool:
+        return self.dtype in _BITS
+
+    @property
+    def bits(self) -> int:
+        return _BITS[self.dtype]
+
+    @property
+    def qmax(self) -> int:
+        return 2 ** (self.bits - 1) - 1
+
+    @property
+    def cache_dtype(self):
+        """Storage dtype of a FLOAT spec's cache leaves (f32 / bf16).
+
+        Quantized specs have no single cache dtype — use
+        :meth:`pool_dtype` for the page pool and f32 for scale planes."""
+        if self.is_quantized:
+            raise ValueError(
+                f"kv dtype {self.dtype!r} has no float cache dtype; "
+                f"quantized specs only apply to the paged pool")
+        return _FLOAT_DTYPES[self.dtype]
+
+    @property
+    def pool_dtype(self):
+        """Element dtype of the paged K/V pool leaves."""
+        if self.dtype == "int8":
+            return jnp.int8
+        if self.dtype == "int4":
+            return jnp.uint8  # two nibbles per byte, pack_int4 layout
+        return _FLOAT_DTYPES[self.dtype]
+
+    # -- geometry ------------------------------------------------------------
+
+    def group_for(self, head_dim: int) -> int:
+        """Effective scale group: ``min(group, head_dim)`` (``group=None``
+        → ``head_dim``, i.e. per-head).  Must divide ``head_dim``."""
+        g = head_dim if self.group is None else min(self.group, head_dim)
+        if head_dim % g != 0:
+            raise ValueError(
+                f"kv group {self.group} does not divide head_dim "
+                f"{head_dim} (effective group {g})")
+        return g
+
+    def n_groups(self, head_dim: int) -> int:
+        """Scales per (token, kv-head); 0 for float specs (no sidecar)."""
+        if not self.is_quantized:
+            return 0
+        return head_dim // self.group_for(head_dim)
+
+    def packed_head_dim(self, head_dim: int) -> int:
+        """Last-axis width of a pool leaf (int4 packs two per byte)."""
+        if self.dtype == "int4":
+            if head_dim % 2 != 0:
+                raise ValueError(f"int4 kv needs an even head_dim, "
+                                 f"got {head_dim}")
+            return head_dim // 2
+        return head_dim
+
+    def kv_bytes_per_token(self, n_kv_heads: int, head_dim: int) -> int:
+        """HBM bytes ONE token's K+V occupy (data + scale planes).
+
+        This is the per-token term of the roofline attention-bytes model
+        (``launch/roofline.attention_kv_bytes``) and of
+        ``health()["kv"]["bytes_per_token"]`` — one spelling, like
+        ``prologue_intermediate_bytes``."""
+        if self.dtype == "f32":
+            per_head = 4 * head_dim
+        elif self.dtype == "bf16":
+            per_head = 2 * head_dim
+        else:
+            per_head = self.packed_head_dim(head_dim) \
+                + 4 * self.n_groups(head_dim)
+        return 2 * n_kv_heads * per_head  # K and V
+
+    # -- serialization (journal open record / snapshot meta / CLI) -----------
+
+    @classmethod
+    def from_flags(cls, dtype: Optional[str], group: Optional[int]) -> "KVSpec":
+        """Build from ``--kv-dtype`` / ``--kv-group`` (None → defaults)."""
+        return cls(dtype=dtype or "f32", group=group)
+
+    def to_meta(self) -> dict:
+        return {"kv_dtype": self.dtype, "kv_group": self.group}
+
+    @classmethod
+    def from_meta(cls, meta: dict) -> "KVSpec":
+        """Read a spec out of a journal open record or snapshot meta dict.
+        Pre-KVSpec records carry neither key and decode to f32 — old
+        journals stay replayable."""
+        return cls(dtype=meta.get("kv_dtype", "f32"),
+                   group=meta.get("kv_group"))
+
+    def describe(self) -> str:
+        if not self.is_quantized or self.group is None:
+            return self.dtype
+        return f"{self.dtype}-g{self.group}"
+
+
+# ---------------------------------------------------------------------------
+# the canonical quantize / dequantize spellings
+# ---------------------------------------------------------------------------
+
+
+def quantize_kv(x: jnp.ndarray, spec: KVSpec):
+    """Quantize KV rows ``x (..., head_dim)`` → ``(q, scales)``.
+
+    Per group of ``spec.group_for(head_dim)`` features: absmax →
+    ``amax_to_scale`` (zero-guarded, clip ratio 1) → ``clip(round(x/s))``
+    — the rowops group-body operation order.  ``q`` is int8 (or
+    pack_int4'd uint8, two per byte along head_dim); ``scales`` is f32
+    ``(..., n_groups)``.  Deterministic and placement-free: the engine's
+    page/co-tenancy bitwise invariances extend to quantized specs because
+    a token row always quantizes to the same bytes wherever it lands."""
+    hd = x.shape[-1]
+    g = spec.group_for(hd)
+    n_g = hd // g
+    xg = x.astype(jnp.float32).reshape(*x.shape[:-1], n_g, g)
+    s = amax_to_scale(jnp.max(jnp.abs(xg), axis=-1), spec.qmax, 1.0)
+    q = jnp.clip(jnp.round(xg / s[..., None]), -spec.qmax - 1, spec.qmax) \
+        .astype(jnp.int8).reshape(*x.shape[:-1], hd)
+    if spec.dtype == "int4":
+        q = pack_int4(q)
+    return q, s
+
+
+def dequantize_kv(q: jnp.ndarray, scales: jnp.ndarray, spec: KVSpec,
+                  head_dim: int) -> jnp.ndarray:
+    """THE canonical dequant: (unpack →) group-reshape → ONE elementwise
+    multiply by the scale plane → f32 ``(..., head_dim)``.
+
+    Every consumer — the jnp paged serving path, the dense flash kernel,
+    the paged GQA gather kernel, the accuracy harness — calls this, so the
+    dequantized operands entering their attention math are bitwise
+    identical (the ``gemm_chunk_grouped`` single-spelling discipline)."""
+    if spec.dtype == "int4":
+        q = unpack_int4(q)
+    g = spec.group_for(head_dim)
+    lead = q.shape[:-1]
+    x = dequant_rows_grouped(q.reshape(-1, head_dim),
+                             scales.reshape(-1, head_dim // g), g)
+    return x.reshape(*lead, head_dim)

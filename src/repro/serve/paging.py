@@ -26,6 +26,13 @@ Invariants (enforced by ``check()``, property-tested in
   a request holding ``n`` tokens needs; ``used_pages`` equals the sum of
   per-request page counts, which is what admission control charges against
   ``free_pages``.
+- **Scale-sidecar lockstep** (``sidecar=True``, quantized KV specs).  A
+  quantized pool carries f32 scale planes (``k_scale`` / ``v_scale``)
+  indexed by the SAME page ids as the data pages — there is no second id
+  space.  The allocator mirrors its full accounting (free list AND per-
+  request lists) for the sidecar and ``check()`` asserts the two never
+  diverge: a scale plane can never be freed, aliased or double-allocated
+  independently of its data page.
 """
 
 from __future__ import annotations
@@ -42,7 +49,7 @@ class PageAllocator:
     and out of order — the chaos suite's bitwise-parity asserts prove that
     outputs never depend on WHICH pages a request lands on."""
 
-    def __init__(self, num_pages: int, page_size: int):
+    def __init__(self, num_pages: int, page_size: int, sidecar: bool = False):
         if num_pages < 2:
             raise ValueError(f"num_pages must be >= 2 (page 0 is the "
                              f"reserved null page), got {num_pages}")
@@ -52,6 +59,14 @@ class PageAllocator:
         self.page_size = page_size
         self._free: List[int] = list(range(num_pages - 1, NULL_PAGE, -1))
         self._owned: Dict[int, List[int]] = {}
+        # quantized pools: mirrored accounting for the scale-plane sidecar
+        # (same page ids, tracked independently so check() can prove the
+        # two pools never drift)
+        self.sidecar = bool(sidecar)
+        self._side_free: Optional[List[int]] = (
+            list(self._free) if self.sidecar else None)
+        self._side_owned: Optional[Dict[int, List[int]]] = (
+            {} if self.sidecar else None)
 
     # -- accounting ---------------------------------------------------------
 
@@ -96,6 +111,9 @@ class PageAllocator:
             return None
         fresh = [self._free.pop() for _ in range(need)]
         self._owned.setdefault(rid, []).extend(fresh)
+        if self.sidecar:
+            side = [self._side_free.pop() for _ in range(need)]
+            self._side_owned.setdefault(rid, []).extend(side)
         return fresh
 
     def free(self, rid: int) -> int:
@@ -112,6 +130,8 @@ class PageAllocator:
         pages = self._owned.get(rid)
         if not pages:
             self._owned.pop(rid, None)
+            if self.sidecar:
+                self._side_owned.pop(rid, None)
             return 0
         on_free = set(self._free)
         bad = [p for p in pages
@@ -121,6 +141,20 @@ class PageAllocator:
                 f"double free: rid {rid} page list {pages} contains page(s) "
                 f"{bad} already on the free list or out of range "
                 f"[1, {self.num_pages}) — allocator state is corrupt")
+        if self.sidecar:
+            # validate the sidecar BEFORE either pool mutates — a failed
+            # free must not leave data and scale accounting half-applied
+            spages = self._side_owned.get(rid, [])
+            on_side_free = set(self._side_free)
+            sbad = [p for p in spages
+                    if p in on_side_free or not NULL_PAGE < p < self.num_pages]
+            if sbad:
+                raise ValueError(
+                    f"scale-plane double free: rid {rid} sidecar list "
+                    f"{spages} contains page(s) {sbad} already free or out "
+                    f"of range — sidecar state is corrupt")
+            self._side_owned.pop(rid, None)
+            self._side_free.extend(reversed(spages))
         del self._owned[rid]
         self._free.extend(reversed(pages))
         return len(pages)
@@ -130,23 +164,36 @@ class PageAllocator:
     def to_state(self) -> dict:
         """JSON-serializable snapshot of the full allocator state (free
         list order included — LIFO recycling survives a restore)."""
-        return {
+        state = {
             "num_pages": self.num_pages,
             "page_size": self.page_size,
             "free": list(self._free),
             "owned": {str(rid): list(pages)
                       for rid, pages in self._owned.items()},
+            "sidecar": self.sidecar,
         }
+        if self.sidecar:
+            state["side_free"] = list(self._side_free)
+            state["side_owned"] = {str(rid): list(pages)
+                                   for rid, pages in self._side_owned.items()}
+        return state
 
     @classmethod
     def from_state(cls, state: dict) -> "PageAllocator":
         """Rebuild an allocator from :meth:`to_state`, validating every
         conservation invariant — a corrupt snapshot raises ``ValueError``
-        instead of silently double-allocating pages later."""
-        alloc = cls(int(state["num_pages"]), int(state["page_size"]))
+        instead of silently double-allocating pages later.  (Pre-sidecar
+        snapshots carry no ``sidecar`` key and restore as plain
+        allocators.)"""
+        alloc = cls(int(state["num_pages"]), int(state["page_size"]),
+                    sidecar=bool(state.get("sidecar", False)))
         alloc._free = [int(p) for p in state["free"]]
         alloc._owned = {int(rid): [int(p) for p in pages]
                         for rid, pages in state["owned"].items()}
+        if alloc.sidecar:
+            alloc._side_free = [int(p) for p in state["side_free"]]
+            alloc._side_owned = {int(rid): [int(p) for p in pages]
+                                 for rid, pages in state["side_owned"].items()}
         try:
             alloc.check()
         except AssertionError as e:
@@ -169,6 +216,27 @@ class PageAllocator:
         assert len(seen) == self.capacity, \
             f"page leak: {self.capacity - len(seen)} pages unaccounted"
         assert self.free_pages + self.used_pages == self.capacity
+        if self.sidecar:
+            # the sidecar must satisfy the SAME alias/double-free structure…
+            sseen = set(self._side_free)
+            assert len(sseen) == len(self._side_free), \
+                "scale-plane free list holds duplicates"
+            assert NULL_PAGE not in sseen, "null page on scale-plane free list"
+            for rid, pages in self._side_owned.items():
+                for p in pages:
+                    assert 0 < p < self.num_pages, \
+                        f"scale plane {p} out of range"
+                    assert p not in sseen, \
+                        f"scale plane {p} owned twice (rid {rid})"
+                    sseen.add(p)
+            assert len(sseen) == self.capacity, "scale-plane leak"
+            # …and stay in LOCKSTEP with the page pool: same free-list
+            # order (LIFO recycling is part of the state) and identical
+            # per-request page lists
+            assert self._side_free == self._free, \
+                "scale-plane free list diverged from the page free list"
+            assert self._side_owned == self._owned, \
+                "scale-plane ownership diverged from page ownership"
 
     def stats(self) -> dict:
         return {
@@ -176,5 +244,6 @@ class PageAllocator:
             "capacity": self.capacity,
             "free": self.free_pages,
             "used": self.used_pages,
+            "sidecar": self.sidecar,
             "per_request": {rid: len(v) for rid, v in self._owned.items()},
         }

@@ -1,0 +1,345 @@
+"""Quantized KV cache subsystem: KVSpec geometry/serialization, the
+canonical quantize/dequantize spellings, dequant-fused flash kernels
+(dense + paged, parity on garbage pools with shuffled page placement),
+end-to-end engine behavior (f32 bitwise identity, quantized invariances,
+health reporting, family gating), and the roofline attention-bytes model
+the acceptance ratios ride on."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.kernels import ops
+from repro.launch.roofline import attention_kv_bytes
+from repro.models import model
+from repro.models.config import reduced
+from repro.serve import KVSpec, ServeEngine, Request, RequestState
+from repro.serve.kvquant import KV_DTYPES, dequantize_kv, quantize_kv
+
+# the sweep every parametrized test below covers: both quantized widths,
+# per-head and grouped scales
+QSPECS = [KVSpec(dtype="int8"), KVSpec(dtype="int4"),
+          KVSpec(dtype="int8", group=8), KVSpec(dtype="int4", group=8)]
+
+
+# ---------------------------------------------------------------------------
+# KVSpec unit tests
+# ---------------------------------------------------------------------------
+
+
+def test_kvspec_validation_and_geometry():
+    assert KVSpec().dtype == "f32" and not KVSpec().is_quantized
+    assert KVSpec(dtype="bf16").cache_dtype == jnp.bfloat16
+    with pytest.raises(ValueError, match="unknown kv dtype"):
+        KVSpec(dtype="fp8")
+    with pytest.raises(ValueError, match="only applies to quantized"):
+        KVSpec(dtype="f32", group=64)
+    with pytest.raises(ValueError, match="positive int"):
+        KVSpec(dtype="int8", group=-4)
+    with pytest.raises(ValueError, match="does not divide"):
+        KVSpec(dtype="int8", group=48).group_for(128)
+    with pytest.raises(ValueError, match="even head_dim"):
+        KVSpec(dtype="int4").packed_head_dim(33)
+    with pytest.raises(ValueError, match="no float cache dtype"):
+        _ = KVSpec(dtype="int8").cache_dtype
+    # group clamps to head_dim: g=128 on a 64-wide head IS per-head
+    s = KVSpec(dtype="int4", group=128)
+    assert s.group_for(64) == 64 and s.n_groups(64) == 1
+    assert s.group_for(256) == 128 and s.n_groups(256) == 2
+    assert s.packed_head_dim(64) == 32
+    assert KVSpec(dtype="int8").pool_dtype == jnp.int8
+    assert KVSpec(dtype="int4").pool_dtype == jnp.uint8
+    # float specs have no sidecar
+    assert KVSpec().n_groups(64) == 0 and KVSpec(dtype="bf16").n_groups(64) == 0
+
+
+def test_kvspec_meta_roundtrip_and_backcompat():
+    for spec in [KVSpec(), KVSpec(dtype="bf16"), *QSPECS]:
+        assert KVSpec.from_meta(spec.to_meta()) == spec
+    # pre-KVSpec journals / snapshots carry neither key -> f32 identity
+    assert KVSpec.from_meta({}) == KVSpec()
+    assert KVSpec.from_meta({"mode": "paged", "seed": 0}) == KVSpec()
+    assert KVSpec.from_flags(None, None) == KVSpec()
+    assert KVSpec.from_flags("int4", 128) == KVSpec(dtype="int4", group=128)
+    assert KVSpec(dtype="int4", group=16).describe() == "int4-g16"
+    assert KVSpec(dtype="int8").describe() == "int8"
+    assert set(KV_DTYPES) == {"f32", "bf16", "int8", "int4"}
+
+
+def test_kv_bytes_per_token_acceptance_ratios():
+    """The acceptance bars at the reference serving geometry (8 KV heads x
+    128 head_dim): int8 cuts attention KV bytes >=3x, int4-g128 >=6x —
+    including the f32 scale-plane overhead, not just the payload."""
+    kh, hd = 8, 128
+    f32 = KVSpec().kv_bytes_per_token(kh, hd)
+    i8 = KVSpec(dtype="int8").kv_bytes_per_token(kh, hd)
+    i4 = KVSpec(dtype="int4", group=128).kv_bytes_per_token(kh, hd)
+    assert f32 == 2 * kh * 4 * hd == 8192
+    assert i8 == 2 * kh * (hd + 4)          # int8 payload + one f32 scale
+    assert i4 == 2 * kh * (hd // 2 + 4)     # packed nibbles + one f32 scale
+    assert f32 / i8 >= 3.0
+    assert f32 / i4 >= 6.0
+    # the roofline spelling is the same function, scaled by context length
+    assert attention_kv_bytes(100, kh, hd, "f32") == 100 * f32
+    assert attention_kv_bytes(100, kh, hd, "int8") == 100 * i8
+    assert attention_kv_bytes(100, kh, hd, "int4", 128) == 100 * i4
+    # and the latency table guards all three columns via the attn_kb_ prefix
+    from benchmarks.check_regression import _GUARDED
+    from benchmarks.latency_kernels import HEADER
+    for col in ("attn_kb_f32", "attn_kb_int8", "attn_kb_int4_g128"):
+        assert col in HEADER and col in _GUARDED
+
+
+# ---------------------------------------------------------------------------
+# quantize / dequantize roundtrip
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("spec", QSPECS, ids=lambda s: s.describe())
+def test_quantize_roundtrip_error_bound(rng, spec):
+    """Absmax group quantization: |x - dq(q(x))| <= scale/2 elementwise
+    (round-to-nearest), scales are per-group positive, and int4 really
+    packs two values per byte."""
+    hd = 16
+    x = jnp.asarray(rng.standard_normal((3, 5, 2, hd)), jnp.float32) * 4.0
+    q, s = quantize_kv(x, spec)
+    g = spec.group_for(hd)
+    assert s.shape == (3, 5, 2, hd // g)
+    assert q.shape == (3, 5, 2, spec.packed_head_dim(hd))
+    assert q.dtype == spec.pool_dtype
+    back = dequantize_kv(q, s, spec, hd)
+    bound = jnp.repeat(s, g, axis=-1) * 0.5 + 1e-6
+    assert jnp.all(jnp.abs(back - x) <= bound), \
+        float(jnp.max(jnp.abs(back - x) - bound))
+    # deterministic: same rows always quantize to the same bytes (the
+    # property that extends the engine's placement invariance to pools)
+    q2, s2 = quantize_kv(x, spec)
+    assert np.array_equal(np.asarray(q), np.asarray(q2))
+    assert np.array_equal(np.asarray(s), np.asarray(s2))
+    # all-zero rows are the scale guard's edge: exact roundtrip, no NaNs
+    zq, zs = quantize_kv(jnp.zeros((2, hd)), spec)
+    assert np.all(np.asarray(dequantize_kv(zq, zs, spec, hd)) == 0.0)
+
+
+# ---------------------------------------------------------------------------
+# dequant-fused flash kernels
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("spec", QSPECS, ids=lambda s: s.describe())
+def test_dense_quant_kernel_matches_dequant_reference(rng, spec):
+    """flash_attention_quant (dequant fused into the online-softmax tiles)
+    vs dequantize-then-f32-flash — same math, the fused path just never
+    materializes f32 KV."""
+    b, sq, skv, h, kh, d = 2, 16, 24, 4, 2, 16
+    q = jnp.asarray(rng.standard_normal((b, sq, h, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, skv, kh, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, skv, kh, d)), jnp.float32)
+    scale = float(d) ** -0.5  # python float: stays weakly typed under x64
+    kq, ks = quantize_kv(k, spec)
+    vq, vs = quantize_kv(v, spec)
+    out = ops.flash_attention_quant(q, kq, ks, vq, vs, scale, spec,
+                                    causal=False, bq=8, bkv=8)
+    ref = ops.flash_attention(q, dequantize_kv(kq, ks, spec, d),
+                              dequantize_kv(vq, vs, spec, d), scale,
+                              causal=False, bq=8, bkv=8)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("spec", QSPECS, ids=lambda s: s.describe())
+def test_paged_quant_kernel_gathers_only_mapped_pages(rng, spec):
+    """The paged decode gather over a QUANTIZED pool: unmapped pool slots
+    hold garbage, per-sequence block tables use disjoint shuffled page ids,
+    and the fused-dequant kernel must still match a dense dequant reference
+    — proving it reads (and dequantizes) exactly the mapped pages."""
+    b, h, kh, d = 3, 4, 2, 16
+    page, mpb, npages = 4, 6, 19
+    lens = np.asarray([5, 11, 24], np.int32)
+    g = spec.group_for(d)
+    kpool = jnp.asarray(rng.standard_normal(
+        (npages, page, kh, spec.packed_head_dim(d))) * 40)
+    vpool = jnp.asarray(rng.standard_normal(
+        (npages, page, kh, spec.packed_head_dim(d))) * 40)
+    kpool = kpool.astype(spec.pool_dtype)
+    vpool = vpool.astype(spec.pool_dtype)
+    kspool = jnp.asarray(rng.standard_normal((npages, page, kh, d // g)),
+                         jnp.float32) * 7
+    vspool = jnp.asarray(rng.standard_normal((npages, page, kh, d // g)),
+                         jnp.float32) * 7
+    keys = jnp.asarray(rng.standard_normal((b, mpb * page, kh, d)),
+                       jnp.float32)
+    vals = jnp.asarray(rng.standard_normal((b, mpb * page, kh, d)),
+                       jnp.float32)
+    # disjoint shuffled placement: each sequence owns its own slice of a
+    # global permutation (two sequences must never share a page id)
+    ids = rng.permutation(np.arange(1, npages))
+    bt = np.zeros((b, mpb), np.int32)
+    for i in range(b):
+        need = -(-int(lens[i]) // page)
+        mine = ids[i * mpb:(i + 1) * mpb][:need]
+        bt[i, :need] = mine
+        kq, ks = quantize_kv(keys[i, :need * page], spec)
+        vq, vs = quantize_kv(vals[i, :need * page], spec)
+        for j, pid in enumerate(mine):
+            kpool = kpool.at[pid].set(kq[j * page:(j + 1) * page])
+            vpool = vpool.at[pid].set(vq[j * page:(j + 1) * page])
+            kspool = kspool.at[pid].set(ks[j * page:(j + 1) * page])
+            vspool = vspool.at[pid].set(vs[j * page:(j + 1) * page])
+    q = jnp.asarray(rng.standard_normal((b, h, d)), jnp.float32)
+    scale = float(d) ** -0.5  # python float: stays weakly typed under x64
+    out = ops.paged_flash_attention_quant(
+        q, kpool, kspool, vpool, vspool, jnp.asarray(bt),
+        jnp.asarray(lens), scale, spec)
+    # dense reference on the SAME quantized rows, masked to each length
+    grp = h // kh
+    for i in range(b):
+        need = -(-int(lens[i]) // page)
+        kq, ks = quantize_kv(keys[i, :need * page], spec)
+        vq, vs = quantize_kv(vals[i, :need * page], spec)
+        kd = dequantize_kv(kq, ks, spec, d)[:lens[i]]
+        vd = dequantize_kv(vq, vs, spec, d)[:lens[i]]
+        kf = jnp.repeat(kd, grp, axis=1)  # (S, KH, D) -> (S, H, D)
+        vf = jnp.repeat(vd, grp, axis=1)
+        logits = jnp.einsum("hd,shd->hs", q[i], kf) * scale
+        ref = jnp.einsum("hs,shd->hd", jax.nn.softmax(logits, axis=-1), vf)
+        np.testing.assert_allclose(np.asarray(out[i]), np.asarray(ref),
+                                   rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# engine end-to-end
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def dense():
+    cfg = reduced(get_config("smollm-135m"))
+    return cfg, model.init_params(cfg, jax.random.PRNGKey(0))
+
+
+def _serve(cfg, params, prompts, *, new=6, **kw):
+    eng = ServeEngine(cfg, params, batch_slots=kw.pop("batch_slots", 4),
+                      max_seq=32, seed=3, **kw)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p, max_new_tokens=new))
+    done = eng.run()
+    assert all(done[i].status is RequestState.FINISHED
+               for i in range(len(prompts))), done
+    return eng, [done[i].out_tokens for i in range(len(prompts))]
+
+
+def _prompts(rng, cfg, n=4, length=9):
+    return [np.asarray(rng.integers(0, cfg.vocab_size, (length,)), np.int32)
+            for _ in range(n)]
+
+
+def test_f32_spec_is_bitwise_identity(dense, rng):
+    """The compatibility keystone: serving with an explicit KVSpec('f32')
+    traces the exact pre-KVSpec graph — token streams match a no-spec
+    engine BITWISE, so the chaos + crash-recovery contract is untouched."""
+    cfg, params = dense
+    prompts = _prompts(rng, cfg)
+    _, base = _serve(cfg, params, prompts)
+    eng, toks = _serve(cfg, params, prompts, kv_spec=KVSpec())
+    assert toks == base
+    assert not eng.alloc.sidecar  # float specs carry no scale sidecar
+    assert eng.pool["k"].dtype == jnp.float32
+    assert "k_scale" not in eng.pool
+
+
+def test_bf16_spec_routes_pool_dtype(dense, rng):
+    cfg, params = dense
+    prompts = _prompts(rng, cfg, n=2)
+    eng, toks = _serve(cfg, params, prompts, kv_spec=KVSpec(dtype="bf16"))
+    assert eng.pool["k"].dtype == jnp.bfloat16
+    assert all(len(t) == 6 for t in toks)
+    assert eng.health()["kv"]["layout"] == "bf16"
+
+
+@pytest.mark.parametrize("spec", [KVSpec(dtype="int8"),
+                                  KVSpec(dtype="int4", group=16)],
+                         ids=lambda s: s.describe())
+def test_quantized_serving_invariances(dense, rng, spec):
+    """The guarantees that make paging invisible survive quantization:
+    tokens out of a quantized pool depend only on (params, prompt, seed) —
+    not page placement, page size, co-tenancy, or prefill chunking.  This
+    holds because rows are quantized BEFORE placement, so a token's stored
+    bytes are placement-invariant."""
+    cfg, params = dense
+    prompts = _prompts(rng, cfg)
+
+    def run(batch_slots, page_size, prefill_chunk=None, occupy=0,
+            kv_pages=None):
+        eng = ServeEngine(cfg, params, batch_slots=batch_slots, max_seq=32,
+                          page_size=page_size, prefill_chunk=prefill_chunk,
+                          kv_pages=kv_pages, seed=3, kv_spec=spec)
+        assert eng.alloc.sidecar
+        if occupy:
+            assert eng.alloc.ensure(-1, occupy * page_size) is not None
+        for i, p in enumerate(prompts):
+            eng.submit(Request(rid=i, prompt=p, max_new_tokens=6))
+        done = eng.run()
+        assert all(done[i].ok for i in range(len(prompts))), done
+        eng.alloc.check()
+        # quantized pools really are quantized end-to-end
+        assert eng.pool["k"].dtype == spec.pool_dtype
+        assert eng.pool["k_scale"].dtype == jnp.float32
+        return [done[i].out_tokens for i in range(len(prompts))]
+
+    base = run(batch_slots=4, page_size=8)
+    assert run(batch_slots=1, page_size=8) == base            # co-tenancy
+    assert run(batch_slots=2, page_size=5) == base            # page size
+    assert run(batch_slots=4, page_size=8, occupy=3,
+               kv_pages=4 * 4 + 1 + 3) == base                # placement
+    assert run(batch_slots=2, page_size=8, prefill_chunk=4) == base  # chunks
+
+
+def test_health_reports_kv_scheme(dense, rng):
+    cfg, params = dense
+    kh, hd, L = cfg.n_kv_heads, cfg.head_dim, cfg.n_layers
+    eng = ServeEngine(cfg, params, batch_slots=2, max_seq=32)
+    kv = eng.health()["kv"]
+    assert kv["dtype"] == "f32" and kv["layout"] == "f32"
+    assert kv["bytes_per_token"] == L * 2 * kh * 4 * hd
+    q = ServeEngine(cfg, params, batch_slots=2, max_seq=32,
+                    kv_spec=KVSpec(dtype="int4", group=16))
+    kvq = q.health()["kv"]
+    assert kvq["layout"] == "int4-g16"
+    assert kvq["bytes_per_token"] == \
+        L * KVSpec(dtype="int4", group=16).kv_bytes_per_token(kh, hd)
+    assert kvq["bytes_per_token"] < kv["bytes_per_token"] / 3
+    # stacked (ssm) engines report their actual recurrent-state bytes
+    ssm = reduced(get_config("mamba2-370m"))
+    s = ServeEngine(ssm, model.init_params(ssm, jax.random.PRNGKey(0)),
+                    batch_slots=2, max_seq=32)
+    skv = s.health()["kv"]
+    assert skv["dtype"] == "f32" and skv["state_bytes_per_slot"] > 0
+    assert "bytes_per_token" not in skv
+
+
+def test_quantized_spec_requires_paged_family(dense):
+    """Quantized specs only apply to the paged pool: stacked/slots families
+    refuse at construction with an actionable error, and float specs keep
+    working everywhere."""
+    ssm = reduced(get_config("mamba2-370m"))
+    params = model.init_params(ssm, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="requires the paged KV cache"):
+        ServeEngine(ssm, params, batch_slots=2, max_seq=32,
+                    kv_spec=KVSpec(dtype="int8"))
+    # float spec on a stacked family is fine (dtype plumbing, no paging)
+    eng = ServeEngine(ssm, params, batch_slots=2, max_seq=32,
+                      kv_spec=KVSpec())
+    assert eng.health()["kv"]["dtype"] == "f32"
+
+
+def test_quantized_spec_validates_geometry_eagerly(dense):
+    """A group that cannot divide head_dim (or an odd head_dim for int4)
+    fails at ServeEngine construction, not at first trace."""
+    cfg, params = dense
+    bad = cfg.head_dim - 1 if cfg.head_dim % 2 == 0 else cfg.head_dim
+    with pytest.raises(ValueError, match="does not divide"):
+        ServeEngine(cfg, params, batch_slots=2, max_seq=32,
+                    kv_spec=KVSpec(dtype="int8", group=bad))

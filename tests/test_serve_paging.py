@@ -23,13 +23,16 @@ from repro.serve.paging import NULL_PAGE, PageAllocator
 
 @settings(max_examples=30, deadline=None)
 @given(num_pages=st.integers(2, 48), page_size=st.integers(1, 8),
-       seed=st.integers(0, 2**31 - 1))
+       seed=st.integers(0, 2**31 - 1), sidecar=st.booleans())
 def test_allocator_roundtrip_never_leaks_or_double_frees(
-        num_pages, page_size, seed):
+        num_pages, page_size, seed, sidecar):
     """Random ensure/free interleavings: every invariant in paging.py holds
     after every operation, a refused ensure commits nothing, and freeing
-    everything returns the allocator to full capacity."""
-    alloc = PageAllocator(num_pages, page_size)
+    everything returns the allocator to full capacity.  With ``sidecar``
+    (quantized KV specs) the scale-plane accounting must additionally stay
+    in LOCKSTEP with the page pool through the whole interleaving —
+    ``check()`` asserts both after every single op."""
+    alloc = PageAllocator(num_pages, page_size, sidecar=sidecar)
     rng = np.random.default_rng(seed)
     mirror = {}  # rid -> page count we believe it holds
     for _ in range(60):
@@ -63,6 +66,10 @@ def test_allocator_roundtrip_never_leaks_or_double_frees(
         alloc.free(rid)
     alloc.check()
     assert alloc.free_pages == alloc.capacity and alloc.used_pages == 0
+    if sidecar:
+        # full cycle returned every scale plane too, in the same LIFO order
+        assert alloc._side_free == alloc._free
+        assert alloc._side_owned == {}
 
 
 @settings(max_examples=30, deadline=None)
@@ -311,6 +318,43 @@ def test_allocator_snapshot_roundtrip_and_corruption():
     bad["owned"]["2"].append(bad["free"][0])  # page in two places
     with pytest.raises(ValueError, match="corrupt allocator snapshot"):
         PageAllocator.from_state(bad)
+
+
+def test_sidecar_snapshot_roundtrip_and_divergence_guards():
+    """Quantized-pool allocators: to_state/from_state carry the scale-plane
+    sidecar, a pre-sidecar snapshot (no ``sidecar`` key) restores as a plain
+    allocator, and both divergence paths are caught — a tampered snapshot
+    whose sidecar drifted from the page pool is rejected at restore, and a
+    live sidecar double free raises before either pool mutates."""
+    alloc = PageAllocator(16, 2, sidecar=True)
+    alloc.ensure(1, 5)
+    alloc.ensure(2, 3)
+    alloc.free(1)
+    state = alloc.to_state()
+    clone = PageAllocator.from_state(state)
+    assert clone.sidecar
+    assert clone._side_free == alloc._free
+    assert clone._side_owned == alloc._owned
+    # pre-sidecar snapshot (PR-8 engines): no sidecar key -> plain allocator
+    legacy = {k: v for k, v in state.items()
+              if k not in ("sidecar", "side_free", "side_owned")}
+    plain = PageAllocator.from_state(legacy)
+    assert not plain.sidecar and plain._side_free is None
+    # tampered snapshot: sidecar ownership drifts from page ownership
+    # (rid 2 holds two pages, so reversing the sidecar list breaks lockstep)
+    bad = alloc.to_state()
+    assert len(bad["side_owned"]["2"]) == 2
+    bad["side_owned"]["2"] = list(reversed(bad["side_owned"]["2"]))
+    with pytest.raises(ValueError, match="corrupt allocator snapshot"):
+        PageAllocator.from_state(bad)
+    # live divergence: a scale plane sneaks back onto the sidecar free list
+    alloc2 = PageAllocator(8, 2, sidecar=True)
+    alloc2.ensure(3, 4)
+    alloc2._side_free.append(alloc2._side_owned[3][0])
+    with pytest.raises(ValueError, match="scale-plane double free"):
+        alloc2.free(3)
+    # the failed free left the data pool untouched (no half-applied state)
+    assert alloc2.holds(3) == 2
 
 
 def test_decode_plan_resolved_at_real_batched_m():

@@ -22,8 +22,8 @@ from repro.models import model
 from repro.models.config import reduced
 from repro.serve import (ErrorKind, FaultInjector, FaultSpec,
                          JournalCorruption, JournalError, JournalWriter,
-                         Request, RequestState, ServeEngine, SimulatedCrash,
-                         collate, read_journal)
+                         KVSpec, Request, RequestState, ServeEngine,
+                         SimulatedCrash, collate, read_journal)
 
 
 # ---------------------------------------------------------------------------
@@ -260,6 +260,59 @@ def test_stale_snapshot_degrades_to_reprefill(dense, tmp_path):
         assert recs[rid].status is RequestState.FINISHED
     # the stale path really ran: in-flight rids were re-enqueued, not
     # resumed from the outdated KV
+    col = collate(read_journal(tmp_path / "wal.log").records)
+    assert col.recovers and col.recovers[0]["requeued"]
+
+
+@pytest.mark.parametrize("dtype,group", [("int8", None), ("int4", 16)])
+def test_quantized_kv_crash_recovery_bitwise(dense, tmp_path, dtype, group):
+    """The PR-8 recovery contract extends to quantized pools: a crash
+    mid-decode over int8/int4 pages restores (snapshot carries the
+    quantized pool + scale planes bitwise; the journal's open record
+    carries the spec, so restore() needs no kv_spec argument) and every
+    request continues to the SAME tokens as an uninterrupted quantized
+    run."""
+    cfg, params = dense
+    spec = KVSpec(dtype=dtype, group=group)
+    clean = _clean_streams(cfg, params, kv_spec=spec)
+    eng2 = _crash_restore_and_check(
+        cfg, params, tmp_path,
+        FaultSpec(kind="process_crash", phase="decode", rid=2, at_call=2),
+        clean, kv_spec=spec)
+    # the restored engine really is quantized end-to-end
+    assert eng2.kv_spec == spec and eng2.alloc.sidecar
+    assert eng2.health()["kv"]["dtype"] == dtype
+    # restore() reads the spec from the journal; passing one is an error
+    with pytest.raises(JournalError, match="kv_spec"):
+        ServeEngine.restore(cfg, params, tmp_path / "wal.log",
+                            fsync=False, kv_spec=spec)
+
+
+def test_stale_snapshot_reprefills_into_quantized_pool(dense, tmp_path):
+    """The stale-snapshot degrade path over int8 pages: streams that
+    outran the snapshot re-prefill from the journal into a FRESH quantized
+    pool (prompt + tokens re-quantized at append), and the continuations
+    still match an uninterrupted int8 run bitwise."""
+    cfg, params = dense
+    spec = KVSpec(dtype="int8")
+    clean = _clean_streams(cfg, params, kv_spec=spec)
+    eng = _engine(cfg, params, tmp_path, snapshot_every=0, kv_spec=spec)
+    for r in _requests(cfg):
+        eng.submit(r)
+    _tick(eng, 2)
+    eng.snapshot()  # an EARLY snapshot ...
+    _tick(eng, 2)   # ... that the journal then outruns
+    assert any(r is not None and r.out_tokens for r in eng.slot_req)
+    eng.journal.close()  # abandon mid-flight: the "crash"
+    eng2 = ServeEngine.restore(cfg, params, tmp_path / "wal.log",
+                               snapshot_dir=str(tmp_path / "snaps"),
+                               fsync=False)
+    assert eng2.kv_spec == spec
+    recs = eng2.run()
+    eng2.journal.close()
+    for rid, toks in clean.items():
+        assert recs[rid].out_tokens == toks
+        assert recs[rid].status is RequestState.FINISHED
     col = collate(read_journal(tmp_path / "wal.log").records)
     assert col.recovers and col.recovers[0]["requeued"]
 
