@@ -47,7 +47,7 @@ from benchmarks.latency_kernels import HEADER, analytic_rows
 # fails with a clear "regenerate" message instead of a KeyError.
 _GUARDED = [h for h in HEADER
             if h.startswith("us_") or h.startswith("act_prologue_kb_")
-            or h.startswith("attn_kb_")]
+            or h.startswith("attn_kb_") or h.startswith("comms_kb_")]
 
 
 def check(baseline_path: Path, tolerance: float) -> list[str]:

@@ -38,8 +38,10 @@ import numpy as np
 from benchmarks.common import record
 from repro.launch.roofline import (HBM_BW, PEAK_FLOPS,
                                    attention_kv_bytes,
+                                   ep_combine_bytes_per_token,
                                    prologue_activation_bytes,
-                                   prologue_intermediate_bytes)
+                                   prologue_intermediate_bytes,
+                                   tp_psum_bytes_per_token)
 
 # (d_in, d_out) from the Llama family, as in paper Tables 6-8
 SIZES = [(4096, 11008), (5120, 13824), (8192, 28672)]
@@ -79,7 +81,25 @@ HEADER = [
     # paged decode kernel streams.  Guarded by check_regression via the
     # attn_kb_ prefix.
     "attn_kb_f32", "attn_kb_int8", "attn_kb_int4_g128",
+    # Tensor-parallel ICI payload per token at the reference TP degree
+    # below: the ONE row-parallel psum a sharded W4A4+LRC layer of this
+    # row's output width emits (LRC partial merged into the same payload —
+    # repro.launch.roofline.tp_psum_bytes_per_token), and the EP combine
+    # psum over the row's d_in as the model width.  Guarded by
+    # check_regression via the comms_kb_ prefix: collective-payload growth
+    # >5% (an extra collective, an un-merged LRC psum) fails CI.
+    "comms_kb_psum_tp8", "comms_kb_ep_tp8",
 ]
+
+TP_REF = 8  # reference TP degree for the comms_kb_ columns
+
+
+def _comms_kb_cols(k, n):
+    """The two comms_kb_ column values for one (d_in=k, d_out=n) row."""
+    return [
+        round(tp_psum_bytes_per_token(n, TP_REF) / 1024, 2),
+        round(ep_combine_bytes_per_token(k, TP_REF) / 1024, 2),
+    ]
 
 GROUP_COLUMN_G = 128  # the paper's headline group size for the _g128 columns
 
@@ -180,6 +200,7 @@ def analytic_rows(ms=MS, sizes=SIZES, ranks=RANKS):
                     round(t_ch_g * 1e6, 1),
                     round(act_ch_g / 1024, 1),
                     *_attn_kb_cols(m),
+                    *_comms_kb_cols(k, n),
                 ])
     return rows
 
@@ -261,6 +282,7 @@ def smoke_rows(ctx=None):
             "",
             round(act_ch_g / 1024, 1),
             *_attn_kb_cols(m),
+            *_comms_kb_cols(k, n),
         ])
     return rows
 

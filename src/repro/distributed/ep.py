@@ -36,10 +36,16 @@ def _capacity(n_tokens: int, top_k: int, n_experts: int, factor: float) -> int:
 
 def _local_expert_compute(cfg, weights_local, xbuf):
     """xbuf: (E_local, C, D) -> (E_local, C, D) through each local expert."""
+    import dataclasses
+
     from repro.quant.qlinear import QLinear, qlinear_apply
 
     def one(wg, wu, wd, xb):
         if isinstance(wg, QLinear):
+            # we are already inside ep's shard_map body: strip any TP tag so
+            # qlinear_apply cannot recurse into a nested shard_map
+            wg, wu, wd = (dataclasses.replace(w, parallel=None)
+                          for w in (wg, wu, wd))
             g = qlinear_apply(wg, xb)
             u = qlinear_apply(wu, xb)
             h = jax.nn.silu(g) * u
@@ -52,10 +58,14 @@ def _local_expert_compute(cfg, weights_local, xbuf):
     return jax.vmap(one)(weights_local["wg"], weights_local["wu"], weights_local["wd"], xbuf)
 
 
-def experts_ep(cfg, p, x, weights, top_idx, axis: str = "model"):
+def experts_ep(cfg, p, x, weights, top_idx, axis: str = "model",
+               with_stats: bool = False):
     """x: (T, D) tokens (replicated over ``axis``); weights: (T, E) router
     weights; top_idx: (T, K).  Expert weights p["experts"] sharded over
-    ``axis`` on their leading dim.  Returns (T, D)."""
+    ``axis`` on their leading dim.  Returns (T, D), or
+    ``((T, D), dropped)`` with ``with_stats`` — ``dropped`` is the global
+    int32 count of (token, slot) assignments past expert capacity this
+    call (the same psum the combine already needs; no extra collective)."""
     axis = axis or "model"
     mesh = get_abstract_mesh()
     tp = mesh.shape[axis]
@@ -92,6 +102,14 @@ def experts_ep(cfg, p, x, weights, top_idx, axis: str = "model"):
             keep, flat_w[order], 0.0
         )[:, None].astype(x.dtype)
         out = jnp.zeros_like(xl).at[src_tok].add(contrib)
+        if with_stats:
+            # capacity-overflow accounting: assignments routed to MY experts
+            # minus those that landed in a capacity slot.  Summed alongside
+            # the combine psum — the collective count stays at one.
+            dropped = (mine.sum().astype(jnp.int32)
+                       - keep.sum().astype(jnp.int32))
+            return (jax.lax.psum(out, axis),
+                    jax.lax.psum(dropped, axis))
         return jax.lax.psum(out, axis)
 
     in_specs = (
@@ -104,7 +122,7 @@ def experts_ep(cfg, p, x, weights, top_idx, axis: str = "model"):
         local_fn,
         mesh=mesh,
         in_specs=in_specs,
-        out_specs=P(),
+        out_specs=(P(), P()) if with_stats else P(),
         check_vma=False,
         axis_names={axis},
     )

@@ -16,6 +16,7 @@ KV heads are replicated while its fused 192-wide kv projection still shards.
 from __future__ import annotations
 
 import re
+import warnings
 from typing import Optional
 
 import jax
@@ -71,11 +72,33 @@ def _mesh_axis_size(mesh: Mesh, axis) -> int:
     return mesh.shape[axis]
 
 
-def _guard(shape, plan, mesh: Mesh):
-    """Drop plan entries whose dim does not divide the mesh axis size."""
+class ShardingFallback(UserWarning):
+    """A rule wanted to shard a dim that does not divide its mesh axis; the
+    dim fell back to replication.  Structured fields for tooling:
+    ``path`` (param path), ``dim_index``, ``dim``, ``axis``, ``axis_size``."""
+
+    def __init__(self, path: str, dim_index: int, dim: int, axis, axis_size: int):
+        self.path = path
+        self.dim_index = dim_index
+        self.dim = dim
+        self.axis = axis
+        self.axis_size = axis_size
+        super().__init__(
+            f"{path or '<unnamed>'}: dim {dim_index} of size {dim} does not "
+            f"divide mesh axis {axis!r} (size {axis_size}); replicating")
+
+
+def _guard(shape, plan, mesh: Mesh, path: str = ""):
+    """Drop plan entries whose dim does not divide the mesh axis size,
+    emitting a structured :class:`ShardingFallback` warning for each drop
+    (silent only when the axis is trivially size 1)."""
     out = []
-    for dim, axis in zip(shape, plan):
-        if axis is None or dim % _mesh_axis_size(mesh, axis) != 0:
+    for i, (dim, axis) in enumerate(zip(shape, plan)):
+        size = _mesh_axis_size(mesh, axis)
+        if axis is None or dim % size != 0:
+            if axis is not None and size > 1:
+                warnings.warn(ShardingFallback(path, i, dim, axis, size),
+                              stacklevel=3)
             out.append(None)
         else:
             out.append(axis)
@@ -126,10 +149,41 @@ def param_pspecs(params_tree, mesh: Mesh, multi_pod: bool = False):
                 plan = _qlinear_adjust(plan, m.group(2), shape, n_stack)
                 full = (None,) * n_stack + _resolve(plan, mesh, None)
                 full = full[: len(shape)] + (None,) * max(0, len(shape) - len(full))
-                return _guard(shape, full, mesh)
+                return _guard(shape, full, mesh, path=ps)
         return P(*([None] * len(shape)))
 
     return jax.tree_util.tree_map_with_path(spec_one, params_tree)
+
+
+def describe_sharding(params_tree, mesh: Mesh, multi_pod: bool = False):
+    """The fully resolved plan as data (mirroring ``ctx.explain`` for kernel
+    plans): one row per array leaf — ``{"path", "shape", "spec",
+    "fallbacks": [ShardingFallback, ...]}`` — with divisibility fallbacks
+    captured instead of warned.  Works on real arrays or ShapeDtypeStructs
+    (``jax.eval_shape`` trees), so the plan is introspectable without
+    materialising a model."""
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always", ShardingFallback)
+        specs = param_pspecs(params_tree, mesh, multi_pod=multi_pod)
+    fb_by_path: dict = {}
+    for w in caught:
+        if isinstance(w.message, ShardingFallback):
+            fb_by_path.setdefault(w.message.path, []).append(w.message)
+
+    rows = []
+
+    def collect(path, leaf, spec):
+        ps = _path_str(path)
+        rows.append({
+            "path": ps,
+            "shape": tuple(leaf.shape),
+            "spec": spec,
+            "fallbacks": fb_by_path.get(ps, []),
+        })
+        return spec
+
+    jax.tree_util.tree_map_with_path(collect, params_tree, specs)
+    return rows
 
 
 def _qlinear_adjust(plan, field: Optional[str], shape, n_stack: int):
@@ -193,7 +247,7 @@ def cache_pspecs(cache_tree, mesh: Mesh, multi_pod: bool, global_batch: int):
             if plan[d] is None and shape[d] % mesh.shape["model"] == 0 and shape[d] >= mesh.shape["model"]:
                 plan[d] = "model"
                 break
-        return _guard(shape, tuple(plan), mesh)
+        return _guard(shape, tuple(plan), mesh, path=ps)
 
     return jax.tree_util.tree_map_with_path(spec_one, cache_tree)
 

@@ -265,6 +265,35 @@ def attention_kv_bytes(context_len: int, n_kv_heads: int, head_dim: int,
     return context_len * spec.kv_bytes_per_token(n_kv_heads, head_dim)
 
 
+def tp_psum_bytes_per_token(n_out: int, tp: int,
+                            dtype_bytes: int = 4) -> float:
+    """Per-token ICI payload of the ONE row-parallel ``psum`` a TP W4A4+LRC
+    layer emits (distributed/tp.py): a ring all-reduce moves
+    ``2·(tp-1)/tp`` of the f32 partial per device, and the LRC partial is
+    already merged into the same payload (the zero-extra-collective
+    invariant), so the payload is exactly the (N,)-wide output row.  THE
+    one spelling of the TP comms-byte model — the ``comms_kb_`` columns in
+    benchmarks/latency_kernels.py and the CI regression gate derive from
+    it, so payload growth (e.g. an accidental second collective or an
+    un-merged LRC psum) cannot land silently."""
+    if tp <= 1:
+        return 0.0
+    return 2.0 * (tp - 1) / tp * n_out * dtype_bytes
+
+
+def ep_combine_bytes_per_token(d_model: int, tp: int,
+                               dtype_bytes: int = 4) -> float:
+    """Per-token ICI payload of the EP combine (distributed/ep.py): the
+    capacity dispatch is local (tokens are replicated over "model"), so the
+    ONLY collective is the final psum of the (d_model,)-wide combined
+    output — the same ring all-reduce payload shape as a row-parallel
+    matmul.  The with_stats drop counter rides the same psum phase, so it
+    adds 4 bytes, not a collective — excluded here as noise."""
+    if tp <= 1:
+        return 0.0
+    return 2.0 * (tp - 1) / tp * d_model * dtype_bytes
+
+
 def model_flops(cfg, shape) -> float:
     """MODEL_FLOPS = 6·N·D (train) / 2·N·D (inference); N = active matmul
     params (embedding lookup excluded), D = tokens processed."""

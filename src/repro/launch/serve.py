@@ -1,12 +1,26 @@
 """Serving launcher: batched requests through a (quantized) model.
 
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m \
-        [--quantize] [--requests 8] [--new-tokens 16] \
+        [--quantize [--act-group G]] [--requests 8] [--new-tokens 16] \
         [--page-size 16] [--kv-pages N] [--prefill-chunk C] \
         [--kv-dtype int8|int4 --kv-group G] \
+        [--mesh model=N,data=M] \
         [--block-table results/block_table.json] [--vmem-budget BYTES] \
         [--deadline-s 30] [--retries 2] [--queue-bound 64] \
         [--inject-faults K --fault-seed S --parity-check]
+
+Mesh-sharded serving (docs/serving.md, "Sharded serving"): ``--mesh``
+builds a device mesh (prod(sizes) must equal the visible device count —
+on CPU set ``XLA_FLAGS=--xla_force_host_platform_device_count=N``) and
+serves through it: column/row-parallel shard_map QLinear forwards with
+the low-rank factors following the weight shard (zero extra collectives),
+replicated-then-data-sharded KV paging, and expert-parallel MoE dispatch
+when the expert count divides the "model" axis.  ``--act-group`` selects
+group-wise activation scales at calibration time — REQUIRED for
+row-parallel sharding (per-token scales over a local K slice would shift
+semantics, so those layers replicate instead).  Both chaos harnesses run
+under the mesh unchanged: a given mesh is run-to-run deterministic, so
+the recovery parity contract holds shard-count by shard-count.
 
 KV-cache knobs (docs/serving.md): ``--page-size`` sets the paged-KV page
 granularity, ``--kv-pages`` shrinks the shared page pool (admission then
@@ -109,7 +123,8 @@ def _dump_recovery_failure(path, payload):
     print(f"wrote failure report to {path}", file=sys.stderr)
 
 
-def _crash_recovery_harness(args, cfg, params, ctx, run_engine) -> int:
+def _crash_recovery_harness(args, cfg, params, ctx, run_engine,
+                            mesh=None) -> int:
     """Kill the engine mid-run with a seeded process_crash, restore from
     journal+snapshot, and assert the recovery contract (exactly-once
     terminals; bitwise-equal streams with --parity-check).  Returns the
@@ -157,7 +172,8 @@ def _crash_recovery_harness(args, cfg, params, ctx, run_engine) -> int:
                                   snapshot_every=snap_every,
                                   kernel_impl=args.impl, ctx=ctx,
                                   max_retries=args.retries,
-                                  stall_patience=args.stall_patience)
+                                  stall_patience=args.stall_patience,
+                                  mesh=mesh)
         done = eng.run()
         eng.journal.close()
         col = collate(read_journal(jpath).records)
@@ -325,6 +341,20 @@ def main():
                          "with --parity-check)")
     ap.add_argument("--crash-phase", default="decode",
                     choices=("prefill", "decode", "sampling"))
+    # -- mesh-sharded serving (distributed/tp.py + ep.py) -------------------
+    ap.add_argument("--mesh", default=None, metavar="SPEC",
+                    help="serve through a device mesh, e.g. model=4,data=2 "
+                         "(prod of sizes must equal the device count; on "
+                         "CPU set XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count=N).  Column/row-parallel QLinear "
+                         "forwards under shard_map, data-sharded KV pages, "
+                         "expert-parallel MoE when n_experts divides "
+                         "'model'")
+    ap.add_argument("--act-group", type=_positive_int, default=None,
+                    help="group-wise activation scales for --quantize "
+                         "(paper Table 2 g, e.g. 16/128).  Required for "
+                         "row-parallel TP: the group grid must divide the "
+                         "local K slice, or those layers replicate")
     args = ap.parse_args()
     if args.crash_after is not None and args.crash_after < 0:
         ap.error("--crash-after must be >= 0")
@@ -361,9 +391,19 @@ def main():
         calib = calib_sequences(cfg, n_seq=16, seq_len=64)
         params = quantize_model(
             cfg, params, calib,
-            QuantPolicy(rank_frac=0.10, impl="sim", clip_ratio=0.9),
+            QuantPolicy(rank_frac=0.10, impl="sim", clip_ratio=0.9,
+                        act_group=args.act_group),
         )
-        print("serving the W4A4+LRC quantized model")
+        print("serving the W4A4+LRC quantized model"
+              + (f" (act_group={args.act_group})" if args.act_group else ""))
+
+    mesh = None
+    if args.mesh:
+        from repro.distributed.tp import build_mesh
+
+        mesh = build_mesh(args.mesh)
+        print(f"serving through mesh {dict(mesh.shape)} "
+              f"({jax.device_count()} devices)")
 
     injector = None
     if args.inject_faults > 0:
@@ -396,6 +436,7 @@ def main():
             queue_limit=args.queue_bound, queue_policy=args.queue_policy,
             default_deadline_s=args.deadline_s,
             stall_patience=args.stall_patience, injector=inj,
+            mesh=mesh,
             **crash_safety,
         )
         for i, p in enumerate(prompts):
@@ -404,7 +445,8 @@ def main():
         return eng, eng.run()
 
     if args.crash_after is not None:
-        sys.exit(_crash_recovery_harness(args, cfg, params, ctx, run_engine))
+        sys.exit(_crash_recovery_harness(args, cfg, params, ctx, run_engine,
+                                         mesh=mesh))
 
     crash_safety = {}
     if args.journal:
@@ -429,6 +471,14 @@ def main():
         print(f"kv cache: {kv['layout']}, "
               f"{kv['bytes_per_token']} B/token (all layers, K+V incl. "
               f"scale planes)")
+    mh = eng.health()["mesh"]
+    if mh is not None:
+        kinds = {}
+        for p in mh["decode_plans"].values():
+            key = p["parallel"] or "replicated"
+            kinds[key] = kinds.get(key, 0) + p["layers"]
+        print(f"mesh: axes={mh['axes']} moe_impl={mh['moe_impl']} "
+              f"ep_dropped={mh['ep_dropped']} layers_by_kind={kinds}")
     _print_failure_summary(done, eng.health(), injector)
 
     ok = True

@@ -1,6 +1,15 @@
 """Aggregate results/dryrun/*.json into the EXPERIMENTS.md tables.
 
     PYTHONPATH=src python -m repro.launch.summarize [--dir results/dryrun]
+
+With ``--sharding`` the tool instead prints the fully resolved mesh
+placement plan for one architecture — param path → PartitionSpec, with
+every divisibility fallback (a rule that wanted to shard a dim that does
+not divide its mesh axis) marked inline — without materialising a model
+(``jax.eval_shape`` over an AbstractMesh, so no devices are needed):
+
+    PYTHONPATH=src python -m repro.launch.summarize \
+        --sharding smollm-135m --mesh model=4,data=2 [--full]
 """
 
 from __future__ import annotations
@@ -51,11 +60,61 @@ def table(recs, mesh_filter: str):
     return rows
 
 
+def sharding_report(arch: str, mesh_spec: str, use_reduced: bool) -> int:
+    """Print path → PartitionSpec for every param of ``arch`` under the
+    mesh, flagging divisibility fallbacks.  Exit 0 always — fallbacks are
+    a property of the (config, mesh) pair, not an error."""
+    import jax
+
+    from repro.configs import get_config
+    from repro.core.jaxcompat import abstract_mesh
+    from repro.distributed.sharding import describe_sharding
+    from repro.distributed.tp import parse_mesh
+    from repro.models import model as model_lib
+    from repro.models.config import reduced
+
+    cfg = get_config(arch)
+    if use_reduced:
+        cfg = reduced(cfg)
+    spec = parse_mesh(mesh_spec)
+    mesh = abstract_mesh(tuple(spec.values()), tuple(spec.keys()))
+    tree = jax.eval_shape(
+        lambda: model_lib.init_params(cfg, jax.random.PRNGKey(0)))
+    rows = describe_sharding(tree, mesh)
+    n_fb = sum(len(r["fallbacks"]) for r in rows)
+    print(f"sharding plan: {cfg.name}"
+          f"{' (reduced)' if use_reduced else ''} on mesh {dict(spec)} "
+          f"({len(rows)} leaves, {n_fb} divisibility fallback(s))\n")
+    wpath = max(len(r["path"]) for r in rows)
+    wshape = max(len(str(r["shape"])) for r in rows)
+    for r in rows:
+        mark = ""
+        if r["fallbacks"]:
+            mark = "  <- " + "; ".join(
+                f"dim {f.dim_index} ({f.dim}) !% {f.axis}={f.axis_size}"
+                for f in r["fallbacks"])
+        print(f"  {r['path']:<{wpath}}  {str(r['shape']):<{wshape}}  "
+              f"{r['spec']}{mark}")
+    return 0
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="results/dryrun")
     ap.add_argument("--markdown", action="store_true", default=True)
+    ap.add_argument("--sharding", default=None, metavar="ARCH",
+                    help="print the resolved param-path -> PartitionSpec "
+                         "plan for ARCH under --mesh instead of the dryrun "
+                         "tables (divisibility fallbacks marked inline)")
+    ap.add_argument("--mesh", default="model=4,data=2",
+                    help="mesh axes for --sharding, e.g. model=4,data=2 "
+                         "(AbstractMesh — no devices needed)")
+    ap.add_argument("--full", action="store_true",
+                    help="use the full (non-reduced) config for --sharding")
     args = ap.parse_args()
+    if args.sharding:
+        raise SystemExit(sharding_report(args.sharding, args.mesh,
+                                         not args.full))
     recs = load(Path(args.dir))
     for mesh in ("16x16", "2x16x16"):
         rows = table(recs, mesh)

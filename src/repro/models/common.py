@@ -160,6 +160,47 @@ def attention(
     return out.reshape(b, sq, h, v.shape[-1])
 
 
+def sharded_attention(q, k, v, mask, scale: float):
+    """:func:`attention` with its partitioning pinned under a mesh.
+
+    Sharding CONSTRAINTS pin tensor layouts but not GSPMD's op strategy —
+    left alone it may still split attention's reduction dims (head_dim in
+    the logit einsum, sequence in softmax/PV), computing partials plus an
+    f32 all-reduce that is not bitwise vs single-device.  Running the whole
+    attention in a shard_map makes the partitioning exact by construction:
+    batch over "data" and heads over "model" when divisible (both batched
+    dims — every (row, head) is computed whole on one shard, zero
+    collectives in the body), everything replicated otherwise.  Falls back
+    to the plain call when no mesh is ambient."""
+    mesh = get_abstract_mesh()
+    if mesh is None or not mesh.axis_names:
+        return attention(q, k, v, mask, scale)
+    from repro.core.jaxcompat import shard_map
+
+    P = jax.sharding.PartitionSpec
+    axes = dict(mesh.shape)
+    dp, tp = axes.get("data", 1), axes.get("model", 1)
+    bax = "data" if (dp > 1 and q.shape[0] % dp == 0) else None
+    hax = "model" if (tp > 1 and q.shape[2] % tp == 0
+                      and k.shape[2] % tp == 0) else None
+    qs = P(bax, None, hax, None)
+    kvs = P(bax, None, hax, None)
+    if mask is None:
+        ins = (qs, kvs, kvs)
+        args = (q, k, v)
+        fn = lambda ql, kl, vl: attention(ql, kl, vl, None, scale)
+    else:
+        ms = P(None, None) if mask.ndim == 2 else P(bax, None, None)
+        ins = (qs, kvs, kvs, ms)
+        args = (q, k, v, mask)
+        fn = lambda ql, kl, vl, ml: attention(ql, kl, vl, ml, scale)
+    out = shard_map(fn, mesh=mesh, in_specs=ins,
+                    out_specs=P(bax, None, hax, None),
+                    check_vma=False,
+                    axis_names={a for a in (bax, hax) if a})(*args)
+    return out
+
+
 def mlp_block(p: dict, x: jnp.ndarray, act: str) -> jnp.ndarray:
     """Gated MLP: SwiGLU (silu) or GeGLU (gelu)."""
     g = apply_linear(p["wg"], x)
@@ -257,7 +298,7 @@ def paged_gqa_attention_block(
     pages_v = paged_cache_update(pages_v, v, block_table, positions, valid)
     kc = pages_k[block_table].reshape(b, -1, kh, hd).astype(x.dtype)
     vc = pages_v[block_table].reshape(b, -1, kh, hd).astype(x.dtype)
-    out = attention(q, kc, vc, mask, scale=1.0 / (hd**0.5))
+    out = sharded_attention(q, kc, vc, mask, scale=1.0 / (hd**0.5))
     out = apply_linear(p["wo"], out.reshape(b, s, h * hd))
     return out, pages_k, pages_v
 
@@ -309,7 +350,7 @@ def paged_gqa_attention_block_quantized(
     vc = dequantize_kv(pages_v[block_table].reshape(b, -1, kh, phd),
                        scales_v[block_table].reshape(b, -1, kh, n_g),
                        kv_spec, hd).astype(x.dtype)
-    out = attention(q, kc, vc, mask, scale=1.0 / (hd**0.5))
+    out = sharded_attention(q, kc, vc, mask, scale=1.0 / (hd**0.5))
     out = apply_linear(p["wo"], out.reshape(b, s, h * hd))
     return out, pages_k, pages_v, scales_k, scales_v
 

@@ -68,52 +68,75 @@ def init_params(cfg, key, max_seq: int = 0):
     return params
 
 
-def _block_forward(cfg, lp, x, positions, mask, cache, moe: bool, moe_impl: str):
+def _block_forward(cfg, lp, x, positions, mask, cache, moe: bool, moe_impl: str,
+                   want_stats: bool = False):
     h = rms_norm(x, lp["attn_norm"], cfg.norm_eps)
     a, new_cache = mla_attention_block(cfg, lp["attn"], h, positions, mask, cache)
     x = x + a
     h = rms_norm(x, lp["mlp_norm"], cfg.norm_eps)
+    drops = jnp.zeros((), jnp.int32) if want_stats else None
     if moe:
-        x = x + moe_block(cfg, lp["moe"], h, impl=moe_impl)
+        if want_stats:
+            y, drops = moe_block(cfg, lp["moe"], h, impl=moe_impl,
+                                 return_stats=True)
+            x = x + y
+        else:
+            x = x + moe_block(cfg, lp["moe"], h, impl=moe_impl)
     else:
         x = x + mlp_block(lp["mlp"], h, cfg.act)
-    return x, new_cache
+    return x, new_cache, drops
 
 
-def _run_stack(cfg, layers, x, positions, mask, cache, moe: bool, moe_impl: str):
+def _run_stack(cfg, layers, x, positions, mask, cache, moe: bool, moe_impl: str,
+               want_stats: bool = False):
     if cache is None:
 
         def body(xc, lp):
-            y, _ = _block_forward(cfg, lp, xc, positions, mask, None, moe, moe_impl)
-            return y, None
+            y, _, d = _block_forward(cfg, lp, xc, positions, mask, None, moe,
+                                     moe_impl, want_stats)
+            return y, d
 
-        x, _ = scan_layers(cfg, maybe_remat(cfg, body), x, layers)
-        return x, None
+        x, drops = scan_layers(cfg, maybe_remat(cfg, body), x, layers)
+        return x, None, (drops.sum() if want_stats else None)
 
     offset = cache["offset"]
 
     def body(xc, xs):
         lp, ck, cr = xs
-        y, nc = _block_forward(
+        y, nc, d = _block_forward(
             cfg, lp, xc, positions, mask,
-            dict(c_kv=ck, k_rope=cr, offset=offset), moe, moe_impl,
+            dict(c_kv=ck, k_rope=cr, offset=offset), moe, moe_impl, want_stats,
         )
-        return y, (nc["c_kv"], nc["k_rope"])
+        return y, ((nc["c_kv"], nc["k_rope"], d) if want_stats
+                   else (nc["c_kv"], nc["k_rope"]))
 
-    x, (nk, nr) = scan_layers(cfg, body, x, (layers, cache["c_kv"], cache["k_rope"]))
-    return x, dict(c_kv=nk, k_rope=nr, offset=offset + positions.shape[-1])
+    ys = scan_layers(cfg, body, x, (layers, cache["c_kv"], cache["k_rope"]))
+    if want_stats:
+        x, (nk, nr, drops) = ys
+        total = drops.sum()
+    else:
+        x, (nk, nr) = ys
+        total = None
+    return (x, dict(c_kv=nk, k_rope=nr, offset=offset + positions.shape[-1]),
+            total)
 
 
-def _backbone(cfg, params, x, positions, mask, caches, moe_impl):
+def _backbone(cfg, params, x, positions, mask, caches, moe_impl,
+              want_stats: bool = False):
     dense_cache = None if caches is None else caches.get("dense")
     moe_cache = None if caches is None else caches["moe"]
     new_caches = {}
+    total = jnp.zeros((), jnp.int32) if want_stats else None
     if "dense_layers" in params:
-        x, nc = _run_stack(cfg, params["dense_layers"], x, positions, mask, dense_cache, False, moe_impl)
+        x, nc, _ = _run_stack(cfg, params["dense_layers"], x, positions, mask,
+                              dense_cache, False, moe_impl)
         new_caches["dense"] = nc
-    x, nc = _run_stack(cfg, params["moe_layers"], x, positions, mask, moe_cache, True, moe_impl)
+    x, nc, drops = _run_stack(cfg, params["moe_layers"], x, positions, mask,
+                              moe_cache, True, moe_impl, want_stats)
     new_caches["moe"] = nc
-    return x, (new_caches if caches is not None else None)
+    if want_stats:
+        total = total + drops
+    return x, (new_caches if caches is not None else None), total
 
 
 def forward(cfg, params, tokens, moe_impl: str = None, return_hidden: bool = False):
@@ -122,7 +145,7 @@ def forward(cfg, params, tokens, moe_impl: str = None, return_hidden: bool = Fal
     b, s, _ = x.shape
     positions = jnp.broadcast_to(jnp.arange(s), (b, s))
     mask = causal_mask(s, s, 0)
-    x, _ = _backbone(cfg, params, x, positions, mask, None, moe_impl)
+    x, _, _ = _backbone(cfg, params, x, positions, mask, None, moe_impl)
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     logits = unembed(cfg, params, x)
     if return_hidden:
@@ -142,7 +165,7 @@ def mtp_logits(cfg, params, tokens, hidden):
     b, s, _ = z.shape
     positions = jnp.broadcast_to(jnp.arange(s), (b, s))
     mask = causal_mask(s, s, 0)
-    z, _ = _block_forward(cfg, params["mtp"]["block"], z, positions, mask, None, False, "dense")
+    z, _, _ = _block_forward(cfg, params["mtp"]["block"], z, positions, mask, None, False, "dense")
     return unembed(cfg, params, z)  # (B, S-1, V) — predicts tokens[:, 2:]
 
 
@@ -173,12 +196,16 @@ def prefill(cfg, params, tokens, caches, moe_impl: str = None):
     kv_len = caches["moe"]["c_kv"].shape[2]
     positions = jnp.broadcast_to(jnp.arange(s), (b, s))
     mask = causal_mask(s, kv_len, 0)
-    x, caches = _backbone(cfg, params, x, positions, mask, caches, moe_impl)
+    x, caches, _ = _backbone(cfg, params, x, positions, mask, caches, moe_impl)
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     return unembed(cfg, params, x[:, -1:]), caches
 
 
-def decode_step(cfg, params, tokens, caches, moe_impl: str = None):
+def decode_step(cfg, params, tokens, caches, moe_impl: str = None,
+                with_stats: bool = False):
+    """``with_stats`` additionally returns ``{"ep_dropped": int32}`` — the
+    total capacity-dropped (token, slot) assignments across every MoE layer
+    of this step (always 0 on the dense dispatch path)."""
     moe_impl = moe_impl or cfg.moe_impl
     x = embed_tokens(cfg, params, tokens)
     b = x.shape[0]
@@ -186,6 +213,10 @@ def decode_step(cfg, params, tokens, caches, moe_impl: str = None):
     positions = jnp.broadcast_to(offset, (b, 1))
     kv_len = caches["moe"]["c_kv"].shape[2]
     mask = (jnp.arange(kv_len) <= offset)[None, :]
-    x, caches = _backbone(cfg, params, x, positions, mask, caches, moe_impl)
+    x, caches, drops = _backbone(cfg, params, x, positions, mask, caches,
+                                 moe_impl, want_stats=with_stats)
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
-    return unembed(cfg, params, x), caches
+    logits = unembed(cfg, params, x)
+    if with_stats:
+        return logits, caches, {"ep_dropped": drops}
+    return logits, caches

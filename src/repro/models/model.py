@@ -237,12 +237,18 @@ def prefill(cfg, params, batch, cache):
     raise ValueError(fam)
 
 
-def decode_step(cfg, params, tokens, cache, moe_impl: str = "dense"):
+def decode_step(cfg, params, tokens, cache, moe_impl: str = "dense",
+                with_stats: bool = False):
+    """``with_stats`` (moe only) appends the EP drop-stats dict to the
+    return — see ``deepseek.decode_step``."""
     fam = cfg.family
+    if with_stats and fam != "moe":
+        raise ValueError(f"with_stats is a moe-family knob, not {fam!r}")
     if fam in ("dense", "vlm"):
         return transformer.decode_step(cfg, params, tokens, cache)
     if fam == "moe":
-        return deepseek.decode_step(cfg, params, tokens, cache, moe_impl=moe_impl)
+        return deepseek.decode_step(cfg, params, tokens, cache,
+                                    moe_impl=moe_impl, with_stats=with_stats)
     if fam == "ssm":
         return _ssm_step(cfg, params, tokens, cache)
     if fam == "hybrid":

@@ -87,20 +87,28 @@ def _experts_dense(cfg, p, x, weights):
     return jnp.einsum("ted,te->td", y, weights.astype(x.dtype))
 
 
-def moe_block(cfg, p, x, impl: str = "dense", ep_axis: str | None = None):
-    """x: (B, S, D) -> (B, S, D)."""
+def moe_block(cfg, p, x, impl: str = "dense", ep_axis: str | None = None,
+              return_stats: bool = False):
+    """x: (B, S, D) -> (B, S, D); with ``return_stats`` also an int32 count
+    of capacity-dropped (token, slot) assignments (0 on the dense path,
+    which has no capacity)."""
     b, s, d = x.shape
     xt = x.reshape(-1, d)
     weights, top_idx = router_weights(cfg, p, xt)
+    dropped = jnp.zeros((), jnp.int32)
     if impl == "dense":
         routed = _experts_dense(cfg, p, xt, weights)
     elif impl == "ep":
         from repro.distributed.ep import experts_ep
 
-        routed = experts_ep(cfg, p, xt, weights, top_idx, axis=ep_axis)
+        routed = experts_ep(cfg, p, xt, weights, top_idx, axis=ep_axis,
+                            with_stats=return_stats)
+        if return_stats:
+            routed, dropped = routed
     else:
         raise ValueError(impl)
     out = routed
     if "shared" in p:
         out = out + mlp_block(p["shared"], xt, cfg.act)
-    return out.reshape(b, s, d)
+    out = out.reshape(b, s, d)
+    return (out, dropped) if return_stats else out

@@ -72,14 +72,20 @@ class QLinear:
     # in ctx.overrides; None disables name-based lookup (shape-based
     # (K, N, R) overrides still apply).
     name: Optional[str] = _static(default=None)
+    # Tensor-parallel placement: "column" (N-sharded W/U, replicated V),
+    # "row" (K-sharded W/V, replicated U, one psum) or None (single-device).
+    # Set by distributed.tp.shard_params; apply dispatches through
+    # tp_qlinear_apply when tagged and a mesh is ambient.
+    parallel: Optional[str] = _static(default=None)
 
     @property
     def d_in(self) -> int:
-        return self.qweight.shape[0] * 2
+        # trailing dims: layer-stacked (scan) leaves carry lead dims
+        return self.qweight.shape[-2] * 2
 
     @property
     def d_out(self) -> int:
-        return self.qweight.shape[1]
+        return self.qweight.shape[-1]
 
     @property
     def act_spec(self) -> QuantSpec:
@@ -186,6 +192,13 @@ def _apply_pallas(q: QLinear, x: jnp.ndarray,
 
 
 def qlinear_apply(q: QLinear, x: jnp.ndarray) -> jnp.ndarray:
+    if q.parallel is not None:
+        # mesh-tagged layer: run the shard_map TP path (falls back to the
+        # plain apply when no mesh is ambient, and strips the tag inside
+        # the shard body, so this cannot recurse)
+        from repro.distributed.tp import tp_qlinear_apply
+
+        return tp_qlinear_apply(q, x)
     if q.impl == "sim":
         return _apply_sim(q, x)
     if q.impl == "int8":

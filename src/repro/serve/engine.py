@@ -118,10 +118,13 @@ class PagesExhausted(RuntimeError):
 
 
 @functools.lru_cache(maxsize=16)
-def _model_fns(cfg, kv_spec: KVSpec = KVSpec()) -> SimpleNamespace:
-    """Per-(config, kv-spec) jitted step functions, shared by every engine
-    instance in the process (cfg and KVSpec are hashable static values) —
-    N engines over the same config stop paying N compilations.
+def _model_fns(cfg, kv_spec: KVSpec = KVSpec(), moe_impl: str = "dense",
+               with_stats: bool = False, mesh=None) -> SimpleNamespace:
+    """Per-(config, kv-spec, moe-impl, mesh) jitted step functions, shared
+    by every engine instance in the process (all key parts are hashable —
+    ``mesh`` participates because shard_map captures the ambient mesh at
+    TRACE time, so two engines over different meshes must not share traces)
+    — N engines over the same key stop paying N compilations.
 
     ``traces`` counts retracings (incremented at trace time, not per call):
     the paged engine compiles exactly two ``paged`` traces per (config,
@@ -134,12 +137,15 @@ def _model_fns(cfg, kv_spec: KVSpec = KVSpec()) -> SimpleNamespace:
     @jax.jit
     def _prefill(params, tokens, cache):
         traces["prefill"] += 1
-        return model_lib.prefill(cfg, params, {"tokens": tokens}, cache)
+        return model_lib.prefill(
+            cfg, params, {"tokens": tokens, "moe_impl": moe_impl}, cache)
 
     @jax.jit
     def _decode(params, tokens, cache):
         traces["decode"] += 1
-        return model_lib.decode_step(cfg, params, tokens, cache)
+        return model_lib.decode_step(cfg, params, tokens, cache,
+                                     moe_impl=moe_impl,
+                                     with_stats=with_stats)
 
     @jax.jit
     def _paged(params, tokens, positions, valid, cache, block_table,
@@ -187,7 +193,8 @@ class ServeEngine:
                  sleep_fn: Callable[[float], None] = time.sleep,
                  journal: Optional[JournalWriter] = None,
                  snapshot_dir: Optional[str] = None,
-                 snapshot_every: int = 0, snapshot_keep: int = 3):
+                 snapshot_every: int = 0, snapshot_keep: int = 3,
+                 mesh=None):
         assert cfg.family in ("dense", "vlm", "ssm", "hybrid", "moe"), cfg.family
         if queue_policy not in ("reject_new", "drop_oldest"):
             raise ValueError(f"unknown queue_policy {queue_policy!r}; "
@@ -220,6 +227,33 @@ class ServeEngine:
             from repro.quant.qlinear import retag_qlinear_impl
 
             params = retag_qlinear_impl(params, kernel_impl, ctx=ctx)
+        # Mesh-sharded serving: tag + place the params (column/row-parallel
+        # QLinears run the shard_map TP forward; everything else stays
+        # replicated for dense families so non-collective math is bitwise
+        # identical to single-device), and pick expert-parallel decode for
+        # MoE configs when the expert count divides the "model" axis.
+        # Ordering matters: retag FIRST (dataclasses.replace keeps array
+        # identity, so placements survive), then shard.
+        self.mesh = mesh
+        self.tp_plan = None
+        self._moe_impl = "dense"
+        self._decode_stats = False
+        self._ep_dropped = 0
+        if mesh is not None:
+            from repro.distributed import tp as tp_lib
+
+            tp = tp_lib._axis_size(mesh, "model")
+            if cfg.family == "moe" and tp > 1:
+                if cfg.n_experts % tp == 0:
+                    self._moe_impl = "ep"
+                    self._decode_stats = True
+                else:
+                    warnings.warn(
+                        f"n_experts={cfg.n_experts} does not divide "
+                        f"model={tp}; MoE dispatch stays dense under the "
+                        "mesh")
+            params, self.tp_plan = tp_lib.shard_params(
+                params, mesh, replicate_dense=(cfg.family != "moe"))
         self.ctx = ctx
         self.cfg = cfg
         self.params = params
@@ -294,6 +328,13 @@ class ServeEngine:
             self.pool = model_lib.init_paged_cache(
                 cfg, num_pages, page_size, dtype=jnp.float32,
                 kv_spec=self.kv_spec)
+            if mesh is not None:
+                # replicated over "model", page axis data-sharded when it
+                # divides — page gathers/scatters are pure data movement,
+                # so placement never perturbs decode numerics
+                from repro.distributed import tp as tp_lib
+
+                self.pool = tp_lib.shard_kv_pool(self.pool, mesh)
             self.block_tables = np.zeros(
                 (batch_slots, self.pages_per_slot), np.int32)
             self.lengths = np.zeros((batch_slots,), np.int32)
@@ -324,10 +365,26 @@ class ServeEngine:
         self._steps_since_progress = 0
         self.stall_report: Optional[dict] = None
 
-        self._fns = _model_fns(cfg, self.kv_spec)
+        self._fns = _model_fns(cfg, self.kv_spec, self._moe_impl,
+                               self._decode_stats, self.mesh)
         self._prefill = self._fns.prefill
         self._decode = self._fns.decode
         self._paged = self._fns.paged
+        if self.mesh is not None:
+            # every jitted call runs (and first traces) under the mesh, so
+            # shard_map picks up the right ambient mesh at trace time
+            from repro.core.jaxcompat import set_mesh
+
+            def _with_mesh(fn, m=self.mesh):
+                @functools.wraps(fn)
+                def call(*args):
+                    with set_mesh(m):
+                        return fn(*args)
+                return call
+
+            self._prefill = _with_mesh(self._prefill)
+            self._decode = _with_mesh(self._decode)
+            self._paged = _with_mesh(self._paged)
         self.decode_plan = self._resolve_decode_plan()
 
         self._journal("open", mode=self.mode, family=cfg.family,
@@ -466,7 +523,44 @@ class ServeEngine:
             "kv_pages": None if self.alloc is None else self.alloc.stats(),
             "traces": dict(self._fns.traces),
             "decode_plan": self.decode_plan,
+            "mesh": self._mesh_health(),
             "journal_seq": None if self.journal is None else self.journal.seq,
+        }
+
+    def _mesh_health(self) -> Optional[dict]:
+        """``health()["mesh"]``: axis sizes, the per-shard decode plan at
+        every distinct LOCAL (K, N, R) a TP-tagged QLinear resolves to
+        (mirroring ``decode_plan`` but at the shard's shapes, where the
+        shape-keyed ctx overrides apply), and the EP capacity-overflow drop
+        counter.  None when the engine is single-device."""
+        if self.mesh is None:
+            return None
+        axes = {str(k): int(v) for k, v in dict(self.mesh.shape).items()}
+        plans: Dict[str, dict] = {}
+        for entry in (self.tp_plan or []):
+            k, n, r = entry["local_knr"]
+            key = f"{entry['parallel'] or 'replicated'}:{k}x{n}r{r}"
+            if key in plans:
+                plans[key]["layers"] += 1
+                continue
+            ctx = entry.get("ctx") or self.ctx
+            if ctx is None:
+                from repro.kernels import ops
+
+                ctx = ops.default_context()
+            plan = ctx.resolve_plan(self.b, k, n, r,
+                                    act_group=entry.get("act_group"))
+            plans[key] = {
+                "parallel": entry["parallel"], "layers": 1,
+                "local": {"m": self.b, "k": k, "n": n, "r": r},
+                "path": plan.path, "bm": plan.bm, "bn": plan.bn,
+                "bk": plan.bk, "br": plan.br, "variant": plan.variant,
+            }
+        return {
+            "axes": axes,
+            "moe_impl": self._moe_impl,
+            "ep_dropped": int(self._ep_dropped),
+            "decode_plans": plans,
         }
 
     def _kv_health(self) -> dict:
@@ -951,7 +1045,12 @@ class ServeEngine:
                             f"injected decode exception for rid {req.rid}")
                     elif fault.kind == "cache_corruption":
                         cache_in = self.injector.corrupt_cache(cache_in)
-                logits, new_cache = self._decode(self.params, last, cache_in)
+                out = self._decode(self.params, last, cache_in)
+                if self._decode_stats:
+                    logits, new_cache, stats = out
+                    self._ep_dropped += int(stats["ep_dropped"])
+                else:
+                    logits, new_cache = out
                 if fault is not None and fault.kind in ("nan_logits", "inf_logits"):
                     logits = self.injector.corrupt_logits(logits, fault.kind)
                 sfault = (self.injector.poll(req.rid, "sampling")
@@ -1258,6 +1357,13 @@ class ServeEngine:
             if eng.mode == "paged":
                 eng.alloc = restored_alloc
                 eng.pool = state["pool"]
+                if eng.mesh is not None:
+                    # snapshot leaves come back host-committed; re-apply the
+                    # replicated-then-data-sharded placement so the restored
+                    # engine decodes under the same shardings it saved with
+                    from repro.distributed import tp as tp_lib
+
+                    eng.pool = tp_lib.shard_kv_pool(eng.pool, eng.mesh)
                 eng.block_tables = np.asarray(state["block_tables"],
                                               np.int32).copy()
                 eng.lengths = np.asarray(state["lengths"], np.int32).copy()

@@ -2,6 +2,8 @@
 terms, sharding rules (incl. the QLinear-suffix regression of §Perf exp-4),
 config registry, and shape applicability."""
 
+import warnings
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -147,13 +149,58 @@ def test_param_rules_match_qlinear_fields():
 
 
 def test_divisibility_fallback():
-    from repro.distributed.sharding import param_pspecs
+    from repro.distributed.sharding import ShardingFallback, param_pspecs
 
     mesh = _mesh22()
     # 3 kv heads * 17 = 51-wide projection: 51 % 2 != 0 -> replicate
     tree = {"layers": {"attn": {"wk": jax.ShapeDtypeStruct((2, 64, 51), jnp.float32)}}}
-    specs = param_pspecs(tree, mesh, False)
+    with pytest.warns(ShardingFallback) as rec:
+        specs = param_pspecs(tree, mesh, False)
     assert specs["layers"]["attn"]["wk"] == jax.sharding.PartitionSpec(None, None, None)
+    # the warning is STRUCTURED: tooling (summarize --sharding) reads fields
+    w = next(m.message for m in rec if isinstance(m.message, ShardingFallback))
+    assert w.path == "layers/attn/wk"
+    assert (w.dim_index, w.dim) == (2, 51)
+    assert (w.axis, w.axis_size) == ("model", 2)
+
+
+def test_describe_sharding_captures_fallbacks():
+    from repro.distributed.sharding import describe_sharding
+
+    mesh = _mesh22()
+    tree = {"layers": {"attn": {"wk": jax.ShapeDtypeStruct((2, 64, 51), jnp.float32),
+                                "wq": jax.ShapeDtypeStruct((2, 64, 64), jnp.float32)}}}
+    # capture, don't warn: describe_sharding returns the plan as data
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        rows = describe_sharding(tree, mesh)
+    by_path = {r["path"]: r for r in rows}
+    assert by_path["layers/attn/wq"]["fallbacks"] == []
+    fb = by_path["layers/attn/wk"]["fallbacks"]
+    assert len(fb) == 1 and fb[0].dim == 51 and fb[0].axis == "model"
+
+
+# ---------------------------------------------------------------------------
+# TP comms-bytes model (the comms_kb_ benchmark columns)
+# ---------------------------------------------------------------------------
+
+
+def test_tp_comms_bytes_model():
+    from repro.launch.roofline import (
+        ep_combine_bytes_per_token,
+        tp_psum_bytes_per_token,
+    )
+
+    # no mesh -> no collective -> zero payload
+    assert tp_psum_bytes_per_token(1024, 1) == 0.0
+    assert ep_combine_bytes_per_token(1024, 1) == 0.0
+    # ring all-reduce: each element crosses the wire 2*(tp-1)/tp times, f32
+    assert tp_psum_bytes_per_token(1024, 8) == 2 * 7 / 8 * 1024 * 4
+    # the EP combine psum has the same shape as a row-parallel psum of d_model
+    assert ep_combine_bytes_per_token(512, 4) == tp_psum_bytes_per_token(512, 4)
+    # payload grows monotonically with tp (asymptote 2*width*bytes)
+    assert (tp_psum_bytes_per_token(256, 2) < tp_psum_bytes_per_token(256, 4)
+            < tp_psum_bytes_per_token(256, 8) < 2 * 256 * 4)
 
 
 @settings(max_examples=20, deadline=None)
